@@ -1,0 +1,70 @@
+"""Shared benchmark harness: timing, CSV output, tuning grids."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Iterable, Sequence
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "experiments", "bench")
+
+
+def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def print_table(title: str, header: Sequence[str], rows: Iterable[Sequence]) -> None:
+    rows = [list(map(_fmt, r)) for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(header)]
+    print(f"\n== {title} ==")
+    print("  ".join(h.ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def tuned_metrics(raw, beta_star, t_grid):
+    """Grid-tune the hard threshold post hoc, per metric.
+
+    The paper tunes constants by grid search and reports the best
+    result per method; HT is O(d) so the tuning is free given the raw
+    (un-thresholded) estimator.  Returns {f1, l2, linf} at the per-
+    metric best t.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import classifier
+    from repro.core.slda import hard_threshold
+
+    best = {"f1": 0.0, "l2": float("inf"), "linf": float("inf")}
+    for t in t_grid:
+        beta = hard_threshold(raw, float(t))
+        err = classifier.estimation_errors(beta, beta_star)
+        best["f1"] = max(best["f1"], float(classifier.f1_score(beta, beta_star)))
+        best["l2"] = min(best["l2"], float(err["l2"]))
+        best["linf"] = min(best["linf"], float(err["linf"]))
+    return best

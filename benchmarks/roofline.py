@@ -1,0 +1,101 @@
+"""Roofline aggregation: read experiments/dryrun/*.json into the table.
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D
+(inference), the useful-flops ratio, and a markdown table for
+EXPERIMENTS.md SSRoofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_table, write_csv
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "dryrun",
+)
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load_results(dryrun_dir: str = DRYRUN_DIR, include_tagged: bool = False):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not include_tagged and r.get("tag"):
+            continue
+        out.append(r)
+    out.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9), r["mesh"]))
+    return out
+
+
+def one_liner(r) -> str:
+    """What would move the dominant term down."""
+    dom = r["dominant"]
+    if dom == "memory_s":
+        if r["shape"] == "train_4k":
+            return "reduce remat recompute / bigger fused blocks (bytes ~ activations)"
+        return "KV-cache layout + quantization; fuse attention reads"
+    if dom == "collective_s":
+        if r.get("collectives", {}).get("bytes", {}).get("all-gather", 0) > 0:
+            return "shard weights stationary; swap all-gather for reduce-scatter overlap"
+        return "overlap all-reduce with backward; hierarchical pod-local reduce"
+    return "MXU-align matmul tiles; raise per-chip batch (compute-bound is the goal)"
+
+
+def build_rows(results):
+    rows = []
+    for r in results:
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            r["compute_s"], r["memory_s"], r["collective_s"],
+            r["dominant"].replace("_s", ""),
+            r["useful_flops_ratio"],
+            r.get("model_flops_global", 0.0),
+        ])
+    return rows
+
+
+def markdown_table(results) -> str:
+    lines = [
+        "| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+        "| dominant | useful | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant'].replace('_s','')} "
+            f"| {r['useful_flops_ratio']:.2f} | {one_liner(r)} |"
+        )
+    return "\n".join(lines)
+
+
+def main(paper: bool = False):
+    results = load_results()
+    if not results:
+        print("[roofline] no dry-run results yet "
+              f"(run python -m repro.launch.dryrun --all); dir={DRYRUN_DIR}")
+        return
+    header = ["arch", "shape", "mesh", "compute_s", "memory_s",
+              "collective_s", "dominant", "useful_ratio", "model_flops"]
+    rows = build_rows(results)
+    print_table(f"Roofline terms from {len(results)} dry-run combos "
+                "(v5e: 197TF bf16, 819GB/s HBM, 50GB/s ICI)", header, rows)
+    write_csv("roofline.csv", header, rows)
+    single = [r for r in results if r["mesh"] == "16x16"]
+    if single:
+        n_dom = {}
+        for r in single:
+            n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+        print(f"\n[roofline] single-pod dominant-term census: {n_dom}")
+
+
+if __name__ == "__main__":
+    main()

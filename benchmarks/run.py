@@ -1,0 +1,61 @@
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure (quick CI-sized grids by default;
+pass --paper for the published experiment sizes) plus the roofline
+aggregation over the dry-run artifacts.  Each module asserts the
+paper's qualitative claims, so a green run IS the reproduction check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    corollary48_threshold,
+    fig1_machines,
+    fig2_fixed_n,
+    roofline,
+    table1_speedup,
+    table2_real,
+)
+
+
+BENCHES = [
+    ("fig1_machines (fixed N, vary m)", fig1_machines.main),
+    ("fig2_fixed_n (fixed n, N = m*n)", fig2_fixed_n.main),
+    ("table1_speedup (wall-clock vs m)", table1_speedup.main),
+    ("table2_real (heart-disease surrogate)", table2_real.main),
+    ("corollary48 (machine-count threshold m*)", corollary48_threshold.main),
+    ("roofline (dry-run aggregation)", roofline.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="published experiment sizes (slow)")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    failures = []
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"\n##### {name}")
+        try:
+            fn(paper=args.paper)
+            print(f"##### {name}: OK ({time.time() - t0:.1f}s)")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"##### {name}: FAILED")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

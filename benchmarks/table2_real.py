@@ -1,0 +1,107 @@
+"""Paper Table 2: misclassification on the Heart-Disease dataset (m=4).
+
+The container is offline, so this benchmark runs on a SURROGATE with
+the published dimensions (920 patients, 22 numeric attributes after
+dummy-coding, 4 hospital sites, mild per-site mean heterogeneity) --
+clearly labeled as such.  The comparison structure is the paper's:
+centralized SLDA vs naive averaged SLDA vs distributed (debiased) SLDA,
+4 "hospitals" = 4 machines, half train / half test, repeated splits.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, write_csv
+from repro.core import classifier
+from repro.core.dantzig import DantzigConfig
+from repro.core.distributed import (
+    simulated_distributed_slda,
+    simulated_naive_averaged_slda,
+)
+from repro.core.slda import centralized_slda, hard_threshold
+from repro.stats import synthetic
+
+
+def _split_by_site(z, labels, sites, m, key):
+    """Per site: random half train / half test; equalized shard sizes."""
+    train_x, train_y, test_z, test_l = [], [], [], []
+    for s in range(m):
+        idx = jnp.nonzero(sites == s, size=sites.shape[0], fill_value=-1)[0]
+        idx = idx[idx >= 0]
+        idx = jax.random.permutation(jax.random.fold_in(key, s), idx)
+        half = idx.shape[0] // 2
+        tr, te = idx[:half], idx[half:]
+        zx = z[tr]
+        lx = labels[tr]
+        train_x.append(zx[lx == 0])
+        train_y.append(zx[lx == 1])
+        test_z.append(z[te])
+        test_l.append(labels[te])
+    # equalize shard sizes (paper assumes equal n_l; trim to min)
+    n1 = min(a.shape[0] for a in train_x)
+    n2 = min(a.shape[0] for a in train_y)
+    xs = jnp.stack([a[:n1] for a in train_x])
+    ys = jnp.stack([a[:n2] for a in train_y])
+    return xs, ys, jnp.concatenate(test_z), jnp.concatenate(test_l)
+
+
+def run(repeats: int = 10, seed: int = 3):
+    m, d = 4, 22
+    cfg = DantzigConfig(max_iters=500)
+    z, labels, sites = synthetic.heart_disease_surrogate(jax.random.PRNGKey(seed))
+    n_train = int(z.shape[0]) // 2
+
+    accs = {"cent": [], "naive": [], "dist": []}
+    for rep in range(repeats):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 100), rep)
+        xs, ys, test_z, test_l = _split_by_site(z, labels, sites, m, key)
+        n = xs.shape[1] + ys.shape[1]
+        b1_proxy = 4.0
+        lam = 0.5 * math.sqrt(math.log(d) / n) * b1_proxy
+        lam_c = 0.5 * math.sqrt(math.log(d) / (m * n)) * b1_proxy
+        t = 0.4 * math.sqrt(math.log(d) / (m * n)) * b1_proxy
+
+        mu1 = jnp.mean(xs.reshape(-1, d), axis=0)
+        mu2 = jnp.mean(ys.reshape(-1, d), axis=0)
+
+        cent = centralized_slda(xs.reshape(-1, d), ys.reshape(-1, d), lam_c, cfg)
+        cent = hard_threshold(cent, 0.25 * t)
+        naive = simulated_naive_averaged_slda(xs, ys, lam, cfg)
+        dist = simulated_distributed_slda(xs, ys, lam, lam, t, cfg)
+        for tag, beta in (("cent", cent), ("naive", naive), ("dist", dist)):
+            rate = float(classifier.misclassification_rate(test_z, test_l, beta, mu1, mu2))
+            accs[tag].append(rate)
+
+    def stats(v):
+        mean = sum(v) / len(v)
+        var = sum((x - mean) ** 2 for x in v) / max(len(v) - 1, 1)
+        return mean, var ** 0.5
+
+    rows = []
+    for tag, label in (("cent", "Centralized SLDA"),
+                       ("naive", "Naive Averaged SLDA"),
+                       ("dist", "Distributed SLDA")):
+        mean, std = stats(accs[tag])
+        rows.append([m, label, mean, std])
+    header = ["m", "method", "misclass_rate", "std"]
+    print_table("Table 2: Heart-Disease SURROGATE (offline container; "
+                "matched dims 920x22, 4 sites)", header, rows)
+    write_csv("table2_real_surrogate.csv", header, rows)
+    return {tag: stats(v) for tag, v in accs.items()}
+
+
+def main(paper: bool = False):
+    res = run(repeats=10 if paper else 5)
+    # the paper's ordering: distributed ~ centralized << naive
+    assert res["dist"][0] <= res["naive"][0] + 0.02, res
+    assert res["dist"][0] <= res["cent"][0] + 0.08, res
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(paper="--paper" in sys.argv)

@@ -1,0 +1,83 @@
+"""Paper-scale end-to-end pipeline (the paper's kind of 'driver').
+
+Runs the published synthetic design at full size -- d=200, AR(0.8),
+N=10^6 samples split over m machines -- end to end: sharded data
+generation, per-machine estimation, one-round aggregation, evaluation,
+and a tuning sweep over the hard threshold.  On the production mesh the
+machines are data slices; here they stream through one host in chunks
+(the math is identical; see examples/mesh_distributed_lda.py for the
+mesh execution path).
+
+    PYTHONPATH=src python examples/paper_scale_pipeline.py [--n-total 1000000]
+"""
+
+import argparse
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import classifier, slda
+from repro.core.dantzig import DantzigConfig
+from repro.stats import synthetic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-total", type=int, default=1_000_000)
+    ap.add_argument("--machines", type=int, default=40)
+    ap.add_argument("--d", type=int, default=200)
+    args = ap.parse_args()
+
+    d, m = args.d, args.machines
+    n = args.n_total // m
+    problem = synthetic.make_problem(d=d, n_signal=10, rho=0.8)
+    b1 = float(jnp.sum(jnp.abs(problem.beta_star)))
+    lam = 0.3 * math.sqrt(math.log(d) / n) * b1
+    cfg = DantzigConfig(max_iters=400)
+
+    print(f"d={d}  m={m}  n={n}/machine  N={m * n}")
+
+    # worker pass: stream machines one at a time (memory-bounded), keep
+    # only the debiased d-vector from each -- the paper's O(d) uplink.
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    debiased = []
+    worker = jax.jit(
+        lambda x, y: slda.debiased_local_estimator(x, y, lam, None, cfg)[0]
+    )
+    for l in range(m):
+        x, y = synthetic.sample_two_class(
+            jax.random.fold_in(key, l), problem, n // 2, n // 2
+        )
+        debiased.append(worker(x, y))
+        if l in (0, m // 2, m - 1):
+            print(f"  machine {l:3d} done ({time.time() - t0:.1f}s elapsed)")
+    beta_tildes = jnp.stack(debiased)
+
+    # master: mean + threshold sweep (the paper grid-tunes t)
+    mean = jnp.mean(beta_tildes, axis=0)
+    best = None
+    for t in jnp.geomspace(0.002, 1.0, 20):
+        beta = slda.hard_threshold(mean, float(t))
+        f1 = float(classifier.f1_score(beta, problem.beta_star))
+        if best is None or f1 > best[1]:
+            best = (float(t), f1, beta)
+    t_star, f1_star, beta_bar = best
+    err = classifier.estimation_errors(beta_bar, problem.beta_star)
+    print(f"aggregated in one round: t*={t_star:.4f}  F1={f1_star:.3f}  "
+          f"l2={float(err['l2']):.4f}  linf={float(err['linf']):.4f}")
+
+    z, labels = synthetic.sample_labeled(jax.random.fold_in(key, 9999), problem, 20_000)
+    rate = float(classifier.misclassification_rate(
+        z, labels, beta_bar, problem.mu1, problem.mu2))
+    bayes = 0.5 * (1 - jax.scipy.special.erf(
+        0.5 * jnp.sqrt(problem.beta_star @ problem.sigma @ problem.beta_star) / jnp.sqrt(2)))
+    print(f"misclassification {rate:.4f}  (Bayes optimal ~{float(bayes):.4f})")
+    print(f"total wall-clock {time.time() - t0:.1f}s; "
+          f"bytes communicated per machine: {4 * d}")
+
+
+if __name__ == "__main__":
+    main()

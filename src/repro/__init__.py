@@ -1,0 +1,9 @@
+"""repro: communication-efficient distributed sparse LDA on JAX.
+
+A multi-pod training/serving framework reproducing Tian & Gu (2016),
+with a transformer model zoo substrate, Pallas TPU kernels for the
+covariance hot path, and a one-shot debiased-averaging estimation
+schedule mapped onto mesh collectives.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Checkpoint substrate."""
+
+from repro.checkpoint.io import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401

@@ -1,0 +1,84 @@
+"""Pytree <-> disk checkpointing (npz, atomic rename, step-indexed).
+
+Flat key convention: '/'-joined pytree path.  Restore rebuilds into the
+caller-provided target structure (shapes validated), so it is safe
+against refactors that only reorder dict keys.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# npz cannot represent bfloat16; such leaves are stored as uint16 bit
+# views under a marker prefix and re-viewed on restore.
+_BF16_PREFIX = "__bf16__/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat[_BF16_PREFIX + key] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:09d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(ckpt_dir)
+        if (m := re.match(r"step_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target):
+    path = os.path.join(ckpt_dir, f"step_{step:09d}.npz")
+    with np.load(path) as data:
+        flat = dict(data)
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out = []
+    for path_t, leaf in leaves_with_path:
+        key = "/".join(_path_str(p) for p in path_t)
+        if _BF16_PREFIX + key in flat:
+            arr = flat[_BF16_PREFIX + key].view(jnp.bfloat16)
+        elif key in flat:
+            arr = flat[key]
+        else:
+            raise KeyError(f"checkpoint missing {key}")
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != target {leaf.shape}")
+        out.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,19 @@
+"""granite-8b [arXiv:2405.04324] -- llama-architecture code model.
+
+36L, d_model 4096, 32 heads (GQA kv=8), d_ff 14336, vocab 49152.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=49152,
+    pattern=("attn",),
+    citation="arXiv:2405.04324",
+)

@@ -1,0 +1,34 @@
+"""jamba-v0.1-52b [arXiv:2403.19887].
+
+32L hybrid: attention:mamba = 1:7 interleave, MoE (16 experts, top-2)
+on every other layer.  Period-8 pattern with 1 attention layer and 4
+MoE FFNs, matching the published ratio.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    pattern=(
+        "mamba_mlp",
+        "mamba_moe",
+        "mamba_mlp",
+        "mamba_moe",
+        "attn_moe",
+        "mamba_mlp",
+        "mamba_moe",
+        "mamba_mlp",
+    ),
+    num_experts=16,
+    experts_per_token=2,
+    ssm_expand=2,
+    ssm_state=16,
+    citation="arXiv:2403.19887",
+)

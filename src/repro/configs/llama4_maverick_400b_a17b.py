@@ -1,0 +1,28 @@
+"""llama4-maverick-400b-a17b [hf:meta-llama/Llama-4-Scout-17B-16E family].
+
+48L, d_model 5120, 40 heads (GQA kv=8), expert d_ff 8192, vocab 202048.
+MoE 128 experts top-1 with a shared expert on alternating layers
+(interleaved dense/MoE).  Early-fusion multimodality is supported via
+the extra_embeds path; assigned input shapes are text-token streams.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    # 40 q-heads are not divisible by the 16-wide model axis; pad to 48
+    # with zero-initialized pad heads (see ArchConfig.pad_heads_to).
+    pad_heads_to=48,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    pattern=("attn", "attn_moe"),
+    num_experts=128,
+    experts_per_token=1,
+    shared_expert=True,
+    citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

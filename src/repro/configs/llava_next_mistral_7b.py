@@ -1,0 +1,24 @@
+"""llava-next-mistral-7b [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+Mistral-7B language backbone consuming anyres-tiled patch embeddings.
+Vision tower + projector are a stub per the assignment carve-out:
+input_specs supplies (b, 2880, d_model) precomputed patch embeddings
+(5 tiles x 576 patches).
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    pattern=("attn",),
+    modality="vision",
+    num_patches=2880,
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,19 @@
+"""mistral-large-123b [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L, d_model 12288, 96 heads (GQA kv=8), d_ff 28672, vocab 32768.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    family="dense",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32768,
+    pattern=("attn",),
+    citation="hf:mistralai/Mistral-Large-Instruct-2407",
+)

@@ -1,0 +1,22 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L, d_model 4096, 32 heads (GQA kv=8), d_ff 6400, vocab 32064,
+MoE 16 experts top-2 on every layer.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    pattern=("attn_moe",),
+    num_experts=16,
+    experts_per_token=2,
+    citation="hf:microsoft/Phi-3.5-MoE-instruct",
+)

@@ -1,0 +1,23 @@
+"""qwen2.5-3b [hf:Qwen/Qwen2.5-0.5B family].
+
+36L, d_model 2048, 16 heads (GQA kv=2), d_ff 11008, vocab 151936,
+QKV bias, tied embeddings.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    pattern=("attn",),
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    citation="hf:Qwen/Qwen2.5-0.5B",
+)

@@ -1,0 +1,25 @@
+"""seamless-m4t-large-v2 [arXiv:2308.11596].
+
+Encoder-decoder (24 encoder + 24 decoder layers), d_model 1024, 16 MHA
+heads (kv=16), d_ff 8192, vocab 256206 (padded to 256256 for the
+16-wide model axis).  The speech frontend (mel + conformer conv) is a
+stub per the carve-out: input_specs supplies (b, frames, d_model)
+precomputed frame embeddings.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    pattern=("attn",),
+    modality="audio",
+    citation="arXiv:2308.11596",
+)

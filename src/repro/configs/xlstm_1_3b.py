@@ -1,0 +1,22 @@
+"""xlstm-1.3b [arXiv:2405.04517].
+
+48 blocks, d_model 2048, 4 heads, no separate FFN (d_ff = 0; the
+mLSTM/sLSTM blocks contain their own projections).  7:1
+mLSTM:sLSTM interleave.
+"""
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=("mlstm",) * 7 + ("slstm",),
+    xlstm_proj_factor=2.0,
+    citation="arXiv:2405.04517",
+)

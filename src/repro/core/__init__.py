@@ -1,0 +1,11 @@
+"""The paper's contribution: one-shot distributed sparse LDA.
+
+Modules
+-------
+dantzig      linearized-ADMM Dantzig-type l1 solver (the numerical engine)
+clime        CLIME precision-matrix estimation (column-parallel Dantzig)
+slda         local sparse-LDA estimator, debiasing, hard threshold
+distributed  Algorithm 1 over a jax mesh (shard_map + one psum)
+classifier   Fisher discriminant rule, evaluation metrics
+lda_head     distributed LDA readout over transformer hidden states
+"""

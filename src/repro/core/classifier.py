@@ -1,0 +1,53 @@
+"""Fisher discriminant rule and evaluation metrics (paper eq. 1.1, §5)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fisher_rule(z: jnp.ndarray, beta: jnp.ndarray, mu1: jnp.ndarray, mu2: jnp.ndarray) -> jnp.ndarray:
+    """psi(Z) = 1((Z - (mu1+mu2)/2)^T beta > 0); returns class index {0, 1}.
+
+    Class 0 = N(mu1, Sigma), class 1 = N(mu2, Sigma).
+    """
+    mu = 0.5 * (mu1 + mu2)
+    score = (z - mu) @ beta
+    return jnp.where(score > 0, 0, 1)
+
+
+@jax.jit
+def misclassification_rate(
+    z: jnp.ndarray, labels: jnp.ndarray, beta: jnp.ndarray, mu1: jnp.ndarray, mu2: jnp.ndarray
+) -> jnp.ndarray:
+    pred = fisher_rule(z, beta, mu1, mu2)
+    return jnp.mean((pred != labels).astype(jnp.float32))
+
+
+def support(beta: jnp.ndarray, tol: float = 0.0) -> jnp.ndarray:
+    return jnp.abs(beta) > tol
+
+
+@jax.jit
+def f1_score(beta_hat: jnp.ndarray, beta_star: jnp.ndarray) -> jnp.ndarray:
+    """Support-recovery F1 between an estimate and the truth (paper §5.1)."""
+    s_hat = support(beta_hat)
+    s_star = support(beta_star)
+    inter = jnp.sum(s_hat & s_star).astype(jnp.float32)
+    precision = inter / jnp.maximum(jnp.sum(s_hat), 1)
+    recall = inter / jnp.maximum(jnp.sum(s_star), 1)
+    return jnp.where(
+        precision + recall > 0, 2 * precision * recall / (precision + recall), 0.0
+    )
+
+
+@jax.jit
+def estimation_errors(beta_hat: jnp.ndarray, beta_star: jnp.ndarray) -> dict:
+    diff = beta_hat - beta_star
+    return {
+        "l1": jnp.sum(jnp.abs(diff)),
+        "l2": jnp.sqrt(jnp.sum(diff * diff)),
+        "linf": jnp.max(jnp.abs(diff)),
+        "rel_l2": jnp.sqrt(jnp.sum(diff * diff))
+        / jnp.maximum(jnp.sqrt(jnp.sum(beta_star * beta_star)), 1e-30),
+    }

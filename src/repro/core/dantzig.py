@@ -1,0 +1,180 @@
+"""Dantzig-type l1 solver via two-block ADMM with a cached spectral factor.
+
+Solves   min ||beta||_1   s.t.  ||A beta - b||_inf <= lam
+for PSD ``A`` (a sample covariance).  This is the primitive behind both
+the sparse-LDA estimator (eq. 3.1, ``b = mu_d``) and every CLIME column
+(eq. 3.3, ``b = e_j``).
+
+The paper's reference solvers (parametric simplex / FastCLIME) are
+branchy, pivot-based LP codes -- a poor fit for XLA/TPU.  We adapt the
+algorithm to the hardware.  A first attempt (linearized ADMM) needs a
+step size ~ 1/sigma_max(A)^2 and crawls on ill-conditioned covariances
+(AR(0.8) at d=40 has cond ~ 81; KKT violation 0.18 after 1.5k iters).
+Instead we use *exact* two-block ADMM on the splitting
+
+    min ||w||_1 + I_{B_inf(lam)}(z)
+    s.t.  A beta - z = b,     beta - w = 0
+
+whose beta-subproblem is the linear solve (A^2 + I) beta = A(z+b-u1) +
+(w-u2).  ``A`` is symmetric, so with one eigendecomposition A = Q L Q^T
+(cached; O(d^3) once) the solve is Q diag(1/(L^2+1)) Q^T v -- two
+matmuls.  Every iteration is therefore a handful of (d,d)x(d,k)
+matmuls + clip + shrink: fixed shapes, MXU-shaped, batchable over many
+right-hand sides (CLIME batches the model-axis shard of columns).
+Empirically this reaches KKT 1e-3 where the linearized variant sat at
+0.18 (same iteration count).
+
+Extras, all fixed-shape and `lax.scan`-able:
+  * over-relaxation (alpha ~ 1.7),
+  * residual-balancing adaptive rho -- free here because the cached
+    factor (A^2+I) does not depend on rho; only the scaled duals and
+    the shrink threshold rescale.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class DantzigConfig(NamedTuple):
+    """Solver knobs (static under jit)."""
+
+    max_iters: int = 600
+    rho: float = 1.0
+    # over-relaxation coefficient (1.0 disables; 1.5-1.8 typical)
+    alpha: float = 1.7
+    # residual-balancing: rho *= / /= rho_tau when residuals differ by
+    # more than rho_mu x; adapt every `adapt_every` iterations.
+    adapt_rho: bool = True
+    rho_mu: float = 10.0
+    rho_tau: float = 2.0
+    adapt_every: int = 10
+    # use the Pallas soft-threshold kernel for the shrink step
+    use_kernel: bool = False
+    # run the WHOLE solve in the fused VMEM-resident Pallas kernel
+    # (kernels/dantzig_fused.py; fixed rho, no adaptation)
+    fused: bool = False
+
+
+def estimate_sigma_max(a: jnp.ndarray, iters: int, key=None) -> jnp.ndarray:
+    """Largest singular value of symmetric ``a`` by power iteration."""
+    d = a.shape[0]
+    v0 = jnp.full((d,), 1.0 / jnp.sqrt(d), dtype=a.dtype)
+
+    def body(_, v):
+        w = a @ v
+        return w / (jnp.linalg.norm(w) + 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return jnp.linalg.norm(a @ v)
+
+
+def soft_threshold(x: jnp.ndarray, t: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    """Elementwise shrink.  Kernel path used on 2D batched CLIME updates."""
+    if use_kernel:
+        return kops.soft_threshold(x, t)
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+class DantzigState(NamedTuple):
+    z: jnp.ndarray  # (d, k) box-constrained copy of A beta - b
+    w: jnp.ndarray  # (d, k) sparse copy of beta
+    u1: jnp.ndarray  # scaled dual for A beta - z = b
+    u2: jnp.ndarray  # scaled dual for beta - w = 0
+    rho: jnp.ndarray  # (k,) per-problem penalty
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve_dantzig(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    lam: jnp.ndarray | float,
+    cfg: DantzigConfig = DantzigConfig(),
+) -> jnp.ndarray:
+    """Solve a (batch of) Dantzig problems sharing the same matrix ``a``.
+
+    Args:
+      a:   (d, d) PSD matrix.
+      b:   (d,) or (d, k) right-hand side(s).
+      lam: scalar or (k,) per-problem box radius.
+    Returns:
+      beta with the same trailing shape as ``b`` (the sparse ADMM copy,
+      exactly sparse thanks to the shrink step).
+    """
+    if cfg.fused:
+        from repro.kernels import ops as kops2
+
+        return kops2.dantzig_fused(
+            a, b, lam, iters=cfg.max_iters, rho=cfg.rho, alpha=cfg.alpha
+        )
+
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    d, k = b.shape
+    lam = jnp.broadcast_to(jnp.asarray(lam, a.dtype), (k,))[None, :]
+
+    # cached spectral factor of (A^2 + I); rho-independent.
+    evals, q = jnp.linalg.eigh(a)
+    inv_eig = (1.0 / (evals * evals + 1.0))[:, None]
+
+    def solve_m(v):  # (A^2 + I)^{-1} v
+        return q @ (inv_eig * (q.T @ v))
+
+    zeros = jnp.zeros((d, k), a.dtype)
+    init = DantzigState(
+        z=zeros, w=zeros, u1=zeros, u2=zeros,
+        rho=jnp.full((k,), cfg.rho, a.dtype),
+    )
+
+    alpha = cfg.alpha
+
+    def body(state: DantzigState, i):
+        z0, w0 = state.z, state.w
+        rho = state.rho[None, :]
+        beta = solve_m(a @ (z0 + b - state.u1) + (w0 - state.u2))
+        ab = a @ beta
+        # over-relaxation mixes in the previous constraint copies
+        ab_r = alpha * ab + (1.0 - alpha) * (z0 + b)
+        beta_r = alpha * beta + (1.0 - alpha) * w0
+        z = jnp.clip(ab_r - b + state.u1, -lam, lam)
+        w = soft_threshold(beta_r + state.u2, 1.0 / rho, cfg.use_kernel)
+        u1 = state.u1 + ab_r - z - b
+        u2 = state.u2 + beta_r - w
+        if not cfg.adapt_rho:
+            return DantzigState(z, w, u1, u2, state.rho), None
+        # residual balancing (per problem in the batch)
+        r_pri = jnp.sqrt(jnp.sum((ab - z - b) ** 2 + (beta - w) ** 2, axis=0))
+        s_dual = state.rho * jnp.sqrt(
+            jnp.sum((a @ (z - z0)) ** 2 + (w - w0) ** 2, axis=0)
+        )
+        up = r_pri > cfg.rho_mu * s_dual
+        down = s_dual > cfg.rho_mu * r_pri
+        do_adapt = (i % cfg.adapt_every) == 0
+        scale = jnp.where(
+            do_adapt & up, cfg.rho_tau, jnp.where(do_adapt & down, 1.0 / cfg.rho_tau, 1.0)
+        )
+        new_rho = state.rho * scale
+        # scaled duals u = y/rho must rescale with rho
+        u1 = u1 / scale[None, :]
+        u2 = u2 / scale[None, :]
+        return DantzigState(z, w, u1, u2, new_rho), None
+
+    state, _ = jax.lax.scan(body, init, jnp.arange(cfg.max_iters))
+    beta = state.w
+    return beta[:, 0] if squeeze else beta
+
+
+def kkt_violation(a: jnp.ndarray, b: jnp.ndarray, beta: jnp.ndarray, lam) -> jnp.ndarray:
+    """Max constraint violation ``max(||A beta - b||_inf - lam, 0)``."""
+    if beta.ndim == 1:
+        resid = a @ beta - b
+        return jnp.maximum(jnp.max(jnp.abs(resid)) - lam, 0.0)
+    resid = a @ beta - b
+    return jnp.maximum(jnp.max(jnp.abs(resid), axis=0) - lam, 0.0)

@@ -1,0 +1,1 @@
+"""Data pipeline substrate: synthetic token streams and Gaussian feeds."""

@@ -1,0 +1,29 @@
+"""Sharded two-class Gaussian feed for the distributed LDA estimator.
+
+Each "machine" (mesh data-slice) draws its own i.i.d. shard from the
+same population -- matching the paper's data model, where the N samples
+are split uniformly at random across m machines.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.stats.synthetic import LDAProblem, sample_machines
+
+
+def machine_shards(
+    seed: int, problem: LDAProblem, m: int, n1: int, n2: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stacked shards xs: (m, n1, d), ys: (m, n2, d)."""
+    return sample_machines(jax.random.PRNGKey(seed), problem, m, n1, n2)
+
+
+def flat_shards(
+    seed: int, problem: LDAProblem, m: int, n1: int, n2: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Same draw flattened to (m*n1, d) for mesh sharding over machines."""
+    xs, ys = machine_shards(seed, problem, m, n1, n2)
+    d = xs.shape[-1]
+    return xs.reshape(-1, d), ys.reshape(-1, d)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- ``gram``: mean-centered Gram/covariance accumulation (O(N d^2 / m)).
+- ``soft_threshold``: fused ADMM shrink step.
+
+Each kernel ships with a pure-jnp oracle in :mod:`repro.kernels.ref`.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

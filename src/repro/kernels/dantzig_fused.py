@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fully fused Dantzig/CLIME ADMM solve (SSPerf-A2).
+
+The per-machine hot loop of the paper is the batched two-block ADMM in
+repro.core.dantzig.  Lowered through XLA it re-reads the (d, d) matrix
+A, the spectral factor Q and the diagonal (L^2+1)^-1 from HBM on every
+one of ~500 iterations -- the dry-run shows the estimator is
+memory-bound 107:1 (compute 1.4e-5 s vs memory 1.5e-3 s per solve at
+d=256).
+
+TPU adaptation: at CLIME scale (d <= ~1024) ALL loop-invariant operands
+fit in VMEM (d=256: A + Q + diag + 4 state blocks ~ 0.8 MB of the
+16 MB VMEM).  This kernel runs the entire solve in ONE pallas_call --
+a lax.fori_loop whose body is five (d,d)x(d,k) MXU matmuls plus
+clip/shrink on the VPU -- so HBM traffic collapses to one read of
+(A, Q, b) and one write of the solution: ~iters x fewer HBM bytes.
+
+Grid: single step; every BlockSpec is the whole (VMEM-resident) array.
+The batch dim k is the device's CLIME column shard (d / |model| axis).
+No adaptive rho inside the kernel (it is a per-column scalar control
+flow); callers pick rho once -- the exact-ADMM iteration is robust to
+it (see EXPERIMENTS.md SSPerf-A1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, out_ref,
+                       *, iters: int, rho: float, alpha: float):
+    a = a_ref[...]  # (d, d) VMEM-resident across all iterations
+    q = q_ref[...]  # (d, d) eigenvectors of A
+    inv = inv_ref[...]  # (d, 1) 1/(eig^2 + 1)
+    b = b_ref[...]  # (d, k)
+    lam = lam_ref[...]  # (1, k)
+
+    def matmul(m, x):
+        return jax.lax.dot_general(
+            m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    def solve_m(v):  # (A^2 + I)^{-1} v  via the cached spectral factor
+        return matmul(q, inv * matmul(q.T, v))
+
+    def shrink(x, t):
+        return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+    zeros = jnp.zeros_like(b)
+
+    def body(_, carry):
+        z, w, u1, u2 = carry
+        beta = solve_m(matmul(a, z + b - u1) + (w - u2))
+        ab = matmul(a, beta)
+        ab_r = alpha * ab + (1.0 - alpha) * (z + b)
+        beta_r = alpha * beta + (1.0 - alpha) * w
+        z = jnp.clip(ab_r - b + u1, -lam, lam)
+        w = shrink(beta_r + u2, 1.0 / rho)
+        u1 = u1 + ab_r - z - b
+        u2 = u2 + beta_r - w
+        return z, w, u1, u2
+
+    z, w, u1, u2 = jax.lax.fori_loop(0, iters, body, (zeros, zeros, zeros, zeros))
+    out_ref[...] = w
+
+
+@functools.partial(
+    jax.jit, static_argnames=("iters", "rho", "alpha", "interpret")
+)
+def dantzig_fused_pallas(
+    a: jnp.ndarray,
+    q: jnp.ndarray,
+    inv_eig: jnp.ndarray,
+    b: jnp.ndarray,
+    lam: jnp.ndarray,
+    *,
+    iters: int = 500,
+    rho: float = 1.0,
+    alpha: float = 1.7,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused ADMM solve.  a,q: (d,d) f32; inv_eig: (d,); b: (d,k); lam: (k,).
+
+    Returns the sparse ADMM copy w: (d, k).
+    """
+    d, k = b.shape
+    inv2 = inv_eig.reshape(d, 1).astype(jnp.float32)
+    lam2 = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (k,)).reshape(1, k)
+    kernel = functools.partial(
+        _fused_admm_kernel, iters=iters, rho=rho, alpha=alpha
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, k), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), q.astype(jnp.float32), inv2,
+      b.astype(jnp.float32), lam2)

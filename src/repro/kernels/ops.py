@@ -1,0 +1,48 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On the CPU container the kernels execute under ``interpret=True``
+(Pallas interpreter runs the kernel body on the host); on a real TPU
+the same call sites compile to Mosaic.  Callers never pass
+``interpret`` -- it is derived from the backend once at import time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import gram_pallas
+from repro.kernels.soft_threshold import soft_threshold_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def gram(x: jnp.ndarray, mu: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Mean-centered Gram matrix (X - mu)^T(X - mu), float32 accumulate."""
+    kw.setdefault("interpret", _INTERPRET)
+    return gram_pallas(x, mu, **kw)
+
+
+def soft_threshold(x: jnp.ndarray, t, **kw) -> jnp.ndarray:
+    """Fused shrink: sign(x) * max(|x| - t, 0)."""
+    kw.setdefault("interpret", _INTERPRET)
+    return soft_threshold_pallas(x, t, **kw)
+
+
+def dantzig_fused(a, b, lam, *, iters=500, rho=1.0, alpha=1.7, **kw):
+    """Whole Dantzig/CLIME ADMM solve in one VMEM-resident kernel.
+
+    Computes the spectral factor outside the kernel (O(d^3) once), then
+    runs all iterations on-chip.  Returns (d, k) sparse solution.
+    """
+    from repro.kernels.dantzig_fused import dantzig_fused_pallas
+
+    kw.setdefault("interpret", _INTERPRET)
+    evals, q = jnp.linalg.eigh(a.astype(jnp.float32))
+    inv_eig = 1.0 / (evals * evals + 1.0)
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    out = dantzig_fused_pallas(a, q, inv_eig, b, lam,
+                               iters=iters, rho=rho, alpha=alpha, **kw)
+    return out[:, 0] if squeeze else out

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(x: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """(X - mu)^T (X - mu) in float32."""
+    xc = (x - mu[None, :]).astype(jnp.float32)
+    return xc.T @ xc
+
+
+def soft_threshold_ref(x: jnp.ndarray, t) -> jnp.ndarray:
+    t = jnp.asarray(t, x.dtype)
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def hard_threshold_ref(x: jnp.ndarray, t) -> jnp.ndarray:
+    t = jnp.asarray(t, x.dtype)
+    return jnp.where(jnp.abs(x) > t, x, jnp.zeros_like(x))
+
+
+def dantzig_fused_ref(a, q, inv_eig, b, lam, *, iters=500, rho=1.0, alpha=1.7):
+    """Oracle for the fused ADMM kernel: identical math in plain jnp."""
+    a = a.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    d, k = b.shape
+    inv = inv_eig.reshape(d, 1).astype(jnp.float32)
+    lam = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (k,)).reshape(1, k)
+
+    def solve_m(v):
+        return q @ (inv * (q.T @ v))
+
+    def shrink(x, t):
+        return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+    z = w = u1 = u2 = jnp.zeros_like(b)
+    for _ in range(iters):
+        beta = solve_m(a @ (z + b - u1) + (w - u2))
+        ab = a @ beta
+        ab_r = alpha * ab + (1.0 - alpha) * (z + b)
+        beta_r = alpha * beta + (1.0 - alpha) * w
+        z = jnp.clip(ab_r - b + u1, -lam, lam)
+        w = shrink(beta_r + u2, 1.0 / rho)
+        u1 = u1 + ab_r - z - b
+        u2 = u2 + beta_r - w
+    return w

@@ -1,0 +1,345 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) ---------
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import shardings as sh  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.sharding.specs import set_rules  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) with
+ShapeDtypeStruct inputs (zero allocation) and extract the roofline terms.
+
+Proves the distribution config is coherent: sharding mismatches, OOM at
+compile, or unsupported collectives all fail here.
+"""
+
+# TPU v5e constants (target hardware; container runtime is CPU)
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective byte totals from a compiled (post-SPMD) HLO dump.
+
+    Sums the *result* shape bytes of every collective op in the
+    per-device module -- i.e. bytes landing on each chip's ICI.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        op = None
+        rhs_head = rhs.strip()
+        for c in _COLLECTIVES:
+            if rhs_head.startswith(c + "(") or rhs_head.split(" ", 2)[:2][-1:] == [c]:
+                op = c
+                break
+            # result shape precedes op name: "bf16[..] all-gather(...)"
+            m = re.match(r"[\w\[\],{}\s/#*()]*?\b" + re.escape(c) + r"\(", rhs_head)
+            if m:
+                op = c
+                break
+        if op is None:
+            continue
+        # shapes appear on the rhs before the op name
+        head = rhs_head.split(op + "(")[0]
+        nbytes = _shape_bytes(head) or _shape_bytes(lhs)
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def model_flops(cfg, shape: steps.ShapeDef) -> float:
+    """6 N_active D (train) / 2 N_active D (inference), global."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token / row
+
+
+def _batch_pspecs(batch_abs, rules):
+    def spec(path, leaf):
+        name = sh._path_names(path)[-1]
+        if name in ("frames", "extra_embeds"):
+            return rules.spec(("batch", None, None))
+        return rules.spec(("batch", None))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_abs)
+
+
+def build_lowerable(arch_name: str, shape_name: str, mesh, *, expert_sharding=None,
+                    rules_override=None, repeats: int | None = None,
+                    zero1: bool = False, microbatches: int = 1,
+                    cfg_overrides: dict | None = None):
+    """Returns (fn, args_abs, in_shardings, out_shardings, cfg, shape).
+
+    ``repeats`` overrides the depth (used by the scan-cost correction:
+    XLA cost analysis counts a while body once, so we lower 1- and
+    2-repeat variants and extrapolate the per-repeat delta).
+    """
+    shape = steps.INPUT_SHAPES[shape_name]
+    cfg = configs.get_config(arch_name)
+    if expert_sharding:
+        cfg = dataclasses.replace(cfg, expert_sharding=expert_sharding)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cfg = steps.arch_for_shape(cfg, shape)
+    unroll = repeats is not None
+    if unroll:
+        cfg = dataclasses.replace(
+            cfg,
+            num_layers=len(cfg.pattern) * repeats,
+            encoder_layers=repeats if cfg.encoder_layers else 0,
+        )
+    rules = steps.rules_for(cfg, shape, tuple(mesh.axis_names))
+    if rules_override:
+        rules = rules.replace(**rules_override)
+    set_rules(rules)
+
+    params_abs = steps.abstract_params(cfg)
+    named = lambda tree: sh.to_named(mesh, tree)
+    p_spec = sh.params_pspecs(params_abs, rules)
+
+    if shape.kind == "train":
+        opt_abs = steps.abstract_opt_state(params_abs)
+        # optimizer moments mirror the param shardings; step is replicated.
+        # zero1 additionally shards each moment over the data axes
+        # (ZeRO-1 optimizer-state sharding).
+        moment_spec = (sh.zero1_pspecs(mesh, opt_abs.mu, rules) if zero1
+                       else sh.params_pspecs(opt_abs.mu, rules))
+        o_spec = type(opt_abs)(step=P(), mu=moment_spec, nu=moment_spec)
+        batch_abs = steps.batch_specs(cfg, shape, with_labels=True)
+        b_spec = _batch_pspecs(batch_abs, rules)
+        fn = steps.make_train_step(cfg, unroll=unroll, microbatches=microbatches)
+        args = (params_abs, opt_abs, batch_abs)
+        in_sh = (named(p_spec), named(o_spec), named(b_spec))
+        metrics_abs = jax.eval_shape(fn, *args)[2]
+        metrics_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_abs)
+        out_sh = (named(p_spec), named(o_spec), metrics_sh)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        batch_abs = steps.batch_specs(cfg, shape, with_labels=False)
+        b_spec = _batch_pspecs(batch_abs, rules)
+        fn = steps.make_prefill_step(cfg, unroll=unroll)
+        args = (params_abs, batch_abs)
+        in_sh = (named(p_spec), named(b_spec))
+        out_sh = NamedSharding(mesh, rules.spec(("batch", "vocab")))
+        donate = ()
+    else:  # decode
+        state_abs = steps.abstract_decode_state(cfg, shape)
+        s_spec = sh.state_pspecs(state_abs, rules)
+        tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        fn = steps.make_serve_step(cfg, unroll=unroll)
+        args = (params_abs, state_abs, tok_abs)
+        in_sh = (
+            named(p_spec),
+            named(s_spec),
+            NamedSharding(mesh, rules.spec(("batch", None))),
+        )
+        out_sh = (
+            NamedSharding(mesh, rules.spec(("batch",))),
+            NamedSharding(mesh, rules.spec(("batch", None, "vocab"))),
+            named(s_spec),
+        )
+        donate = (1,)
+    return fn, args, in_sh, out_sh, donate, cfg, shape
+
+
+def _compile_costs(arch_name, shape_name, mesh, repeats, **kw):
+    """(flops, bytes, collective_bytes, collectives_detail) for one lower."""
+    fn, args, in_sh, out_sh, donate, cfg, shape = build_lowerable(
+        arch_name, shape_name, mesh, repeats=repeats, **kw
+    )
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    with mesh:
+        compiled = jfn.lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]), coll)
+
+
+def run_one(arch_name: str, shape_name: str, multi_pod: bool, out_dir: str | None,
+            expert_sharding=None, rules_override=None, tag="",
+            scan_correction: bool = True, zero1: bool = False,
+            microbatches: int = 1, cfg_overrides: dict | None = None):
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.reshape(-1))
+    t0 = time.time()
+    kw = dict(expert_sharding=expert_sharding, rules_override=rules_override,
+              zero1=zero1, microbatches=microbatches, cfg_overrides=cfg_overrides)
+    fn, args, in_sh, out_sh, donate, cfg, shape = build_lowerable(
+        arch_name, shape_name, mesh, **kw
+    )
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(mem)  # proves it fits
+    ca = compiled.cost_analysis() or {}
+    print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
+    coll = collective_bytes(compiled.as_text())
+
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    coll_dev = float(coll["total_bytes"])
+    if scan_correction:
+        # XLA cost analysis counts a while (scan) body ONCE; extrapolate
+        # per-repeat costs from 1- and 2-repeat lowers of the same step.
+        f1, b1, c1, _ = _compile_costs(arch_name, shape_name, mesh, 1, **kw)
+        f2, b2, c2, _ = _compile_costs(arch_name, shape_name, mesh, 2, **kw)
+        r = cfg.num_repeats if not cfg.encoder_layers else cfg.num_layers
+        flops_dev = f1 + (r - 1) * (f2 - f1)
+        bytes_dev = b1 + (r - 1) * (b2 - b1)
+        coll_dev = c1 + (r - 1) * (c2 - c1)
+    mf = model_flops(cfg, shape)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": tag,
+        "chips": chips,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": coll,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flops_ratio": (mf / chips) / flops_dev if flops_dev else 0.0,
+        **terms,
+        "dominant": dominant,
+        "memory_analysis": _mem_dict(mem),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = f"{arch_name}_{shape_name}_{result['mesh']}{suffix}.json".replace("/", "-")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    print(
+        f"[dryrun] {arch_name} x {shape_name} x {result['mesh']}{(' ' + tag) if tag else ''}: "
+        f"compute={terms['compute_s']:.3e}s memory={terms['memory_s']:.3e}s "
+        f"collective={terms['collective_s']:.3e}s dominant={dominant} "
+        f"useful={result['useful_flops_ratio']:.2f} "
+        f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+    )
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            try:
+                out[attr] = int(getattr(mem, attr))
+            except Exception:
+                pass
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(steps.INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--expert-sharding", default=None, choices=[None, "tp", "ep"])
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer moments over the data axes (ZeRO-1)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    combos = []
+    archs = configs.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(steps.INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    failures = []
+    for a, s, m in combos:
+        try:
+            run_one(a, s, m, args.out, expert_sharding=args.expert_sharding,
+                    tag=args.tag, zero1=args.zero1)
+        except Exception as e:  # noqa: BLE001
+            failures.append((a, s, m, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"[dryrun] all {len(combos)} combos compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) ---------
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.dantzig import DantzigConfig  # noqa: E402
+from repro.core.distributed import distributed_slda_shardmap  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch.dryrun import (  # noqa: E402
+    HBM_BW, ICI_BW, PEAK_FLOPS, collective_bytes,
+)
+
+"""Dry-run of the PAPER'S OWN technique on the production mesh.
+
+Lowers Algorithm 1 (the one-shot distributed sparse-LDA estimator) via
+shard_map on the 16x16 / 2x16x16 meshes with abstract inputs and
+extracts the same roofline terms as the architecture dry-run.  This is
+the baseline/optimized pair tracked in EXPERIMENTS.md SSPerf-A.
+
+Machines = data slices (16 per pod x pods); CLIME columns sharded over
+the 16-wide model axis.
+"""
+
+
+def _compile_costs(d, n_machines, n1, multi_pod, iters, variant):
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    # "fused" variant: whole ADMM solve inside the VMEM-resident Pallas
+    # kernel (SSPerf-A2); fixed rho, no per-column adaptation.
+    cfg = DantzigConfig(max_iters=iters, fused=(variant == "fused"),
+                        adapt_rho=(variant != "fused"))
+    x_abs = jax.ShapeDtypeStruct((n_machines * n1, d), jnp.float32)
+    y_abs = jax.ShapeDtypeStruct((n_machines * n1, d), jnp.float32)
+    in_sh = NamedSharding(mesh, P(data_axes, None))
+
+    def fn(x, y):
+        return distributed_slda_shardmap(
+            mesh, x, y, 0.05, 0.05, 0.01, cfg, data_axes=data_axes,
+            model_axis="model",
+        )
+
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=(in_sh, in_sh),
+                          out_shardings=NamedSharding(mesh, P())).lower(x_abs, y_abs)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]), coll, compiled)
+
+
+def run_one(d: int, n_per_machine: int, multi_pod: bool, max_iters: int,
+            out_dir: str | None, tag: str = "", variant: str = "baseline"):
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    n_machines = 1
+    for a in data_axes:
+        n_machines *= mesh.shape[a]
+    n1 = n_per_machine // 2
+
+    t0 = time.time()
+    # XLA cost analysis counts the ADMM scan body once; extrapolate the
+    # per-iteration delta from 1- vs 2-iteration lowers.
+    f1, b1, c1, _, _ = _compile_costs(d, n_machines, n1, multi_pod, 1, variant)
+    f2, b2, c2, coll, compiled = _compile_costs(d, n_machines, n1, multi_pod, 2, variant)
+    flops = f1 + (max_iters - 1) * (f2 - f1)
+    nbytes = b1 + (max_iters - 1) * (b2 - b1)
+    cbytes = c1 + (max_iters - 1) * (c2 - c1)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": nbytes / HBM_BW,
+        "collective_s": cbytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    # the paper's communication budget: ONE d-vector per machine
+    paper_bytes = 4 * d
+    result = {
+        "arch": "slda-core",
+        "variant": variant,
+        "d": d,
+        "n_per_machine": n_per_machine,
+        "machines": n_machines,
+        "max_iters": max_iters,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "flops_per_device": flops,
+        "bytes_per_device": nbytes,
+        "collective_bytes_per_device": cbytes,
+        "collectives": coll,
+        "paper_uplink_bytes": paper_bytes,
+        **terms,
+        "dominant": dominant,
+        "compile_s": t_compile,
+    }
+    print(f"[dryrun-slda] d={d} n={n_per_machine} {result['mesh']} {variant}: "
+          f"compute={terms['compute_s']:.3e}s memory={terms['memory_s']:.3e}s "
+          f"collective={terms['collective_s']:.3e}s dominant={dominant} "
+          f"coll_bytes={cbytes:.3e} (compile {t_compile:.0f}s)")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = f"slda-core_d{d}_{result['mesh']}_{variant}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--iters", type=int, default=500)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun_slda")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for mp in meshes:
+        run_one(args.d, args.n, mp, args.iters, args.out, args.tag, args.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this
+module never touches jax device state -- tests import it with 1 CPU
+device, the dry-run with 512 forced host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 chips per pod; 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_names(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))

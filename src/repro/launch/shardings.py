@@ -1,0 +1,197 @@
+"""Pytree -> PartitionSpec derivation for params, optimizer and decode state.
+
+Params are matched by (parent module, leaf name, rank); decode-state
+leaves by field name.  Everything resolves through the logical-axis
+rules table in repro.sharding.specs, so flipping a rule (e.g.
+expert: None -> "model" for expert-parallel MoE, or cache_seq ->
+("data", "model") for context-parallel long decode) re-shards the whole
+system consistently -- that is the §Perf iteration knob.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.specs import ShardingRules
+
+
+# (parent, name) -> logical axes (without the stacked repeats dim)
+_PARAM_AXES: dict[tuple[str, str], tuple[str | None, ...]] = {
+    # embeddings
+    ("", "embedding"): ("vocab", "embed"),
+    ("", "unembed"): ("vocab", "embed"),
+    ("", "patch_proj"): (None, None),
+    # attention
+    ("attn", "wq"): ("embed", "heads", "head_dim"),
+    ("attn", "wk"): ("embed", "kv_heads", "head_dim"),
+    ("attn", "wv"): ("embed", "kv_heads", "head_dim"),
+    ("attn", "wo"): ("heads", "head_dim", "embed"),
+    ("attn", "bq"): ("heads", "head_dim"),
+    ("attn", "bk"): ("kv_heads", "head_dim"),
+    ("attn", "bv"): ("kv_heads", "head_dim"),
+    # dense mlp (also the MoE shared expert)
+    ("mlp", "w_gate"): ("embed", "mlp"),
+    ("mlp", "w_up"): ("embed", "mlp"),
+    ("mlp", "w_down"): ("mlp", "embed"),
+    ("shared", "w_gate"): ("embed", "mlp"),
+    ("shared", "w_up"): ("embed", "mlp"),
+    ("shared", "w_down"): ("mlp", "embed"),
+    # MoE experts
+    ("moe", "router"): ("embed", "expert"),
+    ("moe", "w_gate"): ("expert", "embed", "expert_mlp"),
+    ("moe", "w_up"): ("expert", "embed", "expert_mlp"),
+    ("moe", "w_down"): ("expert", "expert_mlp", "embed"),
+    # mamba
+    ("mamba", "in_proj"): ("embed", "ssm_inner"),
+    ("mamba", "conv_w"): (None, "ssm_inner"),
+    ("mamba", "conv_b"): ("ssm_inner",),
+    ("mamba", "w_dt"): ("ssm_inner", None),
+    ("mamba", "w_dt_up"): (None, "ssm_inner"),
+    ("mamba", "dt_bias"): ("ssm_inner",),
+    ("mamba", "w_bc"): ("ssm_inner", None),
+    ("mamba", "a_log"): ("ssm_inner", None),
+    ("mamba", "d_skip"): ("ssm_inner",),
+    ("mamba", "out_proj"): ("ssm_inner", "embed"),
+    # xLSTM mLSTM (head-structured; dk/dv shard over "model" -- SSPerf-E)
+    ("mlstm", "w_up"): ("embed", "ssm_inner"),
+    ("mlstm", "w_gate"): (None, None, "xlstm_dk"),
+    ("mlstm", "w_q"): (None, None, "xlstm_dk"),
+    ("mlstm", "w_k"): (None, None, "xlstm_dk"),
+    ("mlstm", "w_v"): (None, None, "xlstm_dk"),
+    ("mlstm", "w_if"): ("ssm_inner", None, None),
+    ("mlstm", "b_if"): (None, None),
+    ("mlstm", "w_down"): (None, "xlstm_dk", None),
+    # xLSTM sLSTM
+    ("slstm", "w_up"): ("embed", "ssm_inner"),
+    ("slstm", "w_gates"): ("ssm_inner", None, None),
+    ("slstm", "r_gates"): (None, None, None),
+    ("slstm", "b_gates"): (None, None),
+    ("slstm", "w_down"): ("ssm_inner", "embed"),
+    # cross attention (enc-dec) reuses attention names under cross_attn /
+    # self_attn parents -- handled by fallback below.
+}
+
+_ATTN_ALIASES = {"self_attn": "attn", "cross_attn": "attn"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def param_spec(path, leaf, rules: ShardingRules) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    parent = _ATTN_ALIASES.get(parent, parent)
+    stacked = any(n in ("layers", "enc_layers", "dec_layers") for n in names)
+    key = (parent, name)
+    if key not in _PARAM_AXES:
+        key = ("", name) if ("", name) in _PARAM_AXES else None
+    if key is None:
+        # norms, biases, anything unlisted: replicated
+        axes: tuple[str | None, ...] = (None,) * (leaf.ndim - (1 if stacked else 0))
+    else:
+        axes = _PARAM_AXES[key]
+    if stacked:
+        axes = (None,) + tuple(axes)
+    assert len(axes) == leaf.ndim, f"{names}: axes {axes} vs shape {leaf.shape}"
+    return rules.spec(axes)
+
+
+def params_pspecs(abstract_params, rules: ShardingRules):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, rules), abstract_params
+    )
+
+
+# decode state: by leaf field name; leading dim is the stacked repeats axis
+# for everything under "caches"/cross tensors of the enc-dec state.
+# keys are the leaf field name, optionally suffixed with its ndim to
+# disambiguate (mLSTM "c" is 5-d with the stacked repeats axis; sLSTM
+# "c" is 4-d).
+_STATE_AXES: dict[str, tuple[str | None, ...]] = {
+    "k": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+    "v": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+    # head-major decode cache (SSPerf-B): seq is the contraction-minor dim
+    "k_hm": (None, "batch", "kv_heads", "head_dim", "cache_seq"),
+    "v_hm": (None, "batch", "kv_heads", "cache_seq", "head_dim"),
+    # int8 cache scales (SSPerf-B3)
+    "k_scale": (None, "batch", "kv_heads", None, "cache_seq"),
+    "v_scale": (None, "batch", "kv_heads", "cache_seq", None),
+    # xLSTM states (SSPerf-D): dk (the q/k feature dim) shards on
+    # "model" for decode -- mLSTM c:(r,b,h,dk,dv), n:(r,b,h,dk);
+    # sLSTM c/n/h/m:(r,b,h,hd) share the dk rule.
+    "c/5": (None, "batch", None, "xlstm_dk", None),
+    "c/4": (None, "batch", None, "xlstm_dk"),
+    "n/4": (None, "batch", None, "xlstm_dk"),
+    "h/4": (None, "batch", None, "xlstm_dk"),
+    "m/4": (None, "batch", None, "xlstm_dk"),
+    "conv_buf": (None, "batch", None, "ssm_inner"),
+    "ssm_h": (None, "batch", "ssm_inner", None),
+    "cross_k": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+    "cross_v": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+}
+
+
+def state_spec(path, leaf, rules: ShardingRules) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    if name == "pos":
+        return P()
+    axes = _STATE_AXES.get(f"{name}/{leaf.ndim}", _STATE_AXES.get(name))
+    if axes is None or len(axes) != leaf.ndim:
+        # xLSTM states (c, n, h, m): batch-sharded, heads/dims replicated
+        axes = (None, "batch") + (None,) * (leaf.ndim - 2)
+    return rules.spec(axes)
+
+
+def state_pspecs(abstract_state, rules: ShardingRules):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: state_spec(path, leaf, rules), abstract_state
+    )
+
+
+def zero1_pspecs(mesh, abstract_params, rules: ShardingRules):
+    """ZeRO-1 optimizer-state specs: params' specs + data-axis sharding.
+
+    Each moment tensor additionally shards its first still-unsharded
+    dim that divides the data-axis size over ("pod","data") -- the
+    standard optimizer-state sharding (MaxText/ZeRO-1).  GSPMD then
+    reduce-scatters the gradients into the shard and all-gathers
+    updated params, trading a little collective traffic for an
+    optimizer-state footprint / |data| reduction.
+    """
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    size = 1
+    for a in data_axes:
+        size *= mesh.shape[a]
+
+    def spec_fn(path, leaf):
+        base = param_spec(path, leaf, rules)
+        parts = list(base) + [None] * (leaf.ndim - len(base))
+        for i, (pt, dim) in enumerate(zip(parts, leaf.shape)):
+            if pt is None and dim >= size and dim % size == 0:
+                parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_fn, abstract_params)
+
+
+def to_named(mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

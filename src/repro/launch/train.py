@@ -1,0 +1,96 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps on the host devices (CPU container: use --smoke for the
+reduced config; the full configs are exercised via the dry-run).  The
+same step/sharding construction as the dry-run, so what trains here is
+what lowers there.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.checkpoint import save_checkpoint
+from repro.data import tokens as token_data
+from repro.launch import mesh as mesh_lib
+from repro.launch import shardings as sh
+from repro.launch import steps
+from repro.optim import AdamWConfig, adamw_init
+from repro.sharding.specs import DEFAULT_RULES, set_rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--data-parallel", type=int, default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch)
+    if args.smoke:
+        cfg = configs.smoke_config(cfg)
+
+    mesh = mesh_lib.make_host_mesh(data=args.data_parallel, model=args.model_parallel)
+    rules = DEFAULT_RULES.replace(batch=("data",))
+    set_rules(rules)
+
+    model_key = jax.random.PRNGKey(args.seed)
+    from repro.models import model_zoo
+
+    model = model_zoo.build_model(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr)
+    train_step = steps.make_train_step(cfg, opt_cfg, total_steps=args.steps)
+
+    params_abs = steps.abstract_params(cfg)
+    p_spec = sh.params_pspecs(params_abs, rules)
+    p_sh = sh.to_named(mesh, p_spec)
+    with mesh:
+        params = jax.jit(model.init, out_shardings=p_sh)(model_key)
+        opt_state = adamw_init(params)
+        jstep = jax.jit(train_step, donate_argnums=(0, 1))
+
+        stream = token_data.batch_stream(args.seed, args.batch, args.seq, cfg.vocab_size)
+        t0 = time.time()
+        for step, batch in enumerate(stream):
+            if step >= args.steps:
+                break
+            if cfg.modality == "vision" and cfg.num_patches:
+                batch["extra_embeds"] = jnp.zeros(
+                    (args.batch, cfg.num_patches, cfg.d_model), cfg.activation_dtype
+                )
+            if cfg.modality == "audio":
+                batch["frames"] = jnp.zeros(
+                    (args.batch, args.seq, cfg.d_model), cfg.activation_dtype
+                )
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                print(
+                    f"step {step:5d} loss {loss:.4f} "
+                    f"grad_norm {float(metrics['grad_norm']):.3f} "
+                    f"({(time.time() - t0):.1f}s)"
+                )
+            if args.ckpt_dir and args.ckpt_every and step and step % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step, {"params": params})
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, args.steps, {"params": params})
+            print(f"saved checkpoint at step {args.steps} -> {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo substrate: decoder-only / enc-dec transformers, MoE, SSMs."""

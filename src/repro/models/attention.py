@@ -1,0 +1,329 @@
+"""Grouped-query attention with RoPE, KV cache, and sliding-window variant.
+
+Layouts:
+  q:      (batch, seq, heads, head_dim)          heads sharded on "model"
+  k/v:    (batch, seq, kv_heads, head_dim)       kv heads replicated (GQA)
+  cache:  (batch, cache_len, kv_heads, head_dim) per layer-in-pattern
+
+Decode writes one token at position ``pos`` (lockstep batch).  With
+``sliding_window = W`` the cache is a rotating buffer of length W
+(write slot = pos % W) -- this is the bounded-memory sub-quadratic
+variant that makes long_500k decodable for full-attention archs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ArchConfig
+from repro.sharding import constrain
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (batch, cache_len, kv_heads, head_dim)
+    v: jnp.ndarray
+
+
+def pad_head_mask(cfg: ArchConfig) -> jnp.ndarray | None:
+    """Bool (padded_heads,) -- True for real heads, False for pad slots.
+
+    GQA assigns heads to kv groups by contiguous blocks of size
+    g = heads/kv_heads, so padding must happen at each group's TAIL
+    (padding a flat tail would reshuffle the head->group mapping).
+    """
+    h, kv = cfg.padded_heads, cfg.num_kv_heads
+    if h == cfg.num_heads:
+        return None
+    g_new = h // kv
+    g_old = cfg.num_heads // kv
+    return (jnp.arange(h) % g_new) < g_old
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> dict:
+    d, kv, hd = cfg.d_model, cfg.num_kv_heads, cfg.resolved_head_dim
+    h = cfg.padded_heads
+    ks = jax.random.split(key, 4)
+    wq = common.init_dense(ks[0], (d, h, hd), dtype)
+    wo = common.init_dense(ks[3], (h, hd, d), dtype)
+    mask = pad_head_mask(cfg)
+    if mask is not None:
+        # zero the padded head slices: forward == the unpadded model
+        wq = wq * mask[None, :, None].astype(dtype)
+        wo = wo * mask[:, None, None].astype(dtype)
+    p = {
+        "wq": wq,
+        "wk": common.init_dense(ks[1], (d, kv, hd), dtype),
+        "wv": common.init_dense(ks[2], (d, kv, hd), dtype),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (b,s,H,hd), k: (b,t,KV,hd) -> scores (b,KV,G,s,t)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / jnp.sqrt(hd).astype(jnp.float32)
+    return scores
+
+
+def _gqa_out(weights, v, p):
+    """weights: (b,KV,G,s,t), v: (b,t,KV,hd) -> (b,s,d_model)."""
+    b, kvh, g, s, _ = weights.shape
+    hd = v.shape[-1]
+    out = jnp.einsum("bkgst,btkh->bskgh", weights, v)
+    out = out.reshape(b, s, kvh * g, hd)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_train(p, x, cfg: ArchConfig, *, cross_kv=None, causal: bool = True):
+    """Full-sequence attention via blockwise (flash-style) accumulation.
+
+    ``cross_kv=(k, v)`` switches to cross-attention (non-causal).
+    """
+    from repro.models.blockwise_attn import blockwise_attention
+
+    b, s, _ = x.shape
+    if cross_kv is None:
+        q, k, v = _project_qkv(p, x, cfg)
+        positions = jnp.arange(s)
+        cos, sin = common.rope_freqs(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        q = common.apply_rope(q, cos, sin)
+        k = common.apply_rope(k, cos, sin)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = constrain(q, "batch", "seq", "heads", "head_dim")
+        k, v = cross_kv
+        causal = False
+
+    h = q.shape[2]
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, h // kvh, q.shape[-1])
+    out = blockwise_attention(
+        qg, k, v, causal=causal, sliding_window=cfg.sliding_window
+    )
+    out = out.reshape(b, s, h, q.shape[-1])
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+class KVCacheHM(NamedTuple):
+    """Head-major decode cache: contraction-friendly layouts."""
+
+    k_hm: jnp.ndarray  # (batch, kv_heads, head_dim, cache_len)
+    v_hm: jnp.ndarray  # (batch, kv_heads, cache_len, head_dim)
+
+
+class KVCacheHM8(NamedTuple):
+    """Int8 head-major cache: symmetric per-token-per-head quantization.
+
+    Scales are f32, one per written (head, position): the dequant is a
+    rank-1 rescale of the score/output contractions, so the int8 cache
+    is the ONLY large tensor read per step (SSPerf-B3).
+    """
+
+    k_hm: jnp.ndarray  # int8 (batch, kv_heads, head_dim, cache_len)
+    v_hm: jnp.ndarray  # int8 (batch, kv_heads, cache_len, head_dim)
+    k_scale: jnp.ndarray  # f32 (batch, kv_heads, 1, cache_len)
+    v_scale: jnp.ndarray  # f32 (batch, kv_heads, cache_len, 1)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.decode_cache_layout == "head_major":
+        if cfg.kv_cache_dtype == "int8":
+            return KVCacheHM8(
+                jnp.zeros((batch, kv, hd, cache_len), jnp.int8),
+                jnp.zeros((batch, kv, cache_len, hd), jnp.int8),
+                jnp.zeros((batch, kv, 1, cache_len), jnp.float32),
+                jnp.zeros((batch, kv, cache_len, 1), jnp.float32),
+            )
+        return KVCacheHM(
+            jnp.zeros((batch, kv, hd, cache_len), dtype),
+            jnp.zeros((batch, kv, cache_len, hd), dtype),
+        )
+    shape = (batch, cache_len, kv, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _quantize_token(x, axis):
+    """Symmetric int8 quantization along ``axis``: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _decode_mask(pos, cache_len, window):
+    idx = jnp.arange(cache_len)
+    if window:
+        # slot i holds absolute position: valid iff within last `window`
+        # positions and <= pos.  (RoPE was applied at absolute positions
+        # when written, so ordering is preserved.)
+        age = (pos - idx) % cache_len
+        return age < jnp.minimum(pos + 1, cache_len)
+    return idx <= pos
+
+
+def attention_decode(p, x, cache, pos, cfg: ArchConfig):
+    """One-token decode.  x: (b, 1, d); pos: scalar int32 position.
+
+    Returns (out (b,1,d), updated cache).  With sliding_window the
+    cache length is the window and writes rotate.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    cos, sin = common.rope_freqs(pos[None], cfg.resolved_head_dim, cfg.rope_theta)
+    q = common.apply_rope(q, cos[None], sin[None])
+    k_new = common.apply_rope(k_new, cos[None], sin[None])
+    window = cfg.sliding_window
+
+    if isinstance(cache, KVCacheHM8):
+        return _attention_decode_hm8(p, q, k_new, v_new, cache, pos, cfg)
+    if isinstance(cache, KVCacheHM):
+        return _attention_decode_hm(p, q, k_new, v_new, cache, pos, cfg)
+
+    cache_len = cache.k.shape[1]
+    slot = jnp.where(window > 0, pos % cache_len, pos) if window else pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    k = constrain(k, "batch", "cache_seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "cache_seq", "kv_heads", "head_dim")
+
+    scores = _gqa_scores(q, k).astype(jnp.float32)  # (b,KV,G,1,cache_len)
+    mask = _decode_mask(pos, cache_len, window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, jnp.finfo(jnp.float32).min)
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(weights, v, p)
+    return out, KVCache(k, v)
+
+
+def _attention_decode_hm8(p, q, k_new, v_new, cache: KVCacheHM8, pos, cfg: ArchConfig):
+    """Int8 head-major single-token decode (SSPerf-B3).
+
+    Dequantization folds into the contractions as rank-1 rescales:
+      scores = (q . k_q) * k_scale[pos],  out = (w * v_scale) . v_q.
+    """
+    b, _, h, hd = q.shape
+    kvh = cache.k_hm.shape[1]
+    g = h // kvh
+    window = cfg.sliding_window
+    cache_len = cache.k_hm.shape[-1]
+    slot = jnp.where(window > 0, pos % cache_len, pos) if window else pos
+
+    k_col, k_s = _quantize_token(k_new[:, 0][..., None], axis=2)  # (b,kv,hd,1)
+    v_row, v_s = _quantize_token(
+        jnp.transpose(v_new, (0, 2, 1, 3)), axis=3
+    )  # (b,kv,1,hd)
+    k = jax.lax.dynamic_update_slice(cache.k_hm, k_col, (0, 0, 0, slot))
+    v = jax.lax.dynamic_update_slice(cache.v_hm, v_row, (0, 0, slot, 0))
+    ks = jax.lax.dynamic_update_slice(cache.k_scale, k_s, (0, 0, 0, slot))
+    vs = jax.lax.dynamic_update_slice(cache.v_scale, v_s, (0, 0, slot, 0))
+    k = constrain(k, "batch", "kv_heads", "head_dim", "cache_seq")
+    v = constrain(v, "batch", "kv_heads", "cache_seq", "head_dim")
+
+    qg = q[:, 0].reshape(b, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bkhL->bkgL", qg, k.astype(jnp.float32))
+    scores = scores * ks[:, :, 0][:, :, None, :]  # rank-1 dequant
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    mask = _decode_mask(pos, cache_len, window)
+    scores = jnp.where(mask[None, None, None, :], scores, jnp.finfo(jnp.float32).min)
+    weights = jax.nn.softmax(scores, axis=-1)
+    wv = weights * vs[:, :, None, :, 0]  # fold v scales into the weights
+    out = jnp.einsum("bkgL,bkLh->bkgh", wv, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(q.dtype)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, KVCacheHM8(k, v, ks, vs)
+
+
+def cross_attention_decode(p, x, ck, cv, cfg: ArchConfig):
+    """Single-token cross-attention over a (possibly seq-sharded) memory.
+
+    SSPerf-C: the blockwise (flash-style) path dynamically slices the
+    source axis, which forces GSPMD to ALL-GATHER the whole cross K/V
+    (4.3 GB/step for a 512k-frame memory).  A direct masked-softmax
+    einsum chain keeps src sharded end to end: scores stay src-sharded,
+    the softmax reduction and the output contraction become partial
+    computations merged with KB-sized all-reduces.
+
+    x: (b, 1, d); ck/cv: (b, src, kv, hd).  Non-causal (encoder memory).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    b, _, h, hd = q.shape
+    kvh = ck.shape[2]
+    g = h // kvh
+    qg = q[:, 0].reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, ck).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", weights, cv)
+    out = out.reshape(b, 1, h, hd)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _attention_decode_hm(p, q, k_new, v_new, cache: KVCacheHM, pos, cfg: ArchConfig):
+    """Head-major single-token decode (SSPerf-B iteration 2).
+
+    The cache stores k as (b, kv, hd, L) and v as (b, kv, L, hd) --
+    exactly the operand layouts of the two decode contractions, so the
+    compiler never transposes/copies the full cache per step.  The s=1
+    case is specialized away instead of batched through the generic
+    5-d GQA path.
+    """
+    b, _, h, hd = q.shape
+    kvh = cache.k_hm.shape[1]
+    g = h // kvh
+    window = cfg.sliding_window
+    cache_len = cache.k_hm.shape[-1]
+    slot = jnp.where(window > 0, pos % cache_len, pos) if window else pos
+
+    # k_new/v_new: (b, 1, kv, hd) -> cache layouts
+    k_col = k_new[:, 0][..., None]  # (b, kv, hd, 1)
+    v_row = jnp.transpose(v_new, (0, 2, 1, 3))  # (b, kv, 1, hd)
+    k = jax.lax.dynamic_update_slice(cache.k_hm, k_col, (0, 0, 0, slot))
+    v = jax.lax.dynamic_update_slice(cache.v_hm, v_row, (0, 0, slot, 0))
+    k = constrain(k, "batch", "kv_heads", "head_dim", "cache_seq")
+    v = constrain(v, "batch", "kv_heads", "cache_seq", "head_dim")
+
+    qg = q[:, 0].reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bkgh,bkhL->bkgL", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    mask = _decode_mask(pos, cache_len, window)
+    scores = jnp.where(mask[None, None, None, :], scores, jnp.finfo(jnp.float32).min)
+    weights = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgL,bkLh->bkgh", weights, v)
+    out = out.reshape(b, 1, h, hd)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, KVCacheHM(k, v)

@@ -1,0 +1,194 @@
+"""Shared model plumbing: the architecture config, norms, RoPE, embeddings.
+
+Parameters are plain nested dicts of jnp arrays.  Per-layer parameters
+are *stacked* along a leading repeat axis and the layer stack is applied
+with ``jax.lax.scan`` over a repeating block *pattern* -- HLO size stays
+O(pattern), not O(depth), which keeps 88-layer/123B lowers tractable and
+matches deployment practice (code-cache, compile time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+Params = Any  # nested dict of arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact numbers in repro/configs/*)."""
+
+    name: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # block pattern, e.g. ("attn",), ("attn_moe",), ("attn","attn_moe"),
+    # ("attn",) + ("mamba",)*7, ("mlstm",)*7 + ("slstm",)
+    pattern: tuple[str, ...] = ("attn",)
+
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 = full attention
+    # pad q-heads up to this count for model-axis divisibility (llama4:
+    # 40 -> 48 for the 16-wide axis).  Padded heads are zero-initialized
+    # in wq/wo so the forward pass equals the unpadded model; they are
+    # ~1% extra trainable capacity (GSPMD-padding practice).
+    pad_heads_to: int = 0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+    expert_sharding: str = "tp"  # "tp" (shard expert ffn width) | "ep" (shard experts)
+
+    # SSM (mamba)
+    ssm_expand: int = 2
+    ssm_state: int = 16
+    conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # xLSTM
+    xlstm_proj_factor: float = 2.0
+
+    # encoder-decoder
+    encoder_layers: int = 0
+
+    # modality frontend stubs
+    modality: str = "text"  # text | vision | audio
+    num_patches: int = 0  # vision prefix length (anyres tiling stub)
+
+    # KV-cache layout for decode.  "seq_major" = (b, L, kv, hd) (the
+    # training activation layout); "head_major" = k:(b, kv, hd, L),
+    # v:(b, kv, L, hd) -- matches the decode einsum contractions so the
+    # per-step transpose+copy of the whole cache disappears (SSPerf-B).
+    decode_cache_layout: str = "head_major"
+    # "model" = cache in activation dtype; "int8" = per-token-per-head
+    # symmetric int8 quantization (head_major layout only) -- halves
+    # cache HBM traffic and doubles the context that fits (SSPerf-B3).
+    kv_cache_dtype: str = "model"
+
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    vocab_pad_to: int = 256
+    citation: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_heads(self) -> int:
+        return max(self.pad_heads_to, self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        v, p = self.vocab_size, self.vocab_pad_to
+        return ((v + p - 1) // p) * p
+
+    @property
+    def num_repeats(self) -> int:
+        assert self.num_layers % len(self.pattern) == 0, (
+            f"{self.name}: num_layers {self.num_layers} not divisible by "
+            f"pattern length {len(self.pattern)}"
+        )
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Exact parameter count via eval_shape (no allocation)."""
+        from repro.models import model_zoo
+
+        model = model_zoo.build_model(self)
+        shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        total = self.param_count()
+        if not self.num_experts:
+            return total
+        # subtract inactive expert FFN weights (any *_moe block kind)
+        moe_layers = sum(1 for p in self.pattern if p.endswith("_moe") or p == "attn_moe")
+        moe_layers *= self.num_repeats
+        per_expert = 3 * self.d_model * self.d_ff
+        inactive = moe_layers * (self.num_experts - self.experts_per_token) * per_expert
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_dense(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rope_freqs(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def embed_tokens(embedding: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(embedding, tokens, axis=0)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def unembed(x: jnp.ndarray, embedding: jnp.ndarray, real_vocab: int) -> jnp.ndarray:
+    """Project to padded vocab, mask padded ids to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, embedding)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    v = embedding.shape[0]
+    if real_vocab < v:
+        mask = jnp.arange(v) < real_vocab
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, real_vocab: int) -> jnp.ndarray:
+    """Mean token cross entropy; logits over padded vocab, labels < real_vocab."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    del real_vocab
+    return jnp.mean(logz - gold)

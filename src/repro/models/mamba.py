@@ -1,0 +1,154 @@
+"""Mamba-1 selective SSM block, TPU-adapted with a chunked scan.
+
+GPU Mamba fuses the selective scan into a warp-level kernel; the TPU
+adaptation (DESIGN.md §2) restructures it as: sequential ``lax.scan``
+over chunks of ``cfg.ssm_chunk`` tokens, parallel first-order
+``associative_scan`` within a chunk.  The inner dim is sharded on the
+"model" axis so the per-chunk state tensor (b, L, d_inner/16, d_state)
+fits VMEM-scale working sets; cross-chunk carry is (b, d_inner, d_state).
+
+Decode is the exact single-step recurrence with a (conv buffer, h)
+state -- O(1) per token, which is what makes jamba/long_500k native.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ArchConfig
+from repro.sharding import constrain
+
+
+class MambaState(NamedTuple):
+    conv_buf: jnp.ndarray  # (b, conv_width-1, d_inner) rolling input buffer
+    ssm_h: jnp.ndarray  # (b, d_inner, d_state) SSM state
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, ds, w = cfg.d_model, d_inner(cfg), cfg.ssm_state, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    dt_rank = max(16, d // 16)
+    return {
+        "in_proj": common.init_dense(ks[0], (d, 2 * di), dtype),
+        "conv_w": common.init_dense(ks[1], (w, di), dtype, scale=1.0 / w),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_dt": common.init_dense(ks[2], (di, dt_rank), dtype),
+        "w_dt_up": common.init_dense(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.full((di,), -4.0, jnp.float32),  # softplus^-1(~0.018)
+        "w_bc": common.init_dense(ks[4], (di, 2 * ds), dtype),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        ),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": common.init_dense(ks[5], (di, d), dtype),
+    }
+
+
+def _conv_causal(x, conv_w, conv_b):
+    """Depthwise causal conv over seq.  x: (b, s, di); conv_w: (w, di)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * conv_w[i] for i in range(w))
+    return out + conv_b
+
+
+def _ssm_inputs(p, xz, cfg: ArchConfig):
+    """Shared front half: returns (x_conv, z, dt, b_in, c_in)."""
+    di = d_inner(cfg)
+    x, z = xz[..., :di], xz[..., di:]
+    x = constrain(x, "batch", "seq", "ssm_inner")
+    x = jax.nn.silu(_conv_causal(x, p["conv_w"], p["conv_b"]))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dr->bsr", x, p["w_dt"]) @ p["w_dt_up"]
+        + p["dt_bias"].astype(xz.dtype)
+    ).astype(jnp.float32)
+    bc = jnp.einsum("bsd,dn->bsn", x, p["w_bc"]).astype(jnp.float32)
+    ds = cfg.ssm_state
+    return x, z, dt, bc[..., :ds], bc[..., ds:]
+
+
+def mamba_train(p, x_in, cfg: ArchConfig):
+    """x_in: (b, s, d) -> (b, s, d).  s must divide by cfg.ssm_chunk."""
+    b, s, d = x_in.shape
+    di, ds = d_inner(cfg), cfg.ssm_state
+    chunk = min(cfg.ssm_chunk, s)
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} not divisible by ssm chunk {chunk}"
+
+    xz = jnp.einsum("bsd,de->bse", x_in, p["in_proj"])
+    x, z, dt, b_in, c_in = _ssm_inputs(p, xz, cfg)
+
+    a = -jnp.exp(p["a_log"])  # (di, ds)
+    # per-step decay and increment
+    #   h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t * B_t
+    x32 = x.astype(jnp.float32)
+
+    def chunk_step(h_carry, inputs):
+        xc, dtc, bc, cc = inputs  # (b, L, ...)
+        decay = jnp.exp(dtc[..., None] * a)  # (b, L, di, ds)
+        inc = (dtc * xc)[..., None] * bc[:, :, None, :]  # (b, L, di, ds)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        cum_decay, h_within = jax.lax.associative_scan(
+            combine, (decay, inc), axis=1
+        )
+        h = cum_decay * h_carry[:, None] + h_within  # (b, L, di, ds)
+        y = jnp.einsum("blds,bls->bld", h, cc)
+        return h[:, -1], y
+
+    reshaped = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, h0, (reshaped(x32), reshaped(dt), reshaped(b_in), reshaped(c_in))
+    )
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + x32 * p["d_skip"]
+    y = (y.astype(x_in.dtype)) * jax.nn.silu(z)
+    y = constrain(y, "batch", "seq", "ssm_inner")
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    di, ds, w = d_inner(cfg), cfg.ssm_state, cfg.conv_width
+    return MambaState(
+        conv_buf=jnp.zeros((batch, w - 1, di), dtype),
+        ssm_h=jnp.zeros((batch, di, ds), jnp.float32),
+    )
+
+
+def mamba_decode(p, x_in, state: MambaState, cfg: ArchConfig):
+    """One-token step.  x_in: (b, 1, d) -> (out (b, 1, d), new state)."""
+    b = x_in.shape[0]
+    di, ds = d_inner(cfg), cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x_in, p["in_proj"])
+    x, z = xz[..., :di], xz[..., di:]
+    # rolling conv buffer
+    buf = jnp.concatenate([state.conv_buf, x], axis=1)  # (b, w, di)
+    xc = jnp.einsum("bwd,wd->bd", buf, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]  # (b, 1, di)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dr->bsr", xc, p["w_dt"]) @ p["w_dt_up"]
+        + p["dt_bias"].astype(x_in.dtype)
+    ).astype(jnp.float32)[:, 0]
+    bc = jnp.einsum("bsd,dn->bsn", xc, p["w_bc"]).astype(jnp.float32)[:, 0]
+    b_in, c_in = bc[..., :ds], bc[..., ds:]
+    a = -jnp.exp(p["a_log"])
+    x32 = xc.astype(jnp.float32)[:, 0]
+    decay = jnp.exp(dt[..., None] * a)  # (b, di, ds)
+    h = decay * state.ssm_h + (dt * x32)[..., None] * b_in[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_in) + x32 * p["d_skip"]
+    y = (y[:, None, :].astype(x_in.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return out, MambaState(conv_buf=buf[:, 1:], ssm_h=h)

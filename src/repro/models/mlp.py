@@ -1,0 +1,27 @@
+"""SwiGLU feed-forward block (the dense MLP used by every assigned arch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ArchConfig
+from repro.sharding import constrain
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": common.init_dense(k1, (d_model, d_ff), dtype),
+        "w_up": common.init_dense(k2, (d_model, d_ff), dtype),
+        "w_down": common.init_dense(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(p, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

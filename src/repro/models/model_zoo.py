@@ -1,0 +1,13 @@
+"""Build a model object from an ArchConfig."""
+
+from __future__ import annotations
+
+from repro.models.common import ArchConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import DecoderModel
+
+
+def build_model(cfg: ArchConfig, remat: bool = True, unroll: bool = False):
+    if cfg.encoder_layers:
+        return EncDecModel(cfg, remat=remat, unroll=unroll)
+    return DecoderModel(cfg, remat=remat, unroll=unroll)

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded dispatch.
+
+Routing is *per sequence row*: each (batch row, expert) pair keeps its
+top-C tokens by router weight, C = ceil(seq * k / E * capacity_factor).
+This keeps all shapes static, avoids a global cross-shard sort, and
+drops overflow tokens exactly like MaxText's dropping implementation.
+
+Two sharding modes (config.expert_sharding):
+  "tp": expert FFN width sharded on "model" (no all-to-all; behaves
+        like 16-way tensor-parallel MLP replicated over experts);
+  "ep": experts sharded on "model" (induces all-to-all/all-gather of
+        dispatched tokens -- the communication pattern to study in
+        §Perf for the MoE-assigned archs).
+
+Aux losses: load-balance (Switch) + router z-loss, returned for logging.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, mlp
+from repro.models.common import ArchConfig
+from repro.sharding import constrain
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.init_dense(ks[0], (d, e), jnp.float32),
+        "w_gate": common.init_dense(ks[1], (e, d, f), dtype),
+        "w_up": common.init_dense(ks[2], (e, d, f), dtype),
+        "w_down": common.init_dense(ks[3], (e, f, d), dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = mlp.init_mlp(ks[4], d, f, dtype)
+    return p
+
+
+def capacity(cfg: ArchConfig, seq: int) -> int:
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = math.ceil(seq * k / e * cfg.capacity_factor)
+    return min(max(8, c), seq)
+
+
+def moe(p, x: jnp.ndarray, cfg: ArchConfig) -> tuple[jnp.ndarray, dict]:
+    """x: (b, s, d) -> (y, aux)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gate per token
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (b, s, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    # per-token weight for each expert (0 if not routed)
+    token_expert_w = jnp.zeros((b, s, e), jnp.float32)
+    token_expert_w = jax.vmap(
+        lambda w, row_v, row_i: w.at[jnp.arange(s)[:, None], row_i].set(row_v),
+        in_axes=(0, 0, 0),
+    )(token_expert_w, gate_vals, gate_idx)
+
+    # per (row, expert): top-C tokens by weight -> static dispatch
+    w_t = jnp.swapaxes(token_expert_w, 1, 2)  # (b, e, s)
+    disp_w, disp_idx = jax.lax.top_k(w_t, c)  # (b, e, c)
+    xg = jnp.take_along_axis(
+        x[:, None, :, :], disp_idx[..., None], axis=2
+    )  # (b, e, c, d)
+    xg = constrain(xg, "batch", "expert", "capacity", "embed")
+
+    gate = jnp.einsum("becd,edf->becf", xg, p["w_gate"])
+    up = jnp.einsum("becd,edf->becf", xg, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    # the installed rules map exactly one of expert/expert_mlp -> "model"
+    # depending on cfg.expert_sharding (set by the launcher)
+    h = constrain(h, "batch", "expert", "capacity", "expert_mlp")
+    y_e = jnp.einsum("becf,efd->becd", h, p["w_down"])  # (b, e, c, d)
+    y_e = y_e * disp_w[..., None].astype(y_e.dtype)
+
+    # scatter-add back to token positions
+    y = jnp.zeros((b, s, d), x.dtype)
+    y = jax.vmap(
+        lambda acc, idx, vals: acc.at[idx.reshape(-1)].add(
+            vals.reshape(-1, d), mode="drop"
+        )
+    )(y, disp_idx, y_e)
+    y = constrain(y, "batch", "seq", "embed")
+
+    if cfg.shared_expert:
+        y = y + mlp.mlp(p["shared"], x)
+
+    # aux losses (Switch load balance + z-loss)
+    me = jnp.mean(probs, axis=(0, 1))  # (e,)
+    routed = jnp.mean(token_expert_w > 0, axis=(0, 1))
+    lb_loss = e * jnp.sum(me * routed)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return y, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}

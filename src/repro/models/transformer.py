@@ -1,0 +1,285 @@
+"""Decoder-only model assembly over a repeating block pattern.
+
+A model is ``num_repeats`` copies of ``cfg.pattern`` (e.g. jamba's
+("attn",) + ("mamba",)*7).  Per-pattern-position params are stacked on
+a leading repeats axis and consumed as scan xs, so the lowered HLO is
+O(len(pattern)) regardless of depth.  Each repeat is rematerialized
+(jax.checkpoint) in the train path -- the standard memory/compute
+trade for 100B-scale training, and a §Perf lever.
+
+Block kinds:
+  attn      GQA attention + SwiGLU MLP (two residual subs)
+  attn_moe  GQA attention + MoE       (two residual subs)
+  mamba     Mamba SSM (single sub)
+  mlstm     xLSTM matrix-memory block (single sub)
+  slstm     xLSTM scalar-memory block (single sub)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mamba, mlp, moe, xlstm
+from repro.models.common import ArchConfig
+from repro.sharding import constrain
+
+
+class DecodeState(NamedTuple):
+    """Per-model decode state: stacked per-repeat caches + position."""
+
+    caches: Any  # dict "b{i}" -> stacked cache pytree (repeats leading)
+    pos: jnp.ndarray  # scalar int32, number of tokens already in cache
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg: ArchConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"norm1": jnp.ones((d,), jnp.float32)}
+    if kind in ("attn", "attn_moe"):
+        p["attn"] = attention.init_attention(k1, cfg, dtype)
+        p["norm2"] = jnp.ones((d,), jnp.float32)
+        if kind == "attn":
+            p["mlp"] = mlp.init_mlp(k2, d, cfg.d_ff, dtype)
+        else:
+            p["moe"] = moe.init_moe(k2, cfg, dtype)
+    elif kind in ("mamba", "mamba_mlp", "mamba_moe"):
+        p["mamba"] = mamba.init_mamba(k1, cfg, dtype)
+        if kind == "mamba_mlp":
+            p["norm2"] = jnp.ones((d,), jnp.float32)
+            p["mlp"] = mlp.init_mlp(k2, d, cfg.d_ff, dtype)
+        elif kind == "mamba_moe":
+            p["norm2"] = jnp.ones((d,), jnp.float32)
+            p["moe"] = moe.init_moe(k2, cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm(k1, cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.init_slstm(k1, cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _apply_block_train(p, kind: str, x, cfg: ArchConfig):
+    aux = {}
+    eps = cfg.norm_eps
+    if kind in ("attn", "attn_moe"):
+        h = common.rms_norm(x, p["norm1"], eps)
+        x = x + attention.attention_train(p["attn"], h, cfg)
+        h = common.rms_norm(x, p["norm2"], eps)
+        if kind == "attn":
+            x = x + mlp.mlp(p["mlp"], h)
+        else:
+            y, aux = moe.moe(p["moe"], h, cfg)
+            x = x + y
+    elif kind in ("mamba", "mamba_mlp", "mamba_moe"):
+        x = x + mamba.mamba_train(p["mamba"], common.rms_norm(x, p["norm1"], eps), cfg)
+        if kind == "mamba_mlp":
+            x = x + mlp.mlp(p["mlp"], common.rms_norm(x, p["norm2"], eps))
+        elif kind == "mamba_moe":
+            y, aux = moe.moe(p["moe"], common.rms_norm(x, p["norm2"], eps), cfg)
+            x = x + y
+    elif kind == "mlstm":
+        x = x + xlstm.mlstm_train(p["mlstm"], common.rms_norm(x, p["norm1"], eps), cfg)
+    elif kind == "slstm":
+        x = x + xlstm.slstm_train(p["slstm"], common.rms_norm(x, p["norm1"], eps), cfg)
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def _init_block_cache(kind: str, cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    if kind in ("attn", "attn_moe"):
+        return attention.init_cache(cfg, batch, cache_len, dtype)
+    if kind in ("mamba", "mamba_mlp", "mamba_moe"):
+        return mamba.init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _apply_block_decode(p, kind: str, x, cache, pos, cfg: ArchConfig):
+    eps = cfg.norm_eps
+    if kind in ("attn", "attn_moe"):
+        h = common.rms_norm(x, p["norm1"], eps)
+        y, cache = attention.attention_decode(p["attn"], h, cache, pos, cfg)
+        x = x + y
+        h = common.rms_norm(x, p["norm2"], eps)
+        if kind == "attn":
+            x = x + mlp.mlp(p["mlp"], h)
+        else:
+            y, _ = moe.moe(p["moe"], h, cfg)
+            x = x + y
+    elif kind in ("mamba", "mamba_mlp", "mamba_moe"):
+        y, cache = mamba.mamba_decode(p["mamba"], common.rms_norm(x, p["norm1"], eps), cache, cfg)
+        x = x + y
+        if kind == "mamba_mlp":
+            x = x + mlp.mlp(p["mlp"], common.rms_norm(x, p["norm2"], eps))
+        elif kind == "mamba_moe":
+            y, _ = moe.moe(p["moe"], common.rms_norm(x, p["norm2"], eps), cfg)
+            x = x + y
+    elif kind == "mlstm":
+        y, cache = xlstm.mlstm_decode(p["mlstm"], common.rms_norm(x, p["norm1"], eps), cache, cfg)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = xlstm.slstm_decode(p["slstm"], common.rms_norm(x, p["norm1"], eps), cache, cfg)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderModel:
+    cfg: ArchConfig
+    remat: bool = True
+    # unroll=True replaces the lax.scan over repeats with a Python loop.
+    # Used by the dry-run cost correction (XLA cost analysis counts a
+    # while body once; an unrolled module is counted fully).
+    unroll: bool = False
+
+    def _scan_repeats(self, body, carry, xs):
+        if not self.unroll:
+            return jax.lax.scan(body, carry, xs)
+        ys = []
+        for i in range(self.cfg.num_repeats):
+            xi = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body(carry, xi)
+            ys.append(y)
+        if all(y is None for y in ys):
+            return carry, None
+        return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.activation_dtype
+        kv, ke, ko, kl = jax.random.split(key, 4)
+        params: dict = {
+            "embedding": common.init_dense(
+                ke, (cfg.padded_vocab, cfg.d_model), dtype, scale=cfg.d_model**-0.5
+            ),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not getattr(cfg, "tie_embeddings", False):
+            params["unembed"] = common.init_dense(
+                ko, (cfg.padded_vocab, cfg.d_model), dtype
+            )
+        layer_keys = jax.random.split(kl, cfg.num_repeats)
+
+        def init_repeat(k):
+            ks = jax.random.split(k, len(cfg.pattern))
+            return {
+                f"b{i}": _init_block(ks[i], kind, cfg, dtype)
+                for i, kind in enumerate(cfg.pattern)
+            }
+
+        params["layers"] = jax.vmap(init_repeat)(layer_keys)
+        if cfg.modality == "vision" and cfg.num_patches:
+            params["patch_proj"] = common.init_dense(
+                kv, (cfg.d_model, cfg.d_model), dtype
+            )
+        return params
+
+    # -- embedding front --------------------------------------------------
+    def _embed(self, params, tokens, extra_embeds=None):
+        x = common.embed_tokens(params["embedding"], tokens)
+        if extra_embeds is not None:
+            # modality frontend stub: precomputed patch/frame embeddings
+            # are projected and prepended (early fusion).
+            pe = extra_embeds.astype(x.dtype)
+            if "patch_proj" in params:
+                pe = jnp.einsum("bpd,de->bpe", pe, params["patch_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+        return constrain(x, "batch", "seq", "embed")
+
+    def _unembed_matrix(self, params):
+        return params.get("unembed", params["embedding"])
+
+    # -- train forward -----------------------------------------------------
+    def forward(self, params, tokens, extra_embeds=None):
+        """tokens: (b, s) -> logits (b, s_total, padded_vocab), aux dict."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, extra_embeds)
+
+        def repeat_body(carry, layer_params):
+            x, aux_acc = carry
+            for i, kind in enumerate(cfg.pattern):
+                x, aux = _apply_block_train(layer_params[f"b{i}"], kind, x, cfg)
+                for k, v in aux.items():
+                    aux_acc[k] = aux_acc[k] + v
+            return (x, aux_acc), None
+
+        body = jax.checkpoint(repeat_body) if self.remat else repeat_body
+        aux0 = {"moe_lb_loss": jnp.float32(0.0), "moe_z_loss": jnp.float32(0.0)}
+        (x, aux), _ = self._scan_repeats(body, (x, aux0), params["layers"])
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = common.unembed(x, self._unembed_matrix(params), cfg.vocab_size)
+        n_rep = cfg.num_repeats
+        aux = {k: v / n_rep for k, v in aux.items()}
+        return logits, aux
+
+    def loss(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        cfg = self.cfg
+        logits, aux = self.forward(
+            params, batch["tokens"], batch.get("extra_embeds")
+        )
+        # only score token positions (skip the multimodal prefix)
+        prefix = logits.shape[1] - batch["labels"].shape[1]
+        logits = logits[:, prefix:]
+        ce = common.cross_entropy_loss(logits, batch["labels"], cfg.vocab_size)
+        total = ce + 0.01 * aux.get("moe_lb_loss", 0.0) + 0.001 * aux.get("moe_z_loss", 0.0)
+        metrics = {"ce": ce, **aux}
+        return total, metrics
+
+    # -- decode -------------------------------------------------------------
+    def cache_len(self, seq_len: int) -> int:
+        w = self.cfg.sliding_window
+        return min(seq_len, w) if w else seq_len
+
+    def init_decode_state(self, batch: int, seq_len: int) -> DecodeState:
+        cfg = self.cfg
+        dtype = cfg.activation_dtype
+        clen = self.cache_len(seq_len)
+
+        def one_repeat(_):
+            return {
+                f"b{i}": _init_block_cache(kind, cfg, batch, clen, dtype)
+                for i, kind in enumerate(cfg.pattern)
+            }
+
+        caches = jax.vmap(one_repeat)(jnp.arange(cfg.num_repeats))
+        return DecodeState(caches=caches, pos=jnp.int32(0))
+
+    def decode_step(self, params, state: DecodeState, tokens):
+        """tokens: (b, 1) -> (logits (b, 1, vocab), new state)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        pos = state.pos
+
+        def repeat_body(x, xs):
+            layer_params, cache = xs
+            new_cache = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, c = _apply_block_decode(
+                    layer_params[f"b{i}"], kind, x, cache[f"b{i}"], pos, cfg
+                )
+                new_cache[f"b{i}"] = c
+            return x, new_cache
+
+        x, new_caches = self._scan_repeats(repeat_body, x, (params["layers"], state.caches))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = common.unembed(x, self._unembed_matrix(params), cfg.vocab_size)
+        return logits, DecodeState(caches=new_caches, pos=pos + 1)

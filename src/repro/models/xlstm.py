@@ -1,0 +1,263 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, strictly sequential) -- Beck et al., arXiv:2405.04517.
+
+TPU adaptation: the mLSTM recurrence
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t
+is computed chunkwise (retention-style): within a chunk the output is a
+masked quadratic form q K^T with a gate-decay matrix; across chunks a
+(b, h, dk, dv) matrix-memory carry is propagated by lax.scan.  Gates
+use log-space accumulation with clipping for stability.
+
+sLSTM has a true hidden-to-gate recurrence (block-diagonal R per head),
+so it cannot be parallelized over time; it runs as a lax.scan over
+steps (an O(1)-HLO while loop).  The assigned xlstm-1.3b interleaves
+them 7:1 (pattern ("mlstm",)*7 + ("slstm",)).
+
+Both blocks contain their own up/down projections (the config's
+d_ff = 0 is correct: there is no separate FFN).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ArchConfig
+from repro.sharding import constrain
+
+
+GATE_CLIP = 8.0
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(d_up, num_heads, head_dim) of the inner mLSTM space."""
+    d_up = int(cfg.xlstm_proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    return d_up, nh, d_up // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray  # (b, h, dk, dv) matrix memory
+    n: jnp.ndarray  # (b, h, dk) normalizer
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_up, nh, hd = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    # head-structured layouts (SSPerf-E): w_gate/w_down keep the (h, hd)
+    # split so the dk/dv axis can shard over "model" end to end -- the
+    # inner-sharded contractions then reduce-scatter into dk-sharded
+    # outputs instead of all-reducing 1 GB replicated activations.
+    return {
+        "w_up": common.init_dense(ks[0], (d, d_up), dtype),
+        "w_gate": common.init_dense(ks[1], (d, nh, hd), dtype),
+        "w_q": common.init_dense(ks[2], (d_up, nh, hd), dtype),
+        "w_k": common.init_dense(ks[3], (d_up, nh, hd), dtype),
+        "w_v": common.init_dense(ks[4], (d_up, nh, hd), dtype),
+        "w_if": common.init_dense(ks[5], (d_up, nh, 2), jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((nh, 1)), jnp.full((nh, 1), 3.0)], axis=-1
+        ),  # forget-gate bias ~ sigmoid(3) ≈ .95
+        "w_down": common.init_dense(ks[6], (nh, hd, d), dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    up = constrain(up, "batch", "seq", "ssm_inner")
+    q = jnp.einsum("bse,ehk->bshk", up, p["w_q"])
+    k = jnp.einsum("bse,ehk->bshk", up, p["w_k"])
+    v = jnp.einsum("bse,ehk->bshk", up, p["w_v"])
+    q = constrain(q, "batch", "seq", None, "xlstm_dk")
+    k = constrain(k, "batch", "seq", None, "xlstm_dk")
+    v = constrain(v, "batch", "seq", None, "xlstm_dk")
+    gates = jnp.einsum("bse,ehg->bshg", up.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    log_i = jnp.clip(gates[..., 0], -GATE_CLIP, GATE_CLIP)  # (b,s,h)
+    log_f = jax.nn.log_sigmoid(gates[..., 1])  # (b,s,h), <= 0
+    gate_z = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", x, p["w_gate"]))
+    gate_z = constrain(gate_z, "batch", "seq", None, "xlstm_dk")
+    return up, q, k, v, log_i, log_f, gate_z
+
+
+def mlstm_train(p, x, cfg: ArchConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    d_up, nh, hd = _dims(cfg)
+    chunk = min(cfg.ssm_chunk, s)
+    nc = s // chunk
+    assert nc * chunk == s
+
+    up, q, k, v, log_i, log_f, gate_z = _mlstm_qkvif(p, x, cfg)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    resh = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    qs, ks_, vs = resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)), resh(
+        v.astype(jnp.float32)
+    )
+    lis, lfs = resh(log_i), resh(log_f)
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev = carry  # (b,h,dk,dv), (b,h,dk)
+        qc, kc, vc, lic, lfc = inp  # (b,L,h,*)
+        fcum = jnp.cumsum(lfc, axis=1)  # (b,L,h) log prod of f up to t
+        # intra-chunk decay D_ij = fcum_i - fcum_j + log i_j  (j <= i)
+        dmat = (
+            fcum[:, :, None, :] - fcum[:, None, :, :] + lic[:, None, :, :]
+        )  # (b, i, j, h)
+        l_idx = jnp.arange(qc.shape[1])
+        causal = l_idx[:, None] >= l_idx[None, :]
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        dmat = jnp.clip(dmat, -60.0, GATE_CLIP)
+        w = jnp.exp(dmat)  # (b,i,j,h)
+        scores = jnp.einsum("bihk,bjhk->bijh", qc, kc) * scale
+        intra = jnp.einsum("bijh,bijh,bjhv->bihv", scores, w, vc)
+        n_intra = jnp.einsum("bijh,bjhk->bihk", w, kc)
+        # inter-chunk: decay from carry = exp(fcum_i)
+        decay_i = jnp.exp(jnp.clip(fcum, -60.0, 0.0))  # (b,L,h)
+        inter = jnp.einsum("bihk,bhkv,bih->bihv", qc, c_prev, decay_i) * scale
+        n_inter = n_prev[:, None] * decay_i[..., None]  # (b,L,h,dk)
+        num = intra + inter  # (b,L,h,dv)
+        nvec = n_intra + n_inter  # (b,L,h,dk)
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bihk,bihk->bih", qc, nvec)) * scale, 1.0
+        )
+        y = num / denom[..., None]
+        # carry update: C_new = f_total C_prev + sum_j f_{j+1..L} i_j k_j v_j^T
+        f_total = jnp.exp(jnp.clip(fcum[:, -1], -60.0, 0.0))  # (b,h)
+        tail = jnp.exp(
+            jnp.clip(fcum[:, -1:, :] - fcum + lic, -60.0, GATE_CLIP)
+        )  # (b,L,h)
+        c_new = f_total[:, :, None, None] * c_prev + jnp.einsum(
+            "bjh,bjhk,bjhv->bhkv", tail, kc, vc
+        )
+        c_new = constrain(c_new, "batch", None, "xlstm_dk", None)
+        n_new = f_total[:, :, None] * n_prev + jnp.einsum("bjh,bjhk->bhk", tail, kc)
+        n_new = constrain(n_new, "batch", None, "xlstm_dk")
+        return (c_new, n_new), y
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, (c0, n0), (qs, ks_, vs, lis, lfs))
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, hd).astype(x.dtype)  # (b,s,h,dv)
+    y = y * gate_z
+    y = constrain(y, "batch", "seq", None, "xlstm_dk")
+    return jnp.einsum("bshv,hvd->bsd", y, p["w_down"])
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> MLSTMState:
+    _, nh, hd = _dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, nh, hd), jnp.float32),
+    )
+
+
+def mlstm_decode(p, x, state: MLSTMState, cfg: ArchConfig):
+    """x: (b, 1, d) -> (out, new state); exact recurrence."""
+    _, nh, hd = _dims(cfg)
+    up, q, k, v, log_i, log_f, gate_z = _mlstm_qkvif(p, x, cfg)
+    q, k, v = (t.astype(jnp.float32)[:, 0] for t in (q, k, v))  # (b,h,hd)
+    i_t = jnp.exp(log_i[:, 0])  # (b,h)
+    f_t = jnp.exp(log_f[:, 0])
+    # keep the dk axis sharded through the update + readout (SSPerf-D):
+    # q/k dk-sharded, v replicated -> C stays dk-sharded; the q.C and
+    # q.n contractions become partial sums merged by tiny all-reduces.
+    q = constrain(q, "batch", None, "xlstm_dk")
+    k = constrain(k, "batch", None, "xlstm_dk")
+    c = f_t[..., None, None] * state.c + i_t[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f_t[..., None] * state.n + i_t[..., None] * k
+    c = constrain(c, "batch", None, "xlstm_dk", None)
+    n = constrain(n, "batch", None, "xlstm_dk")
+    scale = 1.0 / jnp.sqrt(hd)
+    num = jnp.einsum("bhk,bhkv->bhv", q, c) * scale
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)) * scale, 1.0)
+    y = (num / denom[..., None])[:, None].astype(x.dtype)  # (b, 1, h, dv)
+    y = y * gate_z
+    return jnp.einsum("bshv,hvd->bsd", y, p["w_down"]), MLSTMState(c, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (b, h, hd)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray  # (b, h, hd) log-space stabilizer
+
+
+def init_slstm(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_up, nh, hd = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_up": common.init_dense(ks[0], (d, d_up), dtype),
+        # four gates (z, i, f, o) from input
+        "w_gates": common.init_dense(ks[1], (d_up, nh, 4 * hd), jnp.float32),
+        # block-diagonal recurrent weights per head
+        "r_gates": common.init_dense(ks[2], (nh, hd, 4 * hd), jnp.float32),
+        "b_gates": jnp.zeros((nh, 4 * hd)),
+        "w_down": common.init_dense(ks[3], (d_up, d), dtype),
+    }
+
+
+def _slstm_cell(p, xg, state: SLSTMState) -> SLSTMState:
+    """xg: (b, h, 4*hd) pre-activations from the input path."""
+    hd = state.c.shape[-1]
+    rec = jnp.einsum("bhk,hkg->bhg", state.h, p["r_gates"])
+    g = xg + rec + p["b_gates"]
+    z_t = jnp.tanh(g[..., :hd])
+    log_i = jnp.clip(g[..., hd : 2 * hd], -GATE_CLIP, GATE_CLIP)
+    log_f = jax.nn.log_sigmoid(g[..., 2 * hd : 3 * hd])
+    o_t = jax.nn.sigmoid(g[..., 3 * hd :])
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    c = f_p * state.c + i_p * z_t
+    n = f_p * state.n + i_p
+    h = o_t * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_train(p, x, cfg: ArchConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    d_up, nh, hd = _dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"]).astype(jnp.float32)
+    xg = jnp.einsum("bse,ehg->bshg", up, p["w_gates"])  # (b,s,h,4hd)
+
+    def step(state, xg_t):
+        new = _slstm_cell(p, xg_t, state)
+        return new, new.h
+
+    state0 = init_slstm_state(cfg, b)
+    _, hs = jax.lax.scan(step, state0, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, nh * hd).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["w_down"])
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> SLSTMState:
+    _, nh, hd = _dims(cfg)
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return SLSTMState(z(), z(), z(), z() - 30.0)
+
+
+def slstm_decode(p, x, state: SLSTMState, cfg: ArchConfig):
+    b = x.shape[0]
+    d_up, nh, hd = _dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"]).astype(jnp.float32)
+    xg = jnp.einsum("bse,ehg->bshg", up, p["w_gates"])[:, 0]
+    new = _slstm_cell(p, xg, state)
+    y = new.h.reshape(b, 1, nh * hd).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["w_down"]), new

@@ -1,0 +1,4 @@
+"""Optimizer substrate (AdamW + schedules), self-contained (no optax)."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import cosine_warmup  # noqa: F401

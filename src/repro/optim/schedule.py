@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    """Scale factor in [min_ratio, 1]: linear warmup then cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    progress = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,10 @@
+"""Logical-axis sharding rules for the model/substrate stack."""
+
+from repro.sharding.specs import (  # noqa: F401
+    ShardingRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    constrain,
+    set_rules,
+    get_rules,
+)

@@ -1,0 +1,112 @@
+"""Logical axis names -> mesh axes (MaxText-style rules table).
+
+Model code annotates tensors with *logical* axes ("batch", "embed",
+"mlp", "heads", ...).  The launcher installs a rules table mapping
+logical axes to physical mesh axes; `constrain` resolves the table and
+emits a with_sharding_constraint when a mesh is active, and is a no-op
+on bare CPU (unit tests / smoke tests).
+
+Physical axes of the production mesh: ("pod",) "data", "model".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis -> mesh axis (or tuple of axes, or None)."""
+
+    rules: Mapping[str, tuple[str, ...] | str | None]
+
+    def spec(self, logical_axes: Sequence[str | None]) -> P:
+        parts = []
+        for ax in logical_axes:
+            if ax is None:
+                parts.append(None)
+            else:
+                parts.append(self.rules.get(ax))
+        return P(*parts)
+
+    def replace(self, **updates) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(updates)
+        return ShardingRules(merged)
+
+
+# Batch sharded over pod+data (pure data parallel across pods);
+# width dims (mlp, heads, vocab, expert-ff) over the model axis.
+DEFAULT_RULES = ShardingRules(
+    {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "cache_seq": None,  # flipped to "model" for long-context decode
+        "embed": None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": None,  # kv heads replicated (GQA count < axis size)
+        "head_dim": None,
+        "vocab": "model",
+        "expert": None,  # "model" under expert-parallel MoE
+        "expert_mlp": "model",  # expert FFN width under tensor-parallel MoE
+        "ssm_inner": "model",
+        "ssm_state": None,
+        # xLSTM head feature axis (dk/dv): sharded over "model" so the
+        # q/k/v/gate projections reduce-scatter instead of all-reducing
+        # ~1 GB replicated activations (SSPerf-E) and the (b,h,dk,dv)
+        # matrix memory shards instead of replicating (SSPerf-D).
+        "xlstm_dk": "model",
+        "conv_width": None,
+        "capacity": None,
+        "frames": None,
+    }
+)
+
+_ACTIVE_RULES: ShardingRules = DEFAULT_RULES
+
+
+def set_rules(rules: ShardingRules) -> None:
+    global _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+
+
+def get_rules() -> ShardingRules:
+    return _ACTIVE_RULES
+
+
+def logical_to_spec(logical_axes: Sequence[str | None], rules: ShardingRules | None = None) -> P:
+    return (rules or _ACTIVE_RULES).spec(logical_axes)
+
+
+def _mesh_active() -> bool:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            return True
+    except Exception:
+        pass
+    try:  # legacy `with mesh:` context (pre-use_mesh API)
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            env_mesh = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        return not env_mesh.empty
+    except Exception:
+        return False
+
+
+def constrain(x, *logical_axes: str | None, rules: ShardingRules | None = None):
+    """Annotate activation x with logical axes; no-op without a mesh."""
+    if not _mesh_active():
+        return x
+    spec = logical_to_spec(logical_axes, rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

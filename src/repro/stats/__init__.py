@@ -1,0 +1,1 @@
+"""Statistical substrate: synthetic generators and metrics."""

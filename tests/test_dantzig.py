@@ -1,0 +1,81 @@
+"""Dantzig solver unit tests: feasibility, LP-oracle agreement, batching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.optimize import linprog
+
+from repro.core.dantzig import DantzigConfig, kkt_violation, solve_dantzig
+from repro.stats.synthetic import ar1_covariance
+
+CFG = DantzigConfig(max_iters=1500)
+
+
+def _lp_dantzig(a: np.ndarray, b: np.ndarray, lam: float) -> np.ndarray:
+    """Exact LP oracle: min ||x||_1 s.t. ||A x - b||_inf <= lam.
+
+    x = u - v, u,v >= 0; minimize 1^T(u+v) s.t. -lam <= A(u-v) - b <= lam.
+    """
+    d = a.shape[0]
+    c = np.ones(2 * d)
+    a_ub = np.vstack([np.hstack([a, -a]), np.hstack([-a, a])])
+    b_ub = np.concatenate([b + lam, lam - b])
+    res = linprog(c, A_ub=a_ub, b_ub=b_ub, bounds=[(0, None)] * 2 * d,
+                  method="highs")
+    assert res.success, res.message
+    x = res.x[:d] - res.x[d:]
+    return x
+
+
+@pytest.mark.parametrize("d,seed", [(10, 0), (25, 1)])
+def test_matches_lp_oracle(d, seed):
+    rng = np.random.default_rng(seed)
+    a = ar1_covariance(d, 0.6).astype(np.float32)
+    x_true = np.zeros(d)
+    x_true[:3] = [1.5, -1.0, 0.5]
+    b = a @ x_true + 0.01 * rng.standard_normal(d)
+    lam = 0.1
+    x_lp = _lp_dantzig(a.astype(np.float64), b.astype(np.float64), lam)
+    x_admm = np.asarray(solve_dantzig(jnp.asarray(a), jnp.asarray(b, jnp.float32),
+                                      lam, CFG))
+    # same objective to a few percent, and feasible
+    assert np.abs(x_admm).sum() <= np.abs(x_lp).sum() * 1.05 + 1e-3
+    assert float(kkt_violation(jnp.asarray(a), jnp.asarray(b, jnp.float32),
+                               jnp.asarray(x_admm), lam)) < 5e-3
+
+
+def test_feasibility_and_shrinkage():
+    d = 40
+    a = jnp.asarray(ar1_covariance(d, 0.8), jnp.float32)
+    key = jax.random.PRNGKey(2)
+    b = jax.random.normal(key, (d,))
+    prev_l1 = None
+    for lam in [0.05, 0.2, 0.5]:
+        x = solve_dantzig(a, b, lam, CFG)
+        assert float(kkt_violation(a, b, x, lam)) < 1e-2
+        l1 = float(jnp.sum(jnp.abs(x)))
+        if prev_l1 is not None:
+            # larger lam -> weaker constraint -> sparser/smaller solution
+            assert l1 <= prev_l1 + 1e-4
+        prev_l1 = l1
+
+
+def test_batched_rhs_matches_single():
+    d = 20
+    a = jnp.asarray(ar1_covariance(d, 0.5), jnp.float32)
+    rhs = jax.random.normal(jax.random.PRNGKey(3), (d, 4))
+    lam = 0.15
+    batched = solve_dantzig(a, rhs, lam, CFG)
+    for j in range(4):
+        single = solve_dantzig(a, rhs[:, j], lam, CFG)
+        np.testing.assert_allclose(batched[:, j], single, atol=1e-5)
+
+
+def test_zero_lam_large_recovers_zero():
+    # with lam >= ||b||_inf, beta = 0 is optimal
+    d = 15
+    a = jnp.eye(d)
+    b = jnp.ones((d,)) * 0.1
+    x = solve_dantzig(a, b, 0.2, CFG)
+    np.testing.assert_allclose(np.asarray(x), 0.0, atol=1e-6)

@@ -1,0 +1,67 @@
+"""Head padding (llama4 40->48 on a 16-wide axis) is semantics-preserving."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model_zoo
+from repro.models.attention import pad_head_mask
+
+
+def _pad_like(a, b, kv, g_old, g_new):
+    if a.shape == b.shape:
+        return a
+    out = jnp.zeros(b.shape, b.dtype)
+    h_axis = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y][0]
+    for k in range(kv):
+        src = [slice(None)] * a.ndim
+        dst = [slice(None)] * a.ndim
+        src[h_axis] = slice(k * g_old, (k + 1) * g_old)
+        dst[h_axis] = slice(k * g_new, k * g_new + g_old)
+        out = out.at[tuple(dst)].set(a[tuple(src)])
+    return out
+
+
+def test_padded_forward_matches_unpadded():
+    cfg = configs.smoke_config(configs.get_config("llama4-maverick-400b-a17b"))
+    cfg_pad = dataclasses.replace(cfg, pad_heads_to=6)  # 4 heads, kv=2: g 2->3
+    m0 = model_zoo.build_model(cfg)
+    m1 = model_zoo.build_model(cfg_pad)
+    p0 = m0.init(jax.random.PRNGKey(0))
+    p1 = m1.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    l0, _ = m0.forward(p0, toks)
+    kv = cfg.num_kv_heads
+    p1c = jax.tree.map(
+        lambda a, b: _pad_like(a, b, kv, cfg.num_heads // kv, 6 // kv), p0, p1
+    )
+    l1c, _ = m1.forward(p1c, toks)
+    np.testing.assert_allclose(
+        np.asarray(l1c, np.float32), np.asarray(l0, np.float32), atol=2e-3, rtol=1e-3
+    )
+
+
+def test_pad_mask_structure():
+    cfg = configs.get_config("llama4-maverick-400b-a17b")
+    assert cfg.padded_heads == 48 and cfg.num_heads == 40
+    mask = pad_head_mask(cfg)
+    assert mask.shape == (48,)
+    assert int(mask.sum()) == 40
+    # per-group tails are the pad slots: groups of 6, last slot padded
+    g_new = 48 // cfg.num_kv_heads  # 6
+    g_old = 40 // cfg.num_kv_heads  # 5
+    m = np.asarray(mask).reshape(cfg.num_kv_heads, g_new)
+    assert (m[:, :g_old] == True).all()  # noqa: E712
+    assert (m[:, g_old:] == False).all()  # noqa: E712
+
+
+def test_padded_heads_divisible_by_model_axis():
+    """Every attention-bearing arch must shard its heads over 16 devices."""
+    for name in configs.list_archs():
+        cfg = configs.get_config(name)
+        has_attn = any(k.startswith("attn") for k in cfg.pattern) or cfg.encoder_layers
+        if has_attn:
+            assert cfg.padded_heads % 16 == 0, (name, cfg.padded_heads)

@@ -1,0 +1,122 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels run under interpret=True on CPU (the kernel body itself is
+executed); on a TPU host the same tests exercise the Mosaic path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.gram import gram_pallas
+from repro.kernels.soft_threshold import soft_threshold_pallas
+
+
+@pytest.mark.parametrize("n,d", [(8, 8), (32, 16), (100, 50), (257, 130), (64, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_matches_ref(n, d, dtype):
+    key = jax.random.PRNGKey(n * 1000 + d)
+    x = jax.random.normal(key, (n, d)).astype(dtype)
+    mu = jnp.mean(x.astype(jnp.float32), axis=0).astype(dtype)
+    out = gram_pallas(x, mu, block_n=32, block_d=16, interpret=True)
+    expected = ref.gram_ref(x.astype(jnp.float32), mu.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 0.35
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8), (16, 64), (128, 128)])
+def test_gram_block_shapes(blocks):
+    bn, bd = blocks
+    x = jax.random.normal(jax.random.PRNGKey(0), (48, 24))
+    mu = jnp.mean(x, axis=0)
+    out = gram_pallas(x, mu, block_n=bn, block_d=bd, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.gram_ref(x, mu)),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_gram_padding_rows_are_neutral():
+    # n not a multiple of block: padded rows must contribute zero
+    x = jax.random.normal(jax.random.PRNGKey(1), (13, 8))
+    mu = jnp.mean(x, axis=0)
+    out = gram_pallas(x, mu, block_n=8, block_d=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.gram_ref(x, mu)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(16,), (7,), (4, 36), (130, 600), (1, 1)])
+@pytest.mark.parametrize("t", [0.0, 0.05, 1.5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_soft_threshold_matches_ref(shape, t, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(42), shape) * 2).astype(dtype)
+    out = soft_threshold_pallas(x, t, block_r=8, block_c=16, interpret=True)
+    expected = ref.soft_threshold_ref(x, jnp.asarray(t, dtype))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+def test_soft_threshold_in_solver_path():
+    """The kernel-enabled Dantzig solve agrees with the jnp path."""
+    from repro.core.dantzig import DantzigConfig, solve_dantzig
+    from repro.stats.synthetic import ar1_covariance
+
+    d = 24
+    a = jnp.asarray(ar1_covariance(d, 0.6), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(7), (d,))
+    x_plain = solve_dantzig(a, b, 0.1, DantzigConfig(max_iters=300, use_kernel=False))
+    x_kern = solve_dantzig(a, b, 0.1, DantzigConfig(max_iters=300, use_kernel=True))
+    np.testing.assert_allclose(np.asarray(x_plain), np.asarray(x_kern),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused Dantzig/CLIME ADMM solve (SSPerf-A2)
+# ---------------------------------------------------------------------------
+
+from repro.core.dantzig import DantzigConfig, kkt_violation, solve_dantzig  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.kernels.dantzig_fused import dantzig_fused_pallas  # noqa: E402
+from repro.stats.synthetic import ar1_covariance  # noqa: E402
+
+
+@pytest.mark.parametrize("d,k,iters", [(16, 1, 50), (64, 4, 200), (40, 16, 120),
+                                       (128, 8, 80)])
+def test_dantzig_fused_matches_oracle(d, k, iters):
+    a = jnp.asarray(ar1_covariance(d, 0.7), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(d + k), (d, k))
+    lam = 0.1
+    evals, q = jnp.linalg.eigh(a)
+    inv = 1.0 / (evals**2 + 1.0)
+    out_k = dantzig_fused_pallas(a, q, inv, b, lam, iters=iters, interpret=True)
+    out_r = ref.dantzig_fused_ref(a, q, inv, b, lam, iters=iters)
+    # f32 accumulation-order drift grows with iteration count
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=5e-4 * (iters / 50), rtol=1e-3)
+
+
+def test_dantzig_fused_matches_scan_solver():
+    """The kernel and the lax.scan solver share hyperparams -> same sol."""
+    d = 48
+    a = jnp.asarray(ar1_covariance(d, 0.8), jnp.float32)
+    # realistic CLIME right-hand sides (unit vectors) -- bounded solutions
+    b = jnp.eye(d)[:, ::12]
+    lam = 0.08
+    out_k = ops.dantzig_fused(a, b, lam, iters=300)
+    out_s = solve_dantzig(a, b, lam, DantzigConfig(max_iters=300, adapt_rho=False))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_s),
+                               atol=5e-3, rtol=5e-3)
+    # and both are near-feasible
+    assert float(jnp.max(kkt_violation(a, b, out_k, lam))) < 0.05
+
+
+def test_dantzig_fused_single_rhs_squeeze():
+    d = 32
+    a = jnp.asarray(ar1_covariance(d, 0.5), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    out = ops.dantzig_fused(a, b, 0.2, iters=200)
+    assert out.shape == (d,)
+    assert float(jnp.max(kkt_violation(a, b, out, 0.2))) < 0.02

@@ -1,0 +1,75 @@
+"""Multi-class distributed sparse LDA (the paper's future-work extension)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import multiclass as mc
+from repro.core.dantzig import DantzigConfig
+from repro.stats import synthetic
+
+CFG = DantzigConfig(max_iters=500)
+K = 4
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return synthetic.make_mc_problem(d=60, num_classes=K, n_signal=5)
+
+
+def test_mc_suff_stats(problem):
+    xs, labels = synthetic.sample_mc_machines(jax.random.PRNGKey(0), problem, 1, 4000)
+    stats = mc.mc_suff_stats(xs[0], labels[0], K)
+    assert float(jnp.max(jnp.abs(stats.sigma - problem.sigma))) < 0.2
+    assert float(jnp.max(jnp.abs(stats.means - problem.means))) < 0.25
+    # within-class scatter is PSD and roughly unit-diagonal for AR(1)
+    evals = np.linalg.eigvalsh(np.asarray(stats.sigma, np.float64))
+    assert evals.min() > -1e-5
+
+
+def test_mc_reduces_to_binary(problem):
+    """At K=2 the rule reduces to the paper's Fisher rule direction."""
+    p2 = synthetic.make_mc_problem(d=40, num_classes=2, n_signal=5)
+    # beta_1 - beta_0 = Theta (mu1 - mu0) (the paper's beta*, up to sign)
+    diff = p2.betas[:, 1] - p2.betas[:, 0]
+    paper = p2.theta @ (p2.means[1] - p2.means[0])
+    np.testing.assert_allclose(np.asarray(diff), np.asarray(paper), atol=1e-4)
+
+
+def test_mc_distributed_recovers_directions(problem):
+    d = problem.sigma.shape[0]
+    m, n = 4, 500
+    xs, labels = synthetic.sample_mc_machines(jax.random.PRNGKey(1), problem, m, n)
+    b1 = float(jnp.max(jnp.sum(jnp.abs(problem.betas), axis=0)))
+    lam = 0.3 * math.sqrt(math.log(d) / n) * b1
+    t = 0.5 * math.sqrt(math.log(d) / (m * n)) * b1
+    beta, means = mc.simulated_distributed_mc_slda(xs, labels, K, lam, lam, t, CFG)
+    assert beta.shape == (d, K)
+    # directions correlate with truth
+    for k in range(K):
+        bt, bs = beta[:, k], problem.betas[:, k]
+        cos = float(bt @ bs / (jnp.linalg.norm(bt) * jnp.linalg.norm(bs) + 1e-9))
+        assert cos > 0.75, (k, cos)
+
+
+def test_mc_distributed_beats_naive_and_classifies(problem):
+    d = problem.sigma.shape[0]
+    m, n = 4, 400
+    xs, labels = synthetic.sample_mc_machines(jax.random.PRNGKey(2), problem, m, n)
+    b1 = float(jnp.max(jnp.sum(jnp.abs(problem.betas), axis=0)))
+    lam = 0.3 * math.sqrt(math.log(d) / n) * b1
+    t = 0.5 * math.sqrt(math.log(d) / (m * n)) * b1
+    beta_d, means = mc.simulated_distributed_mc_slda(xs, labels, K, lam, lam, t, CFG)
+    beta_n, _ = mc.simulated_naive_mc_slda(xs, labels, K, lam, CFG)
+    err_d = float(jnp.linalg.norm(beta_d - problem.betas))
+    err_n = float(jnp.linalg.norm(beta_n - problem.betas))
+    assert err_d < err_n, (err_d, err_n)
+
+    # held-out classification clearly above chance (K=4 -> 0.25)
+    zs, zl = synthetic.sample_mc_machines(jax.random.PRNGKey(3), problem, 1, 2000)
+    pred = mc.mc_classify(zs[0], beta_d, means)
+    acc = float(jnp.mean(pred == zl[0]))
+    assert acc > 0.7, acc

@@ -1,0 +1,159 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import slda
+from repro.core.dantzig import DantzigConfig, kkt_violation, solve_dantzig
+from repro.kernels import ref as kref
+
+
+finite_f32 = lambda shape: hnp.arrays(
+    np.float32, shape,
+    elements=st.floats(-50, 50, width=32, allow_nan=False, allow_infinity=False),
+)
+
+
+@given(finite_f32((17,)), st.floats(0, 10))
+@settings(max_examples=50, deadline=None)
+def test_hard_threshold_properties(x, t):
+    out = np.asarray(slda.hard_threshold(jnp.asarray(x), t))
+    # idempotent
+    out2 = np.asarray(slda.hard_threshold(jnp.asarray(out), t))
+    np.testing.assert_array_equal(out, out2)
+    # kept entries unchanged, zeroed entries were <= t
+    kept = out != 0
+    np.testing.assert_array_equal(out[kept], x[kept])
+    assert np.all(np.abs(x[~kept]) <= t + 1e-6)
+    # support never grows
+    assert np.sum(out != 0) <= np.sum(x != 0)
+
+
+@given(finite_f32((9, 5)))
+@settings(max_examples=30, deadline=None)
+def test_covariance_psd_and_shift_invariant(x):
+    mu = x.mean(0)
+    g = np.asarray(kref.gram_ref(jnp.asarray(x), jnp.asarray(mu)))
+    # symmetric PSD
+    np.testing.assert_allclose(g, g.T, atol=1e-3)
+    evals = np.linalg.eigvalsh(g.astype(np.float64))
+    assert evals.min() > -1e-2
+    # shift invariance: adding a constant shifts the mean, not the Gram
+    shift = np.float32(3.25)
+    g2 = np.asarray(kref.gram_ref(jnp.asarray(x + shift), jnp.asarray(mu + shift)))
+    np.testing.assert_allclose(g, g2, atol=2e-2, rtol=1e-4)
+
+
+@given(finite_f32((8,)), st.floats(0.01, 5))
+@settings(max_examples=50, deadline=None)
+def test_soft_threshold_ref_properties(x, t):
+    out = np.asarray(kref.soft_threshold_ref(jnp.asarray(x), t))
+    # shrink by exactly t toward zero, never across
+    assert np.all(np.abs(out) <= np.maximum(np.abs(x) - t, 0) + 1e-5)
+    assert np.all(out * x >= -1e-6)  # sign preserved (or zero)
+    # 1-Lipschitz w.r.t. input
+    y = x + np.float32(0.1)
+    outy = np.asarray(kref.soft_threshold_ref(jnp.asarray(y), t))
+    assert np.all(np.abs(outy - out) <= 0.1 + 1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.5))
+@settings(max_examples=10, deadline=None)
+def test_dantzig_always_feasible(seed, lam):
+    """Solver output satisfies the l_inf constraint for random PSD systems."""
+    d = 12
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((d, d)).astype(np.float32)
+    a = q @ q.T / d + 0.5 * np.eye(d, dtype=np.float32)
+    b = rng.standard_normal(d).astype(np.float32)
+    lam = np.float32(max(lam, 0.1 * np.abs(b).max()))
+    x = solve_dantzig(jnp.asarray(a), jnp.asarray(b), float(lam),
+                      DantzigConfig(max_iters=1200))
+    assert np.isfinite(np.asarray(x)).all()
+    assert float(kkt_violation(jnp.asarray(a), jnp.asarray(b), x, float(lam))) < 2e-2
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_debias_exact_when_theta_exact(seed):
+    """With Theta = Sigma^{-1} exactly, debias yields the OLS-like fix:
+    beta_tilde = beta_hat - Sigma^{-1}(Sigma beta_hat - mu_d)
+              = Sigma^{-1} mu_d  (independent of beta_hat)."""
+    d = 10
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((d, d)).astype(np.float32)
+    sigma = q @ q.T / d + np.eye(d, dtype=np.float32)
+    theta = np.linalg.inv(sigma.astype(np.float64)).astype(np.float32)
+    mu_d = rng.standard_normal(d).astype(np.float32)
+    beta_hat = rng.standard_normal(d).astype(np.float32)
+    stats = slda.SuffStats(jnp.asarray(sigma), jnp.asarray(mu_d),
+                           jnp.zeros(d), jnp.asarray(5), jnp.asarray(5))
+    bt = slda.debias(stats, jnp.asarray(beta_hat), jnp.asarray(theta))
+    target = np.linalg.solve(sigma.astype(np.float64), mu_d.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(bt), target, rtol=2e-2, atol=2e-2)
+
+
+@given(finite_f32((3, 6, 4)), st.floats(0.1, 2))
+@settings(max_examples=20, deadline=None)
+def test_aggregate_of_identical_is_fixed_point(xs, t):
+    """Averaging m identical debiased estimators == one estimator + HT."""
+    one = jnp.asarray(xs[0, 0])
+    stack = jnp.broadcast_to(one, (5, 4))
+    agg = slda.aggregate(stack, t)
+    np.testing.assert_allclose(
+        np.asarray(agg), np.asarray(slda.hard_threshold(one, t)), atol=1e-6
+    )
+
+
+@given(finite_f32((12,)), st.floats(0.05, 2.0))
+@settings(max_examples=25, deadline=None)
+def test_int8_quantize_roundtrip_bounded(x, scale_mag):
+    """Symmetric int8 quantization error is bounded by scale/2 per entry."""
+    from repro.models.attention import _quantize_token
+
+    x = jnp.asarray(x * scale_mag).reshape(1, 1, 12, 1)
+    q, s = _quantize_token(x, axis=2)
+    deq = q.astype(np.float32) * s
+    err = np.max(np.abs(np.asarray(deq - x)))
+    # half-step of the quantization grid (+ float slack)
+    assert err <= float(s.max()) * 0.5 + 1e-6
+
+
+@given(st.integers(2, 5), st.integers(20, 40))
+@settings(max_examples=10, deadline=None)
+def test_mc_stats_match_binary_stats(num_classes, d):
+    """mc_suff_stats at K=2 equals the paper's pooled two-class stats."""
+    from repro.core.multiclass import mc_suff_stats
+    from repro.core.slda import suff_stats
+
+    n = 64
+    key = jax.random.PRNGKey(num_classes * 100 + d)
+    x = jax.random.normal(key, (n, d))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n, d)) + 1.0
+    stats2 = suff_stats(x, y)
+    z = jnp.concatenate([x, y])
+    labels = jnp.concatenate([jnp.zeros(n, jnp.int32), jnp.ones(n, jnp.int32)])
+    statsK = mc_suff_stats(z, labels, 2)
+    np.testing.assert_allclose(np.asarray(statsK.sigma), np.asarray(stats2.sigma),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(statsK.means[0]), np.asarray(stats2.mu1),
+                               atol=1e-5)
+
+
+@given(finite_f32((30, 3)), st.floats(0.01, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_mc_classify_shift_invariant(beta_like, t):
+    """Adding a constant to all scores never changes the argmax class."""
+    from repro.core.multiclass import mc_classify
+
+    d, K = 10, 3
+    key = jax.random.PRNGKey(3)
+    z = jax.random.normal(key, (8, d))
+    beta = jnp.asarray(beta_like.reshape(-1)[: d * K].reshape(d, K)) * t
+    means = jax.random.normal(jax.random.fold_in(key, 1), (K, d))
+    pred1 = mc_classify(z, beta, means)
+    pred2 = mc_classify(z + 0.0, beta, means)
+    np.testing.assert_array_equal(np.asarray(pred1), np.asarray(pred2))
