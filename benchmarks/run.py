@@ -16,6 +16,7 @@ from benchmarks import (
     corollary48_threshold,
     fig1_machines,
     fig2_fixed_n,
+    fused_solver,
     roofline,
     table1_speedup,
     table2_real,
@@ -28,6 +29,7 @@ BENCHES = [
     ("table1_speedup (wall-clock vs m)", table1_speedup.main),
     ("table2_real (heart-disease surrogate)", table2_real.main),
     ("corollary48 (machine-count threshold m*)", corollary48_threshold.main),
+    ("fused_solver (scan vs fused-blocked kernel)", fused_solver.main),
     ("roofline (dry-run aggregation)", roofline.main),
 ]
 

@@ -8,14 +8,21 @@ into one (d, d) x (d, d) matmul per ADMM iteration -- MXU-shaped.
 
 Column parallelism: :func:`solve_clime_columns` solves an arbitrary
 column block, which :mod:`repro.core.distributed` shards across the
-``model`` mesh axis (each device owns d/|model| columns).
+``model`` mesh axis (each device owns ceil(d/|model|) columns).
+
+Solves route through :mod:`repro.core.solver_dispatch`, which picks
+the scan or (blocked) fused Pallas path from the shape and config.
+Both entry points take an optional per-column ``rho`` -- on the fused
+path it is a traced operand, so warm rho estimates carried across
+regularization-path sweeps never recompile.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.dantzig import DantzigConfig, solve_dantzig
+from repro.core.dantzig import DantzigConfig
+from repro.core.solver_dispatch import solve_dantzig
 
 
 def solve_clime_columns(
@@ -23,6 +30,7 @@ def solve_clime_columns(
     cols: jnp.ndarray,
     lam: float | jnp.ndarray,
     cfg: DantzigConfig = DantzigConfig(),
+    rho: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Solve CLIME for the columns indexed by ``cols``.
 
@@ -30,18 +38,19 @@ def solve_clime_columns(
     """
     d = sigma.shape[0]
     rhs = jnp.zeros((d, cols.shape[0]), sigma.dtype).at[cols, jnp.arange(cols.shape[0])].set(1.0)
-    return solve_dantzig(sigma, rhs, lam, cfg)
+    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho)
 
 
 def solve_clime(
     sigma: jnp.ndarray,
     lam: float | jnp.ndarray,
     cfg: DantzigConfig = DantzigConfig(),
+    rho: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Full (d, d) CLIME estimate (all columns in one batched solve)."""
     d = sigma.shape[0]
     rhs = jnp.eye(d, dtype=sigma.dtype)
-    return solve_dantzig(sigma, rhs, lam, cfg)
+    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho)
 
 
 def symmetrize_min(theta: jnp.ndarray) -> jnp.ndarray:

@@ -29,6 +29,22 @@ Extras, all fixed-shape and `lax.scan`-able:
   * residual-balancing adaptive rho -- free here because the cached
     factor (A^2+I) does not depend on rho; only the scaled duals and
     the shrink threshold rescale.
+
+Dispatch rules: :func:`solve_dantzig` is a thin shim over
+:func:`repro.core.solver_dispatch.solve_dantzig`, which picks between
+
+  * ``scan``           -- this module's ``lax.scan`` path: the default
+    (``cfg.fused=False``, the only path with adaptive rho), and the
+    fallback whenever A + Q cannot fit VMEM at all;
+  * ``fused``          -- whole batch in one VMEM-resident Pallas call
+    (``cfg.fused=True`` and the (d, k) footprint fits the budget);
+  * ``fused_blocked``  -- ``cfg.fused=True`` with the column batch
+    tiled over a Pallas grid (block size from ``pick_block_k``, or the
+    explicit ``cfg.block_k`` override).
+
+The selection happens at trace time from static shapes; per-column
+``rho`` is a traced operand on the fused paths, so warm rho estimates
+never recompile.
 """
 
 from __future__ import annotations
@@ -58,8 +74,13 @@ class DantzigConfig(NamedTuple):
     # use the Pallas soft-threshold kernel for the shrink step
     use_kernel: bool = False
     # run the WHOLE solve in the fused VMEM-resident Pallas kernel
-    # (kernels/dantzig_fused.py; fixed rho, no adaptation)
+    # (kernels/dantzig_fused.py; fixed rho, no adaptation).  Wide
+    # batches are tiled over a Pallas grid automatically -- see the
+    # dispatch rules in the module docstring.
     fused: bool = False
+    # explicit columns-per-grid-step override for the fused kernel
+    # (None = size the block to the VMEM budget)
+    block_k: int | None = None
 
 
 def estimate_sigma_max(a: jnp.ndarray, iters: int, key=None) -> jnp.ndarray:
@@ -90,30 +111,47 @@ class DantzigState(NamedTuple):
     rho: jnp.ndarray  # (k,) per-problem penalty
 
 
-@partial(jax.jit, static_argnames=("cfg",))
 def solve_dantzig(
     a: jnp.ndarray,
     b: jnp.ndarray,
     lam: jnp.ndarray | float,
     cfg: DantzigConfig = DantzigConfig(),
+    *,
+    rho: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Solve a (batch of) Dantzig problems sharing the same matrix ``a``.
+
+    Thin shim over :func:`repro.core.solver_dispatch.solve_dantzig`
+    (kept here so every historical import site keeps working); see the
+    module docstring for the dispatch rules.
 
     Args:
       a:   (d, d) PSD matrix.
       b:   (d,) or (d, k) right-hand side(s).
       lam: scalar or (k,) per-problem box radius.
+      rho: optional scalar or (k,) per-column ADMM penalty override.
     Returns:
       beta with the same trailing shape as ``b`` (the sparse ADMM copy,
       exactly sparse thanks to the shrink step).
     """
-    if cfg.fused:
-        from repro.kernels import ops as kops2
+    from repro.core import solver_dispatch  # deferred: avoids import cycle
 
-        return kops2.dantzig_fused(
-            a, b, lam, iters=cfg.max_iters, rho=cfg.rho, alpha=cfg.alpha
-        )
+    return solver_dispatch.solve_dantzig(a, b, lam, cfg, rho=rho)
 
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve_dantzig_scan(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    lam: jnp.ndarray | float,
+    cfg: DantzigConfig = DantzigConfig(),
+    rho0: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """The ``lax.scan`` ADMM implementation (adaptive rho lives here).
+
+    ``rho0`` optionally seeds the per-problem rho state (scalar or
+    (k,)); it defaults to ``cfg.rho``.
+    """
     squeeze = b.ndim == 1
     if squeeze:
         b = b[:, None]
@@ -128,9 +166,10 @@ def solve_dantzig(
         return q @ (inv_eig * (q.T @ v))
 
     zeros = jnp.zeros((d, k), a.dtype)
+    rho_init = (jnp.full((k,), cfg.rho, a.dtype) if rho0 is None
+                else jnp.broadcast_to(jnp.asarray(rho0, a.dtype), (k,)))
     init = DantzigState(
-        z=zeros, w=zeros, u1=zeros, u2=zeros,
-        rho=jnp.full((k,), cfg.rho, a.dtype),
+        z=zeros, w=zeros, u1=zeros, u2=zeros, rho=rho_init,
     )
 
     alpha = cfg.alpha

@@ -7,8 +7,10 @@ Mapping (see DESIGN.md §2):
     *entire* worker pipeline locally (suff stats -> beta_hat -> CLIME
     -> debias) with zero communication;
   * the paper's intra-machine CLIME column parallelism  <->  the
-    ``"model"`` axis: each model-device solves d/|model| Dantzig
-    columns and produces its slice of the debias correction, then one
+    ``"model"`` axis: each model-device solves ceil(d/|model|) Dantzig
+    columns (d is padded to a multiple of the axis; pad columns are
+    masked out of the gather, so any (d, |model|) pair is exact) and
+    produces its slice of the debias correction, then one
     ``all_gather`` over "model" reassembles beta_tilde (this gather is
     *inside* a machine in the paper's cost model);
   * the paper's one-round worker->master send + average  <->  a single
@@ -36,8 +38,28 @@ from repro.core.clime import solve_clime_columns
 from repro.core import slda
 
 
-def _worker_debiased(x, y, lam, lam_prime, cfg: DantzigConfig, model_axis: str | None):
-    """Worker pipeline on one machine; model-axis shards CLIME columns."""
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across JAX versions (``check_vma`` vs ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def _worker_debiased(x, y, lam, lam_prime, cfg: DantzigConfig,
+                     model_axis: str | None, model_axis_size: int = 1):
+    """Worker pipeline on one machine; model-axis shards CLIME columns.
+
+    The debias correction ``Theta^T (Sigma beta_hat - mu_d)`` must use
+    ALL d CLIME columns (Theorem 4.5's one-round guarantee is exact only
+    then), so when d is not a multiple of the model-axis size, d is
+    padded up to ``size * ceil(d / size)``: each device solves the same
+    number of columns, pad columns are clamped onto column d-1 and
+    their contribution is masked out of the gather.
+    """
     stats = slda.suff_stats(x, y)
     beta_hat = slda.local_slda(stats, lam, cfg)
     d = beta_hat.shape[0]
@@ -46,18 +68,21 @@ def _worker_debiased(x, y, lam, lam_prime, cfg: DantzigConfig, model_axis: str |
         resid = stats.sigma @ beta_hat - stats.mu_d
         correction = theta.T @ resid
     else:
-        size = jax.lax.axis_size(model_axis)
+        size = model_axis_size
         idx = jax.lax.axis_index(model_axis)
-        cols_per = d // size
-        # remainder columns go to the last device via padding with
-        # out-of-range -> clamp; d is padded upstream to a multiple.
+        cols_per = -(-d // size)  # ceil: pad d to a multiple of size
         cols = idx * cols_per + jnp.arange(cols_per)
-        theta_block = solve_clime_columns(stats.sigma, cols, lam_prime, cfg)
+        valid = cols < d
+        theta_block = solve_clime_columns(
+            stats.sigma, jnp.minimum(cols, d - 1), lam_prime, cfg
+        )
         resid = stats.sigma @ beta_hat - stats.mu_d
-        corr_slice = theta_block.T @ resid  # (cols_per,)
-        correction = jax.lax.all_gather(
+        corr_slice = jnp.where(valid, theta_block.T @ resid, 0.0)  # (cols_per,)
+        gathered = jax.lax.all_gather(
             corr_slice, model_axis, axis=0, tiled=True
-        )  # (d,)
+        )  # (size * cols_per,), device i's block at [i*cols_per, ...)
+        # global column j lands at position j; pad columns sit at >= d
+        correction = gathered[:d]
     return beta_hat - correction, beta_hat
 
 
@@ -82,22 +107,19 @@ def distributed_slda_shardmap(
     """
     data_axes = tuple(data_axes)
     in_spec = P(data_axes, None)
+    model_size = mesh.shape[model_axis] if model_axis is not None else 1
 
     def shard_fn(xs, ys):
-        beta_tilde, _ = _worker_debiased(xs, ys, lam, lam_prime, cfg, model_axis)
+        beta_tilde, _ = _worker_debiased(
+            xs, ys, lam, lam_prime, cfg, model_axis, model_size
+        )
         # ---- the single communication round of Algorithm 1 ----
         beta_mean = beta_tilde
         for ax in data_axes:
             beta_mean = jax.lax.pmean(beta_mean, ax)
         return slda.hard_threshold(beta_mean, t)
 
-    fn = jax.shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=(in_spec, in_spec),
-        out_specs=P(),
-        check_vma=False,
-    )
+    fn = _shard_map(shard_fn, mesh, (in_spec, in_spec), P())
     return fn(x, y)
 
 
@@ -119,13 +141,7 @@ def naive_averaged_slda_shardmap(
             beta_hat = jax.lax.pmean(beta_hat, ax)
         return beta_hat
 
-    fn = jax.shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=(P(data_axes, None), P(data_axes, None)),
-        out_specs=P(),
-        check_vma=False,
-    )
+    fn = _shard_map(shard_fn, mesh, (P(data_axes, None), P(data_axes, None)), P())
     return fn(x, y)
 
 

@@ -20,8 +20,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dantzig import DantzigConfig, solve_dantzig
+from repro.core.dantzig import DantzigConfig
 from repro.core.clime import solve_clime
+from repro.core.solver_dispatch import solve_dantzig
 from repro.kernels import ops as kops
 
 

@@ -1,0 +1,131 @@
+"""One dispatch layer for every Dantzig/CLIME solve in the system.
+
+Every solver entry point (:mod:`repro.core.slda`, :mod:`repro.core.clime`,
+:mod:`repro.core.distributed`) routes through :func:`solve_dantzig` here,
+which picks the implementation from the problem shape and config:
+
+``scan``
+    The ``lax.scan`` ADMM in :func:`repro.core.dantzig.solve_dantzig_scan`.
+    Selected when ``cfg.fused`` is False (it is the only path with
+    residual-balancing adaptive rho), or as the fallback when the fused
+    kernel cannot fit even one column block in VMEM (the two (d, d)
+    operands A and Q alone exceed the budget, d ≳ 1250 at f32 with the
+    default 12 MiB budget).
+
+``fused``
+    The Pallas kernel in :mod:`repro.kernels.dantzig_fused` with the
+    whole (d, k) batch in one VMEM-resident grid step.
+
+``fused_blocked``
+    The same kernel with the column batch tiled over a Pallas grid;
+    chosen when the single-block footprint exceeds the VMEM budget.
+    Block size comes from :func:`repro.kernels.dantzig_fused.pick_block_k`
+    (override with ``cfg.block_k``).
+
+The choice is made at trace time from static shapes, so it adds zero
+runtime cost and composes with jit/vmap/shard_map.  On non-TPU backends
+the fused kernel runs under the Pallas interpreter -- a correctness
+path, not a performance one; ``cfg.fused`` still selects it so tests
+exercise identical code on every backend.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import dantzig as _dantzig
+from repro.kernels import ops as kops
+from repro.kernels.dantzig_fused import (
+    DEFAULT_VMEM_BUDGET,
+    fused_block_vmem_bytes,
+    pick_block_k,
+)
+
+__all__ = [
+    "SolverChoice",
+    "select_solver",
+    "solve_dantzig",
+    "fused_block_vmem_bytes",
+    "DEFAULT_VMEM_BUDGET",
+]
+
+
+class SolverChoice(NamedTuple):
+    """Trace-time solver selection for a (d, k) Dantzig batch."""
+
+    kind: str  # "scan" | "fused" | "fused_blocked"
+    block_k: int | None = None  # columns per grid step (fused paths)
+
+
+def select_solver(
+    cfg: "_dantzig.DantzigConfig",
+    d: int,
+    k: int,
+    backend: str | None = None,
+) -> SolverChoice:
+    """Pick the solver implementation for a (d, k) batch.
+
+    ``backend`` is reserved for backend-specific budgets and currently
+    unused: the VMEM model is TPU's, and the interpreter honors the
+    same blocking so shapes validated on CPU behave identically on TPU.
+    """
+    del backend
+    if not cfg.fused:
+        return SolverChoice("scan")
+    bk = pick_block_k(d, k)
+    if bk is None:
+        # even one column per block cannot fit next to A and Q; an
+        # explicit cfg.block_k cannot override infeasibility
+        return SolverChoice("scan")
+    if cfg.block_k is not None:
+        # an override may force FINER blocking but never a block that
+        # busts the VMEM budget (bk from pick_block_k is the max that fits)
+        bk = max(1, min(cfg.block_k, k, bk))
+    if bk >= k:
+        return SolverChoice("fused", k)
+    return SolverChoice("fused_blocked", bk)
+
+
+def solve_dantzig(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    lam,
+    cfg: "_dantzig.DantzigConfig | None" = None,
+    *,
+    rho: jnp.ndarray | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Solve a (batch of) Dantzig problems via the dispatched implementation.
+
+    Args:
+      a:   (d, d) PSD matrix.
+      b:   (d,) or (d, k) right-hand side(s).
+      lam: scalar or (k,) per-problem box radius.
+      rho: optional scalar or (k,) per-column ADMM penalty.  On the
+           fused paths it is a traced operand (warm per-column
+           estimates never recompile); on the scan path it seeds the
+           adaptive-rho state in place of ``cfg.rho``.
+    Returns beta with the same trailing shape as ``b``, in ``b``'s
+    dtype on every path (so toggling ``cfg.fused`` never changes the
+    output dtype).
+    """
+    if cfg is None:
+        cfg = _dantzig.DantzigConfig()
+    squeeze = b.ndim == 1
+    b2 = b[:, None] if squeeze else b
+    d, k = b2.shape
+    choice = select_solver(cfg, d, k, backend)
+    if choice.kind == "scan":
+        out = _dantzig.solve_dantzig_scan(a, b2, lam, cfg, rho0=rho)
+        out = out.astype(b.dtype)
+    else:
+        out = kops.dantzig_fused(
+            a, b2, lam,
+            iters=cfg.max_iters,
+            rho=cfg.rho if rho is None else rho,
+            alpha=cfg.alpha,
+            block_k=choice.block_k,
+        )
+    return out[:, 0] if squeeze else out

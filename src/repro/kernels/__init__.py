@@ -2,6 +2,8 @@
 
 - ``gram``: mean-centered Gram/covariance accumulation (O(N d^2 / m)).
 - ``soft_threshold``: fused ADMM shrink step.
+- ``dantzig_fused``: whole Dantzig/CLIME ADMM solve, column batch
+  tiled over a Pallas grid so any (d, k) shape fits VMEM.
 
 Each kernel ships with a pure-jnp oracle in :mod:`repro.kernels.ref`.
 """

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fully fused Dantzig/CLIME ADMM solve (SSPerf-A2).
+"""Pallas TPU kernel: blocked, grid-parallel fused Dantzig/CLIME ADMM solve.
 
 The per-machine hot loop of the paper is the batched two-block ADMM in
 repro.core.dantzig.  Lowered through XLA it re-reads the (d, d) matrix
@@ -7,18 +7,34 @@ one of ~500 iterations -- the dry-run shows the estimator is
 memory-bound 107:1 (compute 1.4e-5 s vs memory 1.5e-3 s per solve at
 d=256).
 
-TPU adaptation: at CLIME scale (d <= ~1024) ALL loop-invariant operands
-fit in VMEM (d=256: A + Q + diag + 4 state blocks ~ 0.8 MB of the
-16 MB VMEM).  This kernel runs the entire solve in ONE pallas_call --
-a lax.fori_loop whose body is five (d,d)x(d,k) MXU matmuls plus
-clip/shrink on the VPU -- so HBM traffic collapses to one read of
-(A, Q, b) and one write of the solution: ~iters x fewer HBM bytes.
+TPU adaptation: the columns of a CLIME batch are independent problems
+that share only the loop-invariant operands (A, Q, inv).  The kernel
+therefore tiles the column batch k over a 1-D Pallas grid:
 
-Grid: single step; every BlockSpec is the whole (VMEM-resident) array.
-The batch dim k is the device's CLIME column shard (d / |model| axis).
-No adaptive rho inside the kernel (it is a per-column scalar control
-flow); callers pick rho once -- the exact-ADMM iteration is robust to
-it (see EXPERIMENTS.md SSPerf-A1).
+  grid step i owns columns [i*block_k, (i+1)*block_k) and runs the
+  ENTIRE solve for its block in VMEM -- a lax.fori_loop whose body is
+  four (d, d) x (d, block_k) MXU matmuls plus clip/shrink on the VPU.
+
+``block_k`` is chosen (see :func:`pick_block_k`) so that
+``A + Q + inv + b + out + 4 ADMM state blocks + loop temporaries`` fit
+the per-core VMEM budget.  A and Q are re-fetched once per block --
+still ~iters x fewer HBM bytes per block than the XLA scan path, which
+re-streams them every iteration.  When the whole batch fits, the grid
+collapses to a single step and the kernel degenerates to the original
+whole-array design.
+
+Tail handling: k is padded up to a multiple of ``block_k`` with
+neutral columns (b = 0, lam = 1, rho = 1, whose exact solution is 0),
+so *any* (d, k) shape is exact; the wrapper slices the pad columns off
+the output.  Columns never interact, so the pad is mathematically
+inert, not just approximately so.
+
+``rho`` is a per-column (1, k) *operand* rather than a compile-time
+scalar: callers (repro.core.clime) can reuse warm per-column rho
+estimates across calls without triggering recompilation.  ``iters``
+and ``alpha`` remain static.  No adaptive rho inside the kernel (it is
+per-column scalar control flow); the exact-ADMM iteration is robust to
+a fixed rho (see EXPERIMENTS.md SSPerf-A1).
 """
 
 from __future__ import annotations
@@ -29,14 +45,55 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Per-core VMEM is ~16 MiB; leave headroom for Mosaic's own buffers,
+# semaphores and the pipeline's double-buffered operand copies.
+DEFAULT_VMEM_BUDGET = 12 * 2**20
 
-def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, out_ref,
-                       *, iters: int, rho: float, alpha: float):
+
+def fused_block_vmem_bytes(d: int, block_k: int) -> int:
+    """f32 VMEM footprint of one grid step of the fused kernel.
+
+    a, q: d*d each; inv: d; b, out: d*block_k; lam, rho: block_k;
+    ADMM state (z, w, u1, u2): 4*d*block_k; loop temporaries
+    (beta, ab, relaxed copies): ~3*d*block_k.
+    """
+    return 4 * (2 * d * d + d + 9 * d * block_k + 2 * block_k)
+
+
+def pick_block_k(d: int, k: int, budget: int = DEFAULT_VMEM_BUDGET) -> int | None:
+    """Largest column-block size whose grid step fits the VMEM budget.
+
+    Returns ``k`` when the whole batch fits in one block, a smaller
+    (lane-friendly) block size when it must be tiled, or ``None`` when
+    even a single column cannot fit (A + Q alone blow the budget) --
+    callers fall back to the XLA scan solver in that case.
+    """
+    avail = budget // 4 - 2 * d * d - d
+    if avail <= 0:
+        return None
+    bk = avail // (9 * d + 2)
+    if bk < 1:
+        return None
+    if bk >= k:
+        return k
+    # round down to a full-lane multiple when possible; below 128 the
+    # budget forces lane-padded tiles either way, so settle for the
+    # f32 sublane granularity
+    if bk >= 128:
+        bk = (bk // 128) * 128
+    elif bk >= 8:
+        bk = (bk // 8) * 8
+    return bk
+
+
+def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, rho_ref, out_ref,
+                       *, iters: int, alpha: float):
     a = a_ref[...]  # (d, d) VMEM-resident across all iterations
     q = q_ref[...]  # (d, d) eigenvectors of A
     inv = inv_ref[...]  # (d, 1) 1/(eig^2 + 1)
-    b = b_ref[...]  # (d, k)
-    lam = lam_ref[...]  # (1, k)
+    b = b_ref[...]  # (d, block_k) this grid step's column block
+    lam = lam_ref[...]  # (1, block_k)
+    inv_rho = 1.0 / rho_ref[...]  # (1, block_k) per-column shrink threshold
 
     def matmul(m, x):
         return jax.lax.dot_general(
@@ -58,7 +115,7 @@ def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, out_ref,
         ab_r = alpha * ab + (1.0 - alpha) * (z + b)
         beta_r = alpha * beta + (1.0 - alpha) * w
         z = jnp.clip(ab_r - b + u1, -lam, lam)
-        w = shrink(beta_r + u2, 1.0 / rho)
+        w = shrink(beta_r + u2, inv_rho)
         u1 = u1 + ab_r - z - b
         u2 = u2 + beta_r - w
         return z, w, u1, u2
@@ -68,7 +125,7 @@ def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, out_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("iters", "rho", "alpha", "interpret")
+    jax.jit, static_argnames=("iters", "alpha", "block_k", "interpret")
 )
 def dantzig_fused_pallas(
     a: jnp.ndarray,
@@ -76,34 +133,57 @@ def dantzig_fused_pallas(
     inv_eig: jnp.ndarray,
     b: jnp.ndarray,
     lam: jnp.ndarray,
+    rho: jnp.ndarray | float = 1.0,
     *,
     iters: int = 500,
-    rho: float = 1.0,
     alpha: float = 1.7,
+    block_k: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Fused ADMM solve.  a,q: (d,d) f32; inv_eig: (d,); b: (d,k); lam: (k,).
+    """Blocked fused ADMM solve.
 
-    Returns the sparse ADMM copy w: (d, k).
+    Args:
+      a, q:    (d, d) f32 matrix and its eigenvectors.
+      inv_eig: (d,) 1/(eig^2 + 1).
+      b:       (d, k) right-hand sides.
+      lam:     scalar or (k,) per-column box radius.
+      rho:     scalar or (k,) per-column fixed ADMM penalty (an operand:
+               changing it does NOT recompile).
+      block_k: columns per grid step (None = whole batch in one block).
+    Returns the sparse ADMM copy w: (d, k) f32.
     """
     d, k = b.shape
+    if block_k is None:
+        block_k = k
+    block_k = max(1, min(block_k, k))
     inv2 = inv_eig.reshape(d, 1).astype(jnp.float32)
     lam2 = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (k,)).reshape(1, k)
-    kernel = functools.partial(
-        _fused_admm_kernel, iters=iters, rho=rho, alpha=alpha
-    )
-    return pl.pallas_call(
+    rho2 = jnp.broadcast_to(jnp.asarray(rho, jnp.float32), (k,)).reshape(1, k)
+    b2 = b.astype(jnp.float32)
+
+    num_blocks = -(-k // block_k)
+    k_pad = num_blocks * block_k
+    if k_pad != k:
+        # neutral tail columns: b = 0, lam = 1, rho = 1 solve exactly to 0
+        pad = k_pad - k
+        b2 = jnp.pad(b2, ((0, 0), (0, pad)))
+        lam2 = jnp.pad(lam2, ((0, 0), (0, pad)), constant_values=1.0)
+        rho2 = jnp.pad(rho2, ((0, 0), (0, pad)), constant_values=1.0)
+
+    kernel = functools.partial(_fused_admm_kernel, iters=iters, alpha=alpha)
+    out = pl.pallas_call(
         kernel,
-        grid=(1,),
+        grid=(num_blocks,),
         in_specs=[
             pl.BlockSpec((d, d), lambda i: (0, 0)),
             pl.BlockSpec((d, d), lambda i: (0, 0)),
             pl.BlockSpec((d, 1), lambda i: (0, 0)),
-            pl.BlockSpec((d, k), lambda i: (0, 0)),
-            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((d, block_k), lambda i: (0, i)),
+            pl.BlockSpec((1, block_k), lambda i: (0, i)),
+            pl.BlockSpec((1, block_k), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((d, k), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((d, k), jnp.float32),
+        out_specs=pl.BlockSpec((d, block_k), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((d, k_pad), jnp.float32),
         interpret=interpret,
-    )(a.astype(jnp.float32), q.astype(jnp.float32), inv2,
-      b.astype(jnp.float32), lam2)
+    )(a.astype(jnp.float32), q.astype(jnp.float32), inv2, b2, lam2, rho2)
+    return out[:, :k] if k_pad != k else out

@@ -1,12 +1,16 @@
 """Jit'd public wrappers over the Pallas kernels.
 
-On the CPU container the kernels execute under ``interpret=True``
+On a CPU container the kernels execute under ``interpret=True``
 (Pallas interpreter runs the kernel body on the host); on a real TPU
 the same call sites compile to Mosaic.  Callers never pass
-``interpret`` -- it is derived from the backend once at import time.
+``interpret`` -- it is derived from the backend *per call* (NOT at
+import time: tests and launch scripts may switch the backend via
+``jax.config`` after this module is imported).
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -14,35 +18,80 @@ import jax.numpy as jnp
 from repro.kernels.gram import gram_pallas
 from repro.kernels.soft_threshold import soft_threshold_pallas
 
-_INTERPRET = jax.default_backend() != "tpu"
+
+def _interpret() -> bool:
+    """Resolve interpret-vs-Mosaic from the backend active *now*."""
+    return jax.default_backend() != "tpu"
 
 
 def gram(x: jnp.ndarray, mu: jnp.ndarray, **kw) -> jnp.ndarray:
     """Mean-centered Gram matrix (X - mu)^T(X - mu), float32 accumulate."""
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return gram_pallas(x, mu, **kw)
 
 
 def soft_threshold(x: jnp.ndarray, t, **kw) -> jnp.ndarray:
     """Fused shrink: sign(x) * max(|x| - t, 0)."""
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return soft_threshold_pallas(x, t, **kw)
 
 
-def dantzig_fused(a, b, lam, *, iters=500, rho=1.0, alpha=1.7, **kw):
-    """Whole Dantzig/CLIME ADMM solve in one VMEM-resident kernel.
-
-    Computes the spectral factor outside the kernel (O(d^3) once), then
-    runs all iterations on-chip.  Returns (d, k) sparse solution.
-    """
+@functools.partial(
+    jax.jit, static_argnames=("iters", "alpha", "block_k", "interpret")
+)
+def _dantzig_fused_jit(a, b, lam, rho, *, iters, alpha, block_k, interpret):
+    """Spectral factor (O(d^3), cached by jit) + the blocked kernel."""
     from repro.kernels.dantzig_fused import dantzig_fused_pallas
 
-    kw.setdefault("interpret", _INTERPRET)
     evals, q = jnp.linalg.eigh(a.astype(jnp.float32))
     inv_eig = 1.0 / (evals * evals + 1.0)
+    out = dantzig_fused_pallas(a, q, inv_eig, b, lam, rho,
+                               iters=iters, alpha=alpha, block_k=block_k,
+                               interpret=interpret)
+    return out.astype(b.dtype)
+
+
+def dantzig_fused(a, b, lam, *, iters=500, rho=1.0, alpha=1.7,
+                  block_k=None, **kw):
+    """Whole Dantzig/CLIME ADMM solve in the blocked VMEM-resident kernel.
+
+    Computes the spectral factor outside the kernel (O(d^3) once), then
+    runs all iterations on-chip, one column block per grid step.
+
+    ``rho`` may be a scalar or a (k,) per-column array (a traced
+    operand -- warm per-column estimates do not recompile).  ``block_k``
+    of None lets :func:`repro.kernels.dantzig_fused.pick_block_k` size
+    the block to the VMEM budget.  Returns a (d, k) sparse solution in
+    ``b``'s dtype (the dispatch layer applies the same contract to the
+    scan path, so toggling ``cfg.fused`` never changes dtypes).
+    """
+    from repro.kernels.dantzig_fused import (
+        DEFAULT_VMEM_BUDGET, fused_block_vmem_bytes, pick_block_k,
+    )
+
+    interpret = kw.pop("interpret", None)
+    if interpret is None:
+        interpret = _interpret()
+    if kw:
+        raise TypeError(f"unexpected keyword arguments: {sorted(kw)}")
     squeeze = b.ndim == 1
     if squeeze:
         b = b[:, None]
-    out = dantzig_fused_pallas(a, q, inv_eig, b, lam,
-                               iters=iters, rho=rho, alpha=alpha, **kw)
+    if block_k is None:
+        block_k = pick_block_k(a.shape[0], b.shape[1])
+        if block_k is None:
+            if not interpret:
+                raise ValueError(
+                    f"dantzig_fused: A and Q at d={a.shape[0]} exceed the "
+                    "VMEM budget for any column block; use the scan solver "
+                    "(repro.core.solver_dispatch falls back automatically)")
+            block_k = b.shape[1]  # interpreter has no VMEM limit
+    elif not interpret:
+        bk = max(1, min(block_k, b.shape[1]))
+        if fused_block_vmem_bytes(a.shape[0], bk) > DEFAULT_VMEM_BUDGET:
+            raise ValueError(
+                f"dantzig_fused: block_k={block_k} at d={a.shape[0]} exceeds "
+                "the VMEM budget; pass block_k=None to auto-size the block")
+    out = _dantzig_fused_jit(a, b, lam, rho, iters=iters, alpha=alpha,
+                             block_k=block_k, interpret=interpret)
     return out[:, 0] if squeeze else out

@@ -22,13 +22,18 @@ def hard_threshold_ref(x: jnp.ndarray, t) -> jnp.ndarray:
 
 
 def dantzig_fused_ref(a, q, inv_eig, b, lam, *, iters=500, rho=1.0, alpha=1.7):
-    """Oracle for the fused ADMM kernel: identical math in plain jnp."""
+    """Oracle for the fused ADMM kernel: identical math in plain jnp.
+
+    ``rho`` may be a scalar or a (k,) per-column array, mirroring the
+    kernel's per-column rho operand.
+    """
     a = a.astype(jnp.float32)
     q = q.astype(jnp.float32)
     b = b.astype(jnp.float32)
     d, k = b.shape
     inv = inv_eig.reshape(d, 1).astype(jnp.float32)
     lam = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (k,)).reshape(1, k)
+    rho = jnp.broadcast_to(jnp.asarray(rho, jnp.float32), (k,)).reshape(1, k)
 
     def solve_m(v):
         return q @ (inv * (q.T @ v))

@@ -52,6 +52,8 @@ def _compile_costs(d, n_machines, n1, multi_pod, iters, variant):
                           out_shardings=NamedSharding(mesh, P())).lower(x_abs, y_abs)
         compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older JAX returns a 1-elem list
+        ca = ca[0] if ca else {}
     coll = collective_bytes(compiled.as_text())
     return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
             float(coll["total_bytes"]), coll, compiled)

@@ -1,0 +1,96 @@
+"""Solver dispatch rules: scan vs fused vs fused-blocked selection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dantzig import DantzigConfig, solve_dantzig, solve_dantzig_scan
+from repro.core.solver_dispatch import (
+    DEFAULT_VMEM_BUDGET,
+    SolverChoice,
+    select_solver,
+    fused_block_vmem_bytes,
+)
+from repro.core import solver_dispatch
+from repro.stats.synthetic import ar1_covariance
+
+
+def test_scan_selected_when_fused_off():
+    assert select_solver(DantzigConfig(), 64, 64) == SolverChoice("scan")
+    assert select_solver(DantzigConfig(fused=False), 2048, 2048).kind == "scan"
+
+
+def test_fused_single_block_for_small_shapes():
+    choice = select_solver(DantzigConfig(fused=True), 256, 64)
+    assert choice == SolverChoice("fused", 64)
+    assert fused_block_vmem_bytes(256, 64) <= DEFAULT_VMEM_BUDGET
+
+
+def test_fused_blocked_for_wide_batches():
+    choice = select_solver(DantzigConfig(fused=True), 768, 512)
+    assert choice.kind == "fused_blocked"
+    assert 0 < choice.block_k < 512
+    assert fused_block_vmem_bytes(768, choice.block_k) <= DEFAULT_VMEM_BUDGET
+
+
+def test_scan_fallback_when_operands_exceed_vmem():
+    # A + Q alone are 2 * 4096^2 * 4 B = 128 MiB >> VMEM
+    assert select_solver(DantzigConfig(fused=True), 4096, 8).kind == "scan"
+
+
+def test_explicit_block_k_override():
+    choice = select_solver(DantzigConfig(fused=True, block_k=16), 64, 64)
+    assert choice == SolverChoice("fused_blocked", 16)
+    # override is clamped to the batch width
+    choice = select_solver(DantzigConfig(fused=True, block_k=999), 64, 8)
+    assert choice == SolverChoice("fused", 8)
+
+
+def test_dispatch_entry_matches_scan_and_squeezes():
+    d = 30
+    a = jnp.asarray(ar1_covariance(d, 0.6), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    cfg_scan = DantzigConfig(max_iters=200, adapt_rho=False)
+    cfg_fused = DantzigConfig(max_iters=200, adapt_rho=False, fused=True)
+    out_scan = solve_dantzig(a, b, 0.1, cfg_scan)
+    out_fused = solve_dantzig(a, b, 0.1, cfg_fused)
+    assert out_scan.shape == out_fused.shape == (d,)
+    np.testing.assert_allclose(np.asarray(out_scan), np.asarray(out_fused),
+                               atol=1e-4)
+    # the shim in core.dantzig and the dispatch entry are the same path
+    out_direct = solver_dispatch.solve_dantzig(a, b, 0.1, cfg_scan)
+    np.testing.assert_array_equal(np.asarray(out_scan), np.asarray(out_direct))
+
+
+def test_output_dtype_uniform_across_paths():
+    """b.dtype out on BOTH paths: toggling cfg.fused never changes it."""
+    d = 16
+    a = jnp.asarray(ar1_covariance(d, 0.5), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (d, 2)).astype(jnp.bfloat16)
+    for fused in (False, True):
+        cfg = DantzigConfig(max_iters=50, adapt_rho=False, fused=fused)
+        assert solve_dantzig(a, b, 0.1, cfg).dtype == jnp.bfloat16
+
+
+def test_scan_accepts_warm_rho_seed():
+    """rho0 seeds the adaptive state; a converged solve is insensitive."""
+    d, k = 24, 5
+    a = jnp.asarray(ar1_covariance(d, 0.5), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (d, k))
+    base = solve_dantzig_scan(a, b, 0.1, DantzigConfig(max_iters=1200))
+    warm = solve_dantzig(a, b, 0.1, DantzigConfig(max_iters=1200),
+                         rho=jnp.full((k,), 2.0))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(warm), atol=5e-4)
+
+
+def test_clime_forwards_warm_rho():
+    from repro.core.clime import solve_clime_columns
+
+    d = 32
+    a = jnp.asarray(ar1_covariance(d, 0.6), jnp.float32)
+    cols = jnp.asarray([0, 5, 31])
+    cfg = DantzigConfig(max_iters=400, adapt_rho=False, fused=True)
+    cold = solve_clime_columns(a, cols, 0.1, cfg)
+    warm = solve_clime_columns(a, cols, 0.1, cfg,
+                               rho=jnp.ones((3,), jnp.float32))
+    np.testing.assert_allclose(np.asarray(cold), np.asarray(warm), atol=1e-6)

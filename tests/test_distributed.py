@@ -1,0 +1,116 @@
+"""Model-axis CLIME sharding: remainder columns must never be dropped.
+
+The debias correction ``Theta^T (Sigma beta_hat - mu_d)`` uses all d
+CLIME columns; these tests pin the padded+masked sharding against the
+unsharded simulation for d NOT a multiple of the model-axis size.
+Mesh runs happen in a subprocess with forced host devices (conftest
+keeps the main process at 1 device).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_in_subprocess(body: str, devices: int = 8, timeout: int = 480) -> str:
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(body)
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=REPO,
+    )
+    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
+    return res.stdout
+
+
+def test_remainder_columns_d7_size2():
+    """d=7 over a 2-wide model axis: 7 % 2 = 1 column must survive."""
+    out = _run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import (
+            distributed_slda_shardmap, simulated_distributed_slda,
+        )
+        from repro.core.dantzig import DantzigConfig
+        from repro.stats import synthetic
+
+        cfg = DantzigConfig(max_iters=200)
+        m, n1, n2, d = 1, 40, 40, 7
+        problem = synthetic.make_problem(d=d, n_signal=3)
+        xs, ys = synthetic.sample_machines(jax.random.PRNGKey(1), problem, m, n1, n2)
+        sim = simulated_distributed_slda(xs, ys, 0.2, 0.2, 0.05, cfg)
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        out = distributed_slda_shardmap(
+            mesh, xs.reshape(m * n1, d), ys.reshape(m * n2, d),
+            0.2, 0.2, 0.05, cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(sim), atol=1e-5)
+        print("REMAINDER7_OK")
+        """,
+        devices=2,
+    )
+    assert "REMAINDER7_OK" in out
+
+
+def test_remainder_columns_d70_size4():
+    """Acceptance case: d=70, |model|=4 agrees with the simulation to 1e-5."""
+    out = _run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np, math
+        from repro.core.distributed import (
+            distributed_slda_shardmap, simulated_distributed_slda,
+        )
+        from repro.core.dantzig import DantzigConfig
+        from repro.stats import synthetic
+
+        cfg = DantzigConfig(max_iters=200)
+        m, n1, n2, d = 2, 60, 60, 70
+        problem = synthetic.make_problem(d=d, n_signal=5)
+        xs, ys = synthetic.sample_machines(jax.random.PRNGKey(0), problem, m, n1, n2)
+        lam = 0.3 * math.sqrt(math.log(d) / (n1 + n2)) * 4
+        t = 0.25 * lam
+        sim = simulated_distributed_slda(xs, ys, lam, lam, t, cfg)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        out = distributed_slda_shardmap(
+            mesh, xs.reshape(m * n1, d), ys.reshape(m * n2, d),
+            lam, lam, t, cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(sim), atol=1e-5)
+        print("REMAINDER70_OK")
+        """
+    )
+    assert "REMAINDER70_OK" in out
+
+
+def test_remainder_columns_fused_solver_d11_size4():
+    """The padded sharding composes with the fused Pallas solver path
+    (d=11 over 4 devices: ceil gives 3 cols/device, 1 pad column)."""
+    out = _run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import (
+            distributed_slda_shardmap, simulated_distributed_slda,
+        )
+        from repro.core.dantzig import DantzigConfig
+        from repro.stats import synthetic
+
+        cfg = DantzigConfig(max_iters=250, adapt_rho=False, fused=True)
+        m, n1, n2, d = 1, 50, 50, 11
+        problem = synthetic.make_problem(d=d, n_signal=3)
+        xs, ys = synthetic.sample_machines(jax.random.PRNGKey(2), problem, m, n1, n2)
+        sim = simulated_distributed_slda(xs, ys, 0.15, 0.15, 0.02, cfg)
+        mesh = jax.make_mesh((1, 4), ("data", "model"))
+        out = distributed_slda_shardmap(
+            mesh, xs.reshape(m * n1, d), ys.reshape(m * n2, d),
+            0.15, 0.15, 0.02, cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(sim), atol=1e-5)
+        print("REMAINDER_FUSED_OK")
+        """,
+        devices=4,
+    )
+    assert "REMAINDER_FUSED_OK" in out

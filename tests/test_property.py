@@ -3,8 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+import pytest
+
+# hypothesis is a dev-only dependency (requirements-dev.txt); without it
+# the whole module must skip cleanly rather than abort collection.
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import hypothesis.extra.numpy as hnp  # noqa: E402
 
 from repro.core import slda
 from repro.core.dantzig import DantzigConfig, kkt_violation, solve_dantzig

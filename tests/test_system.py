@@ -212,6 +212,8 @@ def test_dryrun_single_combo_small_mesh():
             compiled = lowered.compile()
         assert compiled.memory_analysis() is not None
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older JAX returns a 1-elem list
+            ca = ca[0] if ca else {}
         assert ca and ca.get("flops", 0) > 0
         print("DRYRUN_OK")
         """
