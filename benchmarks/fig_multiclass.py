@@ -1,0 +1,128 @@
+"""Multiclass one-shot figure: K-class accuracy/F1 vs machine count.
+
+The multicategory extension of the paper's Figure 1 (Chen's one-shot
+schedule: each machine uplinks one (d, K) direction block).  For
+K in {3, 5} and growing machine count m at fixed n per machine,
+reports held-out accuracy and support-recovery F1 for
+
+  * distributed debiased (one (d, K) pmean + hard threshold),
+  * naive averaged (biased locals, no debias/HT),
+  * centralized (pool all m*n samples, one batched solve).
+
+The hard threshold is grid-tuned post hoc per metric for the debiased
+and centralized estimators, matching the paper's protocol ("we report
+the best results for all methods"); naive averaging has no threshold
+by definition.  Expected shape: debiased tracks centralized and beats
+naive averaging in F1 as m grows (the debias+HT recovers the sparse
+support the biased average smears), and no method pays materially in
+accuracy for distributing.  Every estimator runs through the ONE
+pipeline in ``repro.core.pipeline``, so this figure also exercises the
+(d, K) generalization of the debias correction.
+
+Quick mode (default, CI-sized): d=60, n=300, m in (2, 4, 8), 2 repeats.
+``--paper``: d=120, n=400, m in (2, 5, 10, 20), 5 repeats.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from benchmarks.common import print_table, write_csv
+from repro.core import classifier
+from repro.core import multiclass as mc
+from repro.core.dantzig import DantzigConfig
+from repro.core.slda import hard_threshold
+from repro.stats import synthetic
+
+T_GRID = np.geomspace(0.002, 1.0, 20)
+
+
+def _tuned(raw, means, betas_star, zs, zl):
+    """Best accuracy and best support-F1 over the threshold grid."""
+    best_acc, best_f1 = 0.0, 0.0
+    for t in T_GRID:
+        beta = hard_threshold(raw, float(t))
+        best_acc = max(best_acc, float(jnp.mean(
+            mc.mc_classify(zs, beta, means) == zl)))
+        best_f1 = max(best_f1, float(classifier.f1_score(beta, betas_star)))
+    return best_acc, best_f1
+
+
+def run(paper: bool = False, seed: int = 0):
+    if paper:
+        d, n, machines, repeats, iters = 120, 400, (2, 5, 10, 20), 5, 600
+    else:
+        d, n, machines, repeats, iters = 60, 300, (2, 4, 8), 2, 400
+    cfg = DantzigConfig(max_iters=iters)
+
+    rows = []
+    for K in (3, 5):
+        problem = synthetic.make_mc_problem(d=d, num_classes=K, n_signal=5)
+        b1 = float(jnp.max(jnp.sum(jnp.abs(problem.betas), axis=0)))
+        lam = 0.3 * math.sqrt(math.log(d) / n) * b1
+        for m in machines:
+            lam_c = 0.3 * math.sqrt(math.log(d) / (m * n)) * b1
+            acc = {k: [] for k in ("acc_d", "acc_n", "acc_c",
+                                   "f1_d", "f1_n", "f1_c")}
+            for rep in range(repeats):
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(seed), (K * 100 + m) * 100 + rep)
+                xs, labels = synthetic.sample_mc_machines(key, problem, m, n)
+                # t=0: raw debiased mean; the threshold is tuned post hoc
+                raw_d, means_d = mc.simulated_distributed_mc_slda(
+                    xs, labels, K, lam, lam, 0.0, cfg)
+                beta_n, means_n = mc.simulated_naive_mc_slda(
+                    xs, labels, K, lam, cfg)
+                raw_c, means_c = mc.centralized_mc_slda(
+                    xs.reshape(-1, d), labels.reshape(-1), K, lam_c, cfg)
+                zs, zl = synthetic.sample_mc_machines(
+                    jax.random.fold_in(key, 777), problem, 1, 2000)
+                acc_d, f1_d = _tuned(raw_d, means_d, problem.betas, zs[0], zl[0])
+                acc_c, f1_c = _tuned(raw_c, means_c, problem.betas, zs[0], zl[0])
+                acc["acc_d"].append(acc_d)
+                acc["f1_d"].append(f1_d)
+                acc["acc_c"].append(acc_c)
+                acc["f1_c"].append(f1_c)
+                acc["acc_n"].append(float(jnp.mean(
+                    mc.mc_classify(zs[0], beta_n, means_n) == zl[0])))
+                acc["f1_n"].append(float(
+                    classifier.f1_score(beta_n, problem.betas)))
+            mean = {k: sum(v) / len(v) for k, v in acc.items()}
+            rows.append([K, m, n, mean["acc_d"], mean["acc_n"], mean["acc_c"],
+                         mean["f1_d"], mean["f1_n"], mean["f1_c"]])
+
+    header = ["K", "m", "n_per_machine", "acc_dist", "acc_naive", "acc_cent",
+              "F1_dist", "F1_naive", "F1_cent"]
+    print_table(f"fig_multiclass: K-class one-shot vs machine count (d={d})",
+                header, rows)
+    path = write_csv("fig_multiclass.csv", header, rows)
+    print(f"[fig_multiclass] wrote {path}")
+    return rows
+
+
+def main(paper: bool = False) -> None:
+    rows = run(paper)
+    for r in rows:
+        K, m = r[0], r[1]
+        acc_d, acc_n, acc_c = r[3], r[4], r[5]
+        f1_d, f1_n = r[6], r[7]
+        # well above chance for every K
+        assert acc_d > 2.0 / K, ("debiased accuracy near chance", r)
+        # the debiased one-shot never trails naive averaging by more than
+        # noise in accuracy, and recovers a strictly better support
+        assert acc_d >= acc_n - 0.02, ("debiased << naive accuracy", r)
+        assert f1_d >= f1_n, ("debiased F1 below naive", r)
+        # and stays comparable to centralized in accuracy (the gap is
+        # widest at small m*n where local estimates are noisiest)
+        assert acc_d >= acc_c - 0.08, ("debiased << centralized accuracy", r)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(paper="--paper" in sys.argv)

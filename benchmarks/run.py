@@ -16,6 +16,7 @@ from benchmarks import (
     corollary48_threshold,
     fig1_machines,
     fig2_fixed_n,
+    fig_multiclass,
     fused_solver,
     roofline,
     table1_speedup,
@@ -26,6 +27,7 @@ from benchmarks import (
 BENCHES = [
     ("fig1_machines (fixed N, vary m)", fig1_machines.main),
     ("fig2_fixed_n (fixed n, N = m*n)", fig2_fixed_n.main),
+    ("fig_multiclass (K-class accuracy/F1 vs m)", fig_multiclass.main),
     ("table1_speedup (wall-clock vs m)", table1_speedup.main),
     ("table2_real (heart-disease surrogate)", table2_real.main),
     ("corollary48 (machine-count threshold m*)", corollary48_threshold.main),

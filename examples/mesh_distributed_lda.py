@@ -7,6 +7,10 @@ the CLIME columns are sharded over the model axis inside each machine,
 and the only cross-machine communication is a single d-vector pmean --
 then serves batched classification requests with the fitted rule.
 
+Both the binary and the K-class estimator run on the SAME mesh through
+the same head-parameterized worker core (``repro.core.pipeline``); the
+multiclass round uplinks a (d, K) block instead of a d-vector.
+
     PYTHONPATH=src python examples/mesh_distributed_lda.py
 """
 
@@ -21,8 +25,12 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import classifier  # noqa: E402
+from repro.core import multiclass as mc  # noqa: E402
 from repro.core.dantzig import DantzigConfig  # noqa: E402
-from repro.core.distributed import distributed_slda_shardmap  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    distributed_mc_slda_shardmap,
+    distributed_slda_shardmap,
+)
 from repro.stats import synthetic  # noqa: E402
 
 
@@ -71,6 +79,24 @@ def main():
     dt = time.time() - t0
     print(f"served {n_req} requests in {dt:.2f}s ({n_req / dt:.0f} req/s), "
           f"accuracy {correct / n_req:.3f}")
+
+    # --- same mesh, K-class head: one (d, K) block per machine ---------
+    K = 4
+    mc_problem = synthetic.make_mc_problem(d=d, num_classes=K, n_signal=8)
+    mxs, mlabels = synthetic.sample_mc_machines(
+        jax.random.PRNGKey(7), mc_problem, m, n_per_machine)
+    b1k = float(jnp.max(jnp.sum(jnp.abs(mc_problem.betas), axis=0)))
+    lam_k = 0.3 * math.sqrt(math.log(d) / n_per_machine) * b1k
+    t_k = 0.5 * math.sqrt(math.log(d) / N) * b1k
+    t0 = time.time()
+    beta_k, means_k = distributed_mc_slda_shardmap(
+        mesh, mxs.reshape(-1, d), mlabels.reshape(-1), K, lam_k, lam_k, t_k, cfg)
+    beta_k.block_until_ready()
+    zs, zl = synthetic.sample_mc_machines(jax.random.PRNGKey(8), mc_problem, 1, 2000)
+    acc_k = float(jnp.mean(mc.mc_classify(zs[0], beta_k, means_k) == zl[0]))
+    print(f"\nK={K} classes on the same mesh in {time.time() - t0:.1f}s "
+          f"(communication: ONE pmean of a ({d}, {K}) block = {4 * d * K} "
+          f"bytes/worker), held-out accuracy {acc_k:.3f}")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,15 @@
 
 Modules
 -------
-dantzig      linearized-ADMM Dantzig-type l1 solver (the numerical engine)
+dantzig      two-block ADMM Dantzig-type l1 solver (the numerical engine)
+solver_dispatch  scan / fused / fused-blocked solver selection
 clime        CLIME precision-matrix estimation (column-parallel Dantzig)
-slda         local sparse-LDA estimator, debiasing, hard threshold
-distributed  Algorithm 1 over a jax mesh (shard_map + one psum)
+pipeline     THE worker schedule (head-parameterized; every estimator
+             entry point wraps it)
+slda         binary (K=1) face: local estimator, debias, hard threshold
+multiclass   K-class face (shared covariance, one (d, K) uplink block)
+distributed  Algorithm 1 over a jax mesh (shard_map + one pmean),
+             binary and multiclass, plus single-device simulations
 classifier   Fisher discriminant rule, evaluation metrics
 lda_head     distributed LDA readout over transformer hidden states
 """

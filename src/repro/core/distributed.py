@@ -14,14 +14,22 @@ Mapping (see DESIGN.md §2):
     ``all_gather`` over "model" reassembles beta_tilde (this gather is
     *inside* a machine in the paper's cost model);
   * the paper's one-round worker->master send + average  <->  a single
-    ``pmean`` of a d-vector over ("pod", "data") -- O(d) bytes per
-    link, exactly the paper's communication budget;
-  * the master's hard threshold runs replicated (it is d cheap ops).
+    ``pmean`` of a (d, K) block over ("pod", "data") -- O(dK) bytes per
+    link (K=1 for the paper's binary problem), exactly the paper's
+    communication budget;
+  * the master's hard threshold runs replicated (it is dK cheap ops).
 
 The suff-stats/beta_hat computation is intentionally *replicated*
 across the "model" axis instead of sharded: replicating O(n d + d^2)
 FLOPs is cheaper than broadcasting Sigma_hat (d^2 bytes) across the
 axis, and it keeps the one-round communication claim exact.
+
+The worker schedule itself lives ONCE in :mod:`repro.core.pipeline`;
+every entry point here is a head- or mesh-specific wrapper:
+``distributed_slda_shardmap`` (binary, K=1) and
+``distributed_mc_slda_shardmap`` (K-class, Chen's multicategory
+one-shot schedule: each machine uplinks one (d, K) block) share the
+same core, as do the single-device simulations below.
 """
 
 from __future__ import annotations
@@ -33,9 +41,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import pipeline, slda
 from repro.core.dantzig import DantzigConfig
-from repro.core.clime import solve_clime_columns
-from repro.core import slda
+from repro.core.pipeline import BinaryHead, MulticlassHead
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -47,43 +55,6 @@ def _shard_map(f, mesh, in_specs, out_specs):
 
     return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                      check_rep=False)
-
-
-def _worker_debiased(x, y, lam, lam_prime, cfg: DantzigConfig,
-                     model_axis: str | None, model_axis_size: int = 1):
-    """Worker pipeline on one machine; model-axis shards CLIME columns.
-
-    The debias correction ``Theta^T (Sigma beta_hat - mu_d)`` must use
-    ALL d CLIME columns (Theorem 4.5's one-round guarantee is exact only
-    then), so when d is not a multiple of the model-axis size, d is
-    padded up to ``size * ceil(d / size)``: each device solves the same
-    number of columns, pad columns are clamped onto column d-1 and
-    their contribution is masked out of the gather.
-    """
-    stats = slda.suff_stats(x, y)
-    beta_hat = slda.local_slda(stats, lam, cfg)
-    d = beta_hat.shape[0]
-    if model_axis is None:
-        theta = solve_clime_columns(stats.sigma, jnp.arange(d), lam_prime, cfg)
-        resid = stats.sigma @ beta_hat - stats.mu_d
-        correction = theta.T @ resid
-    else:
-        size = model_axis_size
-        idx = jax.lax.axis_index(model_axis)
-        cols_per = -(-d // size)  # ceil: pad d to a multiple of size
-        cols = idx * cols_per + jnp.arange(cols_per)
-        valid = cols < d
-        theta_block = solve_clime_columns(
-            stats.sigma, jnp.minimum(cols, d - 1), lam_prime, cfg
-        )
-        resid = stats.sigma @ beta_hat - stats.mu_d
-        corr_slice = jnp.where(valid, theta_block.T @ resid, 0.0)  # (cols_per,)
-        gathered = jax.lax.all_gather(
-            corr_slice, model_axis, axis=0, tiled=True
-        )  # (size * cols_per,), device i's block at [i*cols_per, ...)
-        # global column j lands at position j; pad columns sit at >= d
-        correction = gathered[:d]
-    return beta_hat - correction, beta_hat
 
 
 def distributed_slda_shardmap(
@@ -110,17 +81,65 @@ def distributed_slda_shardmap(
     model_size = mesh.shape[model_axis] if model_axis is not None else 1
 
     def shard_fn(xs, ys):
-        beta_tilde, _ = _worker_debiased(
-            xs, ys, lam, lam_prime, cfg, model_axis, model_size
+        beta_tilde, _, _ = pipeline.worker_debiased(
+            BinaryHead(), xs, ys, lam=lam, lam_prime=lam_prime, cfg=cfg,
+            model_axis=model_axis, model_axis_size=model_size,
         )
         # ---- the single communication round of Algorithm 1 ----
-        beta_mean = beta_tilde
+        beta_mean = beta_tilde[:, 0]
         for ax in data_axes:
             beta_mean = jax.lax.pmean(beta_mean, ax)
         return slda.hard_threshold(beta_mean, t)
 
     fn = _shard_map(shard_fn, mesh, (in_spec, in_spec), P())
     return fn(x, y)
+
+
+def distributed_mc_slda_shardmap(
+    mesh: jax.sharding.Mesh,
+    x: jnp.ndarray,
+    labels: jnp.ndarray,
+    num_classes: int,
+    lam: float,
+    lam_prime: float,
+    t: float,
+    cfg: DantzigConfig = DantzigConfig(),
+    data_axes: Sequence[str] = ("data",),
+    model_axis: str | None = "model",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-shot distributed K-class sparse LDA over a mesh.
+
+    The multiclass analogue of :func:`distributed_slda_shardmap`: each
+    data-slice is one machine, the d CLIME columns shard over the model
+    axis, and the single communication round is one ``pmean`` of a
+    (d, K) direction block plus the (K, d) class means -- O(dK) bytes
+    per link, the multicategory one-shot budget.
+
+    Args:
+      x: (N, d) samples, shardable over the data axes.
+      labels: (N,) int labels in [0, num_classes).
+    Returns:
+      (beta_bar (d, K), means (K, d)), both replicated.
+    """
+    data_axes = tuple(data_axes)
+    model_size = mesh.shape[model_axis] if model_axis is not None else 1
+
+    def shard_fn(xs, labs):
+        beta_tilde, _, hs = pipeline.worker_debiased(
+            MulticlassHead(num_classes), xs, labs,
+            lam=lam, lam_prime=lam_prime, cfg=cfg,
+            model_axis=model_axis, model_axis_size=model_size,
+        )
+        beta_mean, means = beta_tilde, hs.aux.means
+        for ax in data_axes:
+            beta_mean = jax.lax.pmean(beta_mean, ax)
+            means = jax.lax.pmean(means, ax)
+        return slda.hard_threshold(beta_mean, t), means
+
+    fn = _shard_map(
+        shard_fn, mesh, (P(data_axes, None), P(data_axes)), (P(), P())
+    )
+    return fn(x, labels)
 
 
 def naive_averaged_slda_shardmap(
@@ -147,7 +166,8 @@ def naive_averaged_slda_shardmap(
 
 # ---------------------------------------------------------------------------
 # Single-device simulation (statistical experiments / tests).  Identical
-# math; machines are a leading vmap axis instead of mesh shards.
+# math; machines are a leading vmap axis instead of mesh shards.  The
+# per-machine body is the SAME pipeline.worker_debiased the mesh runs.
 # ---------------------------------------------------------------------------
 
 
@@ -166,8 +186,9 @@ def simulated_debiased_mean(
     tuning free (HT is O(d))."""
 
     def one_machine(x, y):
-        bt, _ = _worker_debiased(x, y, lam, lam_prime, cfg, model_axis=None)
-        return bt
+        bt, _, _ = pipeline.worker_debiased(
+            BinaryHead(), x, y, lam=lam, lam_prime=lam_prime, cfg=cfg)
+        return bt[:, 0]
 
     return jnp.mean(jax.vmap(one_machine)(xs, ys), axis=0)
 
@@ -182,13 +203,8 @@ def simulated_distributed_slda(
     cfg: DantzigConfig = DantzigConfig(),
 ) -> jnp.ndarray:
     """xs: (m, n1, d), ys: (m, n2, d) -> aggregated beta_bar (d,)."""
-
-    def one_machine(x, y):
-        bt, _ = _worker_debiased(x, y, lam, lam_prime, cfg, model_axis=None)
-        return bt
-
-    beta_tildes = jax.vmap(one_machine)(xs, ys)
-    return slda.aggregate(beta_tildes, t)
+    return slda.hard_threshold(
+        simulated_debiased_mean(xs, ys, lam, lam_prime, cfg), t)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

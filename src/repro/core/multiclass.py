@@ -1,6 +1,7 @@
 """Multi-class distributed sparse LDA (the paper's stated future work).
 
-Extension of Algorithm 1 to K classes sharing one covariance:
+Extension of Algorithm 1 to K classes sharing one covariance
+(Chen's multicategory one-shot schedule):
 
   * discriminant directions  beta_k* = Theta* (mu_k - mu_bar), where
     mu_bar is the grand mean of class means -- all K directions solve
@@ -13,57 +14,58 @@ Extension of Algorithm 1 to K classes sharing one covariance:
     (still O(dK) bytes, no covariance travels);
   * classification: argmax_k (Z - mu_k/2)^T beta_k + log pi_k (equal
     priors by default), reducing to the paper's rule at K=2.
+
+The worker schedule lives ONCE in :mod:`repro.core.pipeline`
+(:func:`mc_debiased_local` wraps ``pipeline.worker_debiased`` with a
+:class:`~repro.core.pipeline.MulticlassHead`), so every solve routes
+through :mod:`repro.core.solver_dispatch` -- ``cfg.fused`` dispatches
+the batched (d, K) direction solve and the CLIME columns to the
+(blocked) fused Pallas kernel exactly as the binary path does.  Mesh
+execution is :func:`repro.core.distributed.distributed_mc_slda_shardmap`.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.clime import solve_clime
-from repro.core.dantzig import DantzigConfig, solve_dantzig
+from repro.core import pipeline
+from repro.core.dantzig import DantzigConfig
+from repro.core.pipeline import (  # noqa: F401
+    MCStats,
+    MulticlassHead,
+    mc_direction_rhs,
+    mc_suff_stats,
+)
 from repro.core.slda import hard_threshold
+from repro.core.solver_dispatch import solve_dantzig
 
-
-class MCStats(NamedTuple):
-    sigma: jnp.ndarray  # (d, d) pooled within-class covariance
-    means: jnp.ndarray  # (K, d) class means
-    counts: jnp.ndarray  # (K,)
-
-
-def mc_suff_stats(x: jnp.ndarray, labels: jnp.ndarray, num_classes: int) -> MCStats:
-    """x: (n, d), labels: (n,) in [0, K) -> pooled stats.
-
-    Within-class scatter via the one-hot trick (static shapes, no sort).
-    """
-    n, d = x.shape
-    onehot = jax.nn.one_hot(labels, num_classes, dtype=x.dtype)  # (n, K)
-    counts = jnp.sum(onehot, axis=0)  # (K,)
-    sums = onehot.T @ x  # (K, d)
-    means = sums / jnp.maximum(counts, 1.0)[:, None]
-    centered = x - means[labels]  # (n, d)
-    sigma = centered.T @ centered / n
-    return MCStats(sigma, means, counts)
+__all__ = [
+    "MCStats",
+    "mc_suff_stats",
+    "mc_direction_rhs",
+    "local_mc_slda",
+    "mc_debias",
+    "mc_debiased_local",
+    "simulated_distributed_mc_slda",
+    "simulated_naive_mc_slda",
+    "centralized_mc_slda",
+    "mc_classify",
+]
 
 
 def local_mc_slda(
     stats: MCStats, lam, cfg: DantzigConfig = DantzigConfig()
 ) -> jnp.ndarray:
     """Batched estimation of all K directions: returns (d, K)."""
-    mu_bar = jnp.mean(stats.means, axis=0)
-    rhs = (stats.means - mu_bar[None, :]).T  # (d, K)
-    return solve_dantzig(stats.sigma, rhs, lam, cfg)
+    return solve_dantzig(stats.sigma, mc_direction_rhs(stats), lam, cfg)
 
 
 def mc_debias(stats: MCStats, beta_hat: jnp.ndarray, theta_hat: jnp.ndarray) -> jnp.ndarray:
     """beta_tilde_k = beta_hat_k - Theta^T (Sigma beta_hat_k - mu_dk)."""
-    mu_bar = jnp.mean(stats.means, axis=0)
-    rhs = (stats.means - mu_bar[None, :]).T  # (d, K)
-    resid = stats.sigma @ beta_hat - rhs
-    return beta_hat - theta_hat.T @ resid
+    return pipeline.debias(stats.sigma, mc_direction_rhs(stats), beta_hat, theta_hat)
 
 
 def mc_debiased_local(
@@ -74,10 +76,12 @@ def mc_debiased_local(
     lam_prime: float | None = None,
     cfg: DantzigConfig = DantzigConfig(),
 ) -> tuple[jnp.ndarray, MCStats]:
-    stats = mc_suff_stats(x, labels, num_classes)
-    beta_hat = local_mc_slda(stats, lam, cfg)
-    theta_hat = solve_clime(stats.sigma, lam if lam_prime is None else lam_prime, cfg)
-    return mc_debias(stats, beta_hat, theta_hat), stats
+    """Full worker-side pipeline: returns (beta_tilde (d, K), stats)."""
+    beta_tilde, _, hs = pipeline.worker_debiased(
+        MulticlassHead(num_classes), x, labels,
+        lam=lam, lam_prime=lam if lam_prime is None else lam_prime, cfg=cfg,
+    )
+    return beta_tilde, hs.aux
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "cfg"))
@@ -94,7 +98,8 @@ def simulated_distributed_mc_slda(
 
     The vmap axis is the machine; the master aggregation is one mean of
     (d, K) blocks + hard threshold -- the multi-class analogue of the
-    paper's one-round schedule.
+    paper's one-round schedule.  Mesh-executed twin:
+    :func:`repro.core.distributed.distributed_mc_slda_shardmap`.
     """
 
     def one_machine(x, lab):
@@ -124,12 +129,35 @@ def simulated_naive_mc_slda(
     return jnp.mean(betas, axis=0), jnp.mean(means, axis=0)
 
 
-def mc_classify(z: jnp.ndarray, beta: jnp.ndarray, means: jnp.ndarray) -> jnp.ndarray:
+def centralized_mc_slda(
+    x: jnp.ndarray,
+    labels: jnp.ndarray,
+    num_classes: int,
+    lam: float,
+    cfg: DantzigConfig = DantzigConfig(),
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Centralized baseline: pool everything, one batched solve (m=1, n=N)."""
+    stats = mc_suff_stats(x, labels, num_classes)
+    return local_mc_slda(stats, lam, cfg), stats.means
+
+
+def mc_classify(
+    z: jnp.ndarray,
+    beta: jnp.ndarray,
+    means: jnp.ndarray,
+    priors: jnp.ndarray | None = None,
+) -> jnp.ndarray:
     """z: (n, d), beta: (d, K), means: (K, d) -> predicted class (n,).
 
-    score_k(Z) = (Z - mu_k / 2)^T beta_k   (equal priors); at K=2 this
-    reduces to the paper's Fisher rule up to the shared mu_bar shift.
+    score_k(Z) = (Z - mu_k / 2)^T beta_k + log pi_k; ``priors=None``
+    means equal priors (the + log pi_k term is a constant shift and
+    drops out of the argmax).  At K=2 the equal-prior rule reduces to
+    the paper's Fisher rule up to the shared mu_bar shift.
     """
     proj = z @ beta  # (n, K)
     offset = 0.5 * jnp.sum(means * beta.T, axis=1)  # (K,)
-    return jnp.argmax(proj - offset[None, :], axis=-1)
+    scores = proj - offset[None, :]
+    if priors is not None:
+        priors = jnp.asarray(priors, scores.dtype)
+        scores = scores + jnp.log(priors)[None, :]
+    return jnp.argmax(scores, axis=-1)

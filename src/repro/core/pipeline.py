@@ -1,0 +1,249 @@
+"""The ONE worker pipeline behind every estimator entry point.
+
+Algorithm 1's per-machine schedule -- sufficient statistics -> batched
+Dantzig solve for the direction block -> CLIME precision columns ->
+debias -- used to exist four times (``slda.debiased_local_estimator``,
+``distributed._worker_debiased``, the simulated ``one_machine``
+closures, ``multiclass.mc_debiased_local``), so improvements like the
+blocked fused solver or the pad-and-mask column sharding landed in one
+copy and missed the rest.  This module is the single implementation;
+everything else is a thin head- or mesh-specific wrapper (see
+DESIGN.md §3).
+
+A :class:`DiscriminantHead` turns raw per-machine samples into
+``HeadStats(sigma, rhs, aux)`` where ``rhs`` is the (d, K) block of
+direction right-hand sides:
+
+  * :class:`BinaryHead` -- the paper's two-sample problem, K = 1,
+    ``rhs = (mu1 - mu2)[:, None]`` (eq. 3.1);
+  * :class:`MulticlassHead` -- K classes sharing one covariance
+    (Chen's multicategory one-shot schedule), ``rhs[:, k] =
+    mu_k - mu_bar``; all K directions ride ONE batched solve.
+
+:func:`worker_debiased` then runs the shared schedule:
+
+  * the (d, K) direction block solves in one batched Dantzig call;
+  * the CLIME columns solve unsharded (``model_axis=None``) or sharded
+    over a mesh model axis with the pad-to-multiple + masked-gather
+    scheme (any (d, |model|) pair is exact -- pad columns are clamped
+    onto column d-1 and their (cols_per, K) correction rows are masked
+    out of the ``all_gather``);
+  * the debias correction generalizes the paper's (d,) vector to a
+    (d, K) block: ``beta_tilde = beta_hat - Theta^T (Sigma beta_hat -
+    rhs)``.
+
+Every solve routes through :mod:`repro.core.solver_dispatch` (scan /
+fused / fused_blocked picked from shape + config), and warm per-column
+ADMM penalties thread through as ``rho_beta`` (K,) / ``rho_theta``
+(columns-per-device,): on the fused paths they are traced operands, so
+warm estimates carried across lambda sweeps never recompile.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clime import solve_clime_columns
+from repro.core.dantzig import DantzigConfig
+from repro.core.solver_dispatch import solve_dantzig
+from repro.kernels import ops as kops
+
+
+class HeadStats(NamedTuple):
+    """What a head hands the shared pipeline."""
+
+    sigma: jnp.ndarray  # (d, d) pooled within-class covariance
+    rhs: jnp.ndarray  # (d, K) direction right-hand sides
+    aux: Any  # head-specific stats (SuffStats / MCStats)
+
+
+@runtime_checkable
+class DiscriminantHead(Protocol):
+    """Maps raw per-machine samples to :class:`HeadStats`.
+
+    Heads must be hashable (NamedTuples of static fields) so they can
+    ride as static arguments under ``jax.jit``.
+    """
+
+    def stats(self, *data: jnp.ndarray) -> HeadStats: ...
+
+
+# ---------------------------------------------------------------------------
+# Sufficient statistics (canonical home; slda / multiclass re-export)
+# ---------------------------------------------------------------------------
+
+
+class SuffStats(NamedTuple):
+    """Per-machine sufficient statistics of the two-class sample."""
+
+    sigma: jnp.ndarray  # (d, d) pooled intra-class covariance
+    mu1: jnp.ndarray  # (d,)
+    mu2: jnp.ndarray  # (d,)
+    n1: jnp.ndarray  # scalar
+    n2: jnp.ndarray  # scalar
+
+    @property
+    def mu_d(self) -> jnp.ndarray:
+        return self.mu1 - self.mu2
+
+
+def suff_stats(x: jnp.ndarray, y: jnp.ndarray, use_kernel: bool | None = None) -> SuffStats:
+    """Compute (Sigma_hat, mu1, mu2) from class samples X:(n1,d), Y:(n2,d).
+
+    Sigma_hat = [sum (X_i-mu1)(X_i-mu1)^T + sum (Y_i-mu2)(Y_i-mu2)^T] / n
+
+    ``use_kernel=None`` (default) selects the Pallas gram kernel on TPU
+    and the jnp path elsewhere -- the CPU interpreter path is for
+    correctness tests only, not a performance path.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    n1, n2 = x.shape[0], y.shape[0]
+    mu1 = jnp.mean(x, axis=0)
+    mu2 = jnp.mean(y, axis=0)
+    if use_kernel:
+        g1 = kops.gram(x, mu1)
+        g2 = kops.gram(y, mu2)
+    else:
+        xc = x - mu1[None, :]
+        yc = y - mu2[None, :]
+        g1 = xc.T @ xc
+        g2 = yc.T @ yc
+    sigma = (g1 + g2) / (n1 + n2)
+    return SuffStats(sigma, mu1, mu2, jnp.asarray(n1), jnp.asarray(n2))
+
+
+class MCStats(NamedTuple):
+    sigma: jnp.ndarray  # (d, d) pooled within-class covariance
+    means: jnp.ndarray  # (K, d) class means
+    counts: jnp.ndarray  # (K,)
+
+
+def mc_suff_stats(x: jnp.ndarray, labels: jnp.ndarray, num_classes: int) -> MCStats:
+    """x: (n, d), labels: (n,) in [0, K) -> pooled stats.
+
+    Within-class scatter via the one-hot trick (static shapes, no sort).
+    """
+    n, d = x.shape
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=x.dtype)  # (n, K)
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    sums = onehot.T @ x  # (K, d)
+    means = sums / jnp.maximum(counts, 1.0)[:, None]
+    centered = x - means[labels]  # (n, d)
+    sigma = centered.T @ centered / n
+    return MCStats(sigma, means, counts)
+
+
+def mc_direction_rhs(stats: MCStats) -> jnp.ndarray:
+    """(d, K) Dantzig right-hand sides ``mu_k - mu_bar`` (shared mu_bar)."""
+    mu_bar = jnp.mean(stats.means, axis=0)
+    return (stats.means - mu_bar[None, :]).T
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+
+class BinaryHead(NamedTuple):
+    """The paper's two-sample head: K = 1, rhs = mu1 - mu2."""
+
+    use_kernel: bool | None = None
+
+    def stats(self, x: jnp.ndarray, y: jnp.ndarray) -> HeadStats:
+        s = suff_stats(x, y, self.use_kernel)
+        return HeadStats(s.sigma, s.mu_d[:, None], s)
+
+
+class MulticlassHead(NamedTuple):
+    """K-class shared-covariance head: rhs[:, k] = mu_k - mu_bar."""
+
+    num_classes: int
+
+    def stats(self, x: jnp.ndarray, labels: jnp.ndarray) -> HeadStats:
+        s = mc_suff_stats(x, labels, self.num_classes)
+        return HeadStats(s.sigma, mc_direction_rhs(s), s)
+
+
+# ---------------------------------------------------------------------------
+# The shared worker schedule
+# ---------------------------------------------------------------------------
+
+
+def debias(
+    sigma: jnp.ndarray,
+    rhs: jnp.ndarray,
+    beta_hat: jnp.ndarray,
+    theta_hat: jnp.ndarray,
+) -> jnp.ndarray:
+    """beta_tilde = beta_hat - Theta^T (Sigma beta_hat - rhs)  (eq. 3.4).
+
+    Shapes broadcast: (d,)/(d, K) ``rhs``/``beta_hat`` both work.
+    """
+    resid = sigma @ beta_hat - rhs
+    return beta_hat - theta_hat.T @ resid
+
+
+def worker_debiased(
+    head: DiscriminantHead,
+    *data: jnp.ndarray,
+    lam,
+    lam_prime,
+    cfg: DantzigConfig = DantzigConfig(),
+    model_axis: str | None = None,
+    model_axis_size: int = 1,
+    rho_beta: jnp.ndarray | None = None,
+    rho_theta: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, HeadStats]:
+    """One machine's full debiased estimate of the (d, K) direction block.
+
+    Args:
+      head: the discriminant head (static under jit).
+      data: the head's raw samples -- ``(x, y)`` for :class:`BinaryHead`,
+        ``(x, labels)`` for :class:`MulticlassHead`.
+      lam / lam_prime: Dantzig / CLIME box radii.
+      model_axis: if set, this call must be inside shard_map over that
+        mesh axis; the d CLIME columns shard across it with
+        ``model_axis_size`` devices (pad-and-mask, exact for any d).
+      rho_beta / rho_theta: optional warm per-column ADMM penalties for
+        the direction / CLIME solves (traced on the fused paths).
+
+    Returns ``(beta_tilde, beta_hat, stats)`` with (d, K) blocks.
+
+    The debias correction ``Theta^T (Sigma beta_hat - rhs)`` must use
+    ALL d CLIME columns (Theorem 4.5's one-round guarantee is exact only
+    then), so when d is not a multiple of the model-axis size, d is
+    padded up to ``size * ceil(d / size)``: each device solves the same
+    number of columns, pad columns are clamped onto column d-1 and
+    their correction rows are masked out of the gather.
+    """
+    hs = head.stats(*data)
+    beta_hat = solve_dantzig(hs.sigma, hs.rhs, lam, cfg, rho=rho_beta)
+    d = beta_hat.shape[0]
+    resid = hs.sigma @ beta_hat - hs.rhs  # (d, K)
+    if model_axis is None:
+        theta = solve_clime_columns(
+            hs.sigma, jnp.arange(d), lam_prime, cfg, rho=rho_theta
+        )
+        correction = theta.T @ resid
+    else:
+        size = model_axis_size
+        idx = jax.lax.axis_index(model_axis)
+        cols_per = -(-d // size)  # ceil: pad d to a multiple of size
+        cols = idx * cols_per + jnp.arange(cols_per)
+        valid = cols < d
+        theta_block = solve_clime_columns(
+            hs.sigma, jnp.minimum(cols, d - 1), lam_prime, cfg, rho=rho_theta
+        )
+        corr_slice = jnp.where(
+            valid[:, None], theta_block.T @ resid, 0.0
+        )  # (cols_per, K)
+        gathered = jax.lax.all_gather(
+            corr_slice, model_axis, axis=0, tiled=True
+        )  # (size * cols_per, K), device i's block at [i*cols_per, ...)
+        # global column j lands at row j; pad columns sit at rows >= d
+        correction = gathered[:d]
+    return beta_hat - correction, beta_hat, hs

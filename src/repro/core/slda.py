@@ -1,6 +1,6 @@
-"""Local sparse-LDA estimation, debiasing and aggregation primitives.
+"""Binary sparse-LDA estimation, debiasing and aggregation primitives.
 
-Implements the per-machine computations of Algorithm 1:
+The per-machine computations of Algorithm 1:
 
   * pooled intra-class covariance  Sigma_hat (Pallas gram kernel)
   * local Dantzig-type sparse LDA  beta_hat           (eq. 3.1)
@@ -8,62 +8,34 @@ Implements the per-machine computations of Algorithm 1:
   * debiased estimator             beta_tilde         (eq. 3.4)
   * hard threshold                 HT(., t)           (eq. 3.5)
 
-plus the two baselines the paper compares against (centralized SLDA,
-naive averaging -- the naive one is just `mean of beta_hat`, assembled
-in :mod:`repro.core.distributed`).
+The worker schedule itself (suff stats -> Dantzig -> CLIME -> debias)
+lives ONCE in :mod:`repro.core.pipeline`; this module is the binary
+(K=1) face of it -- :func:`debiased_local_estimator` is a thin wrapper
+over ``pipeline.worker_debiased(BinaryHead(), ...)`` -- plus the
+master-side aggregation and the two baselines the paper compares
+against (centralized SLDA, naive averaging -- assembled in
+:mod:`repro.core.distributed`).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
-
-import jax
 import jax.numpy as jnp
 
+from repro.core import pipeline
 from repro.core.dantzig import DantzigConfig
-from repro.core.clime import solve_clime
+from repro.core.pipeline import BinaryHead, SuffStats, suff_stats  # noqa: F401
 from repro.core.solver_dispatch import solve_dantzig
-from repro.kernels import ops as kops
 
-
-class SuffStats(NamedTuple):
-    """Per-machine sufficient statistics of the two-class sample."""
-
-    sigma: jnp.ndarray  # (d, d) pooled intra-class covariance
-    mu1: jnp.ndarray  # (d,)
-    mu2: jnp.ndarray  # (d,)
-    n1: jnp.ndarray  # scalar
-    n2: jnp.ndarray  # scalar
-
-    @property
-    def mu_d(self) -> jnp.ndarray:
-        return self.mu1 - self.mu2
-
-
-def suff_stats(x: jnp.ndarray, y: jnp.ndarray, use_kernel: bool | None = None) -> SuffStats:
-    """Compute (Sigma_hat, mu1, mu2) from class samples X:(n1,d), Y:(n2,d).
-
-    Sigma_hat = [sum (X_i-mu1)(X_i-mu1)^T + sum (Y_i-mu2)(Y_i-mu2)^T] / n
-
-    ``use_kernel=None`` (default) selects the Pallas gram kernel on TPU
-    and the jnp path elsewhere -- the CPU interpreter path is for
-    correctness tests only, not a performance path.
-    """
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    n1, n2 = x.shape[0], y.shape[0]
-    mu1 = jnp.mean(x, axis=0)
-    mu2 = jnp.mean(y, axis=0)
-    if use_kernel:
-        g1 = kops.gram(x, mu1)
-        g2 = kops.gram(y, mu2)
-    else:
-        xc = x - mu1[None, :]
-        yc = y - mu2[None, :]
-        g1 = xc.T @ xc
-        g2 = yc.T @ yc
-    sigma = (g1 + g2) / (n1 + n2)
-    return SuffStats(sigma, mu1, mu2, jnp.asarray(n1), jnp.asarray(n2))
+__all__ = [
+    "SuffStats",
+    "suff_stats",
+    "local_slda",
+    "debias",
+    "debiased_local_estimator",
+    "hard_threshold",
+    "aggregate",
+    "centralized_slda",
+]
 
 
 def local_slda(
@@ -79,8 +51,7 @@ def debias(
     theta_hat: jnp.ndarray,
 ) -> jnp.ndarray:
     """beta_tilde = beta_hat - Theta_hat^T (Sigma_hat beta_hat - mu_d)  (eq. 3.4)."""
-    resid = stats.sigma @ beta_hat - stats.mu_d
-    return beta_hat - theta_hat.T @ resid
+    return pipeline.debias(stats.sigma, stats.mu_d, beta_hat, theta_hat)
 
 
 def debiased_local_estimator(
@@ -91,10 +62,11 @@ def debiased_local_estimator(
     cfg: DantzigConfig = DantzigConfig(),
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Full worker-side pipeline: returns (beta_tilde, beta_hat)."""
-    stats = suff_stats(x, y)
-    beta_hat = local_slda(stats, lam, cfg)
-    theta_hat = solve_clime(stats.sigma, lam if lam_prime is None else lam_prime, cfg)
-    return debias(stats, beta_hat, theta_hat), beta_hat
+    beta_tilde, beta_hat, _ = pipeline.worker_debiased(
+        BinaryHead(), x, y,
+        lam=lam, lam_prime=lam if lam_prime is None else lam_prime, cfg=cfg,
+    )
+    return beta_tilde[:, 0], beta_hat[:, 0]
 
 
 def hard_threshold(beta: jnp.ndarray, t) -> jnp.ndarray:

@@ -147,14 +147,30 @@ def make_mc_problem(
 
 
 def sample_mc_machines(
-    key: jax.Array, problem: MCProblem, m: int, n_per_machine: int
+    key: jax.Array,
+    problem: MCProblem,
+    m: int,
+    n_per_machine: int,
+    class_probs: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Balanced per-machine draws: xs (m, n, d), labels (m, n)."""
+    """Per-machine draws: xs (m, n, d), labels (m, n).
+
+    ``class_probs=None`` draws balanced labels (uniform over classes);
+    a (K,) probability vector draws imbalanced labels -- the regime
+    where :func:`repro.core.multiclass.mc_classify`'s ``priors``
+    argument earns its keep.
+    """
     num_classes, d = problem.means.shape
 
     def one(k):
         kl, kz = jax.random.split(k)
-        labels = jax.random.randint(kl, (n_per_machine,), 0, num_classes)
+        if class_probs is None:
+            labels = jax.random.randint(kl, (n_per_machine,), 0, num_classes)
+        else:
+            labels = jax.random.choice(
+                kl, num_classes, (n_per_machine,),
+                p=jnp.asarray(class_probs),
+            )
         noise = jax.random.normal(kz, (n_per_machine, d)) @ problem.chol.T
         return problem.means[labels] + noise, labels
 

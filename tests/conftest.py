@@ -1,9 +1,42 @@
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import pytest
 
 jax.config.update("jax_enable_x64", False)
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+def run_in_subprocess(body: str, devices: int = 8, timeout: int = 480,
+                      env_extra: dict | None = None) -> str:
+    """Run python code in a fresh interpreter with N forced host devices.
+
+    Mesh tests must set ``--xla_force_host_platform_device_count``
+    BEFORE jax import, and the running process may already have
+    initialized jax with a different device count -- a subprocess is
+    the only clean way.  Returns the subprocess stdout; asserts a zero
+    exit status (last 4000 bytes of stderr on failure).
+    """
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(body)
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    if env_extra:
+        env.update(env_extra)
+    res = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=REPO,
+    )
+    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
+    return res.stdout

@@ -3,31 +3,11 @@
 The debias correction ``Theta^T (Sigma beta_hat - mu_d)`` uses all d
 CLIME columns; these tests pin the padded+masked sharding against the
 unsharded simulation for d NOT a multiple of the model-axis size.
-Mesh runs happen in a subprocess with forced host devices (conftest
-keeps the main process at 1 device).
+Mesh runs happen in a subprocess with forced host devices (see
+``conftest.run_in_subprocess``).
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_in_subprocess(body: str, devices: int = 8, timeout: int = 480) -> str:
-    prog = (
-        "import os\n"
-        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
-        + textwrap.dedent(body)
-    )
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-    res = subprocess.run(
-        [sys.executable, "-c", prog], capture_output=True, text=True,
-        timeout=timeout, env=env, cwd=REPO,
-    )
-    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
-    return res.stdout
+from conftest import run_in_subprocess as _run_in_subprocess
 
 
 def test_remainder_columns_d7_size2():

@@ -73,3 +73,61 @@ def test_mc_distributed_beats_naive_and_classifies(problem):
     pred = mc.mc_classify(zs[0], beta_d, means)
     acc = float(jnp.mean(pred == zl[0]))
     assert acc > 0.7, acc
+
+
+def test_local_mc_slda_dispatches_to_fused_kernel(problem, monkeypatch):
+    """cfg.fused=True must reach the fused Pallas kernel.  Multiclass
+    used to import solve_dantzig from core.dantzig and relied on that
+    module's back-compat shim to reach the dispatch layer; it now routes
+    through solver_dispatch directly (structurally pinned by
+    test_pipeline_parity), and this test pins the behavior end to end."""
+    from repro.core import solver_dispatch
+
+    xs, labels = synthetic.sample_mc_machines(jax.random.PRNGKey(5), problem, 1, 300)
+    stats = mc.mc_suff_stats(xs[0], labels[0], K)
+    calls = []
+    real = solver_dispatch.kops.dantzig_fused
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("block_k"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(solver_dispatch.kops, "dantzig_fused", spy)
+    cfg_fused = DantzigConfig(max_iters=100, adapt_rho=False, fused=True)
+    out_fused = mc.local_mc_slda(stats, 0.2, cfg_fused)
+    assert calls, "fused=True never reached the Pallas kernel"
+    out_scan = mc.local_mc_slda(stats, 0.2, DantzigConfig(max_iters=100, adapt_rho=False))
+    assert out_fused.shape == out_scan.shape == (60, K)
+    np.testing.assert_allclose(np.asarray(out_fused), np.asarray(out_scan), atol=1e-4)
+
+
+def test_mc_classify_priors_default_matches_equal(problem):
+    """priors=None (default) is exactly the equal-prior rule."""
+    xs, labels = synthetic.sample_mc_machines(jax.random.PRNGKey(6), problem, 2, 300)
+    beta, means = mc.simulated_distributed_mc_slda(xs, labels, K, 0.2, 0.2, 0.02, CFG)
+    zs, _ = synthetic.sample_mc_machines(jax.random.PRNGKey(7), problem, 1, 500)
+    pred_default = mc.mc_classify(zs[0], beta, means)
+    pred_equal = mc.mc_classify(zs[0], beta, means, priors=jnp.full((K,), 1.0 / K))
+    np.testing.assert_array_equal(np.asarray(pred_default), np.asarray(pred_equal))
+
+
+def test_mc_classify_empirical_priors_beat_equal_when_imbalanced():
+    """On an imbalanced draw, + log pi_k with empirical class frequencies
+    must beat the equal-prior rule (the docstring promised the term; the
+    implementation used to drop it)."""
+    K3, d = 3, 40
+    problem = synthetic.make_mc_problem(d=d, num_classes=K3, n_signal=4, signal=0.6)
+    probs = jnp.asarray([0.7, 0.15, 0.15])
+    m, n = 2, 600
+    xs, labels = synthetic.sample_mc_machines(
+        jax.random.PRNGKey(0), problem, m, n, class_probs=probs)
+    lam = 0.3 * math.sqrt(math.log(d) / n) * 4
+    beta, means = mc.simulated_distributed_mc_slda(
+        xs, labels, K3, lam, lam, 0.2 * lam, DantzigConfig(max_iters=400))
+    zs, zl = synthetic.sample_mc_machines(
+        jax.random.PRNGKey(1), problem, 1, 4000, class_probs=probs)
+    emp = jnp.bincount(labels.reshape(-1), length=K3) / (m * n)
+    acc_equal = float(jnp.mean(mc.mc_classify(zs[0], beta, means) == zl[0]))
+    acc_priors = float(jnp.mean(
+        mc.mc_classify(zs[0], beta, means, priors=emp) == zl[0]))
+    assert acc_priors > acc_equal + 0.02, (acc_priors, acc_equal)

@@ -1,38 +1,23 @@
 """End-to-end system tests: mesh execution, drivers, checkpointing.
 
 The shard_map/mesh tests run in a subprocess with
-``--xla_force_host_platform_device_count=8`` (conftest keeps the main
-process at 1 device so smoke tests and benches see 1 device, per the
-dry-run contract).
+``--xla_force_host_platform_device_count=8`` (see
+``conftest.run_in_subprocess``) so the main process keeps its own
+device count for smoke tests and benches, per the dry-run contract.
 """
 
 import os
 import subprocess
 import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import run_in_subprocess as _run_in_subprocess
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_in_subprocess(body: str, devices: int = 8, timeout: int = 480) -> str:
-    """Run python code with N forced host devices; returns stdout."""
-    prog = (
-        "import os\n"
-        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
-        + textwrap.dedent(body)
-    )
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-    res = subprocess.run(
-        [sys.executable, "-c", prog], capture_output=True, text=True,
-        timeout=timeout, env=env, cwd=REPO,
-    )
-    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
-    return res.stdout
 
 
 def test_shardmap_matches_simulation():
