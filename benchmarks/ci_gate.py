@@ -1,0 +1,62 @@
+"""CI gate over the BENCH_*.json artifacts: fail on parity regression.
+
+Run AFTER ``python -m benchmarks.run --only fused_solver`` (and
+optionally ``--only lambda_path``).  Reads the machine-readable
+benchmark output and exits nonzero when the scan-vs-fused solver
+parity (``max_abs_diff``) exceeds the pinned budget -- a tighter bar
+than the benchmark's own internal 1e-3 assert, because on the CI CPU
+the interpreter executes the same float ops as the scan path and the
+observed diff is ~0; anything above 1e-5 means a real numerical
+regression in the kernel or the dispatch contract, not noise.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.ci_gate``
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.common import bench_json_path
+
+PARITY_BUDGET = 1e-5
+
+# name -> column holding the scan-vs-fused max-abs parity
+GATED = {
+    "fused_solver": "max_abs_diff",
+    "lambda_path": "max_abs_diff",
+}
+
+
+def main() -> int:
+    failures = []
+    checked = 0
+    for name, col in GATED.items():
+        path = bench_json_path(name)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except FileNotFoundError:
+            if name == "fused_solver":
+                failures.append(f"{path} missing -- run "
+                                "`python -m benchmarks.run --only fused_solver` first")
+            continue  # other benches are gated only when present
+        for row in payload["rows"]:
+            checked += 1
+            val = float(row[col])
+            tag = {k: row[k] for k in ("d", "k", "L") if k in row}
+            if val > PARITY_BUDGET:
+                failures.append(
+                    f"{name} {tag}: {col}={val:g} > {PARITY_BUDGET:g}")
+            else:
+                print(f"[ci_gate] {name} {tag}: {col}={val:g} OK")
+    if failures:
+        for msg in failures:
+            print(f"[ci_gate] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print(f"[ci_gate] parity within {PARITY_BUDGET:g} on {checked} rows")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

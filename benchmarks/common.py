@@ -1,9 +1,11 @@
-"""Shared benchmark harness: timing, CSV output, tuning grids."""
+"""Shared benchmark harness: timing, CSV/JSON output, tuning grids."""
 
 from __future__ import annotations
 
 import csv
+import json
 import os
+import platform
 import time
 from typing import Iterable, Sequence
 
@@ -19,6 +21,37 @@ def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]) -> str
         w.writerow(header)
         for r in rows:
             w.writerow(r)
+    return path
+
+
+def bench_json_path(name: str) -> str:
+    return os.path.join(OUT_DIR, f"BENCH_{name}.json")
+
+
+def write_bench_json(name: str, header: Sequence[str],
+                     rows: Iterable[Sequence], **extra) -> str:
+    """Machine-readable twin of :func:`write_csv`: BENCH_<name>.json.
+
+    Schema: ``{"name", "generated_unix", "backend", "host", "rows":
+    [{col: value, ...}, ...], **extra}``.  Rows mirror the CSV so the
+    perf trajectory (timings + HBM model per shape) can be diffed
+    across PRs and gated in CI (see ``benchmarks/ci_gate.py``).
+    """
+    import jax
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    payload = {
+        "name": name,
+        "generated_unix": time.time(),
+        "backend": jax.default_backend(),
+        "host": platform.node(),
+        "rows": [dict(zip(header, r)) for r in rows],
+    }
+    payload.update(extra)
+    path = bench_json_path(name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+        f.write("\n")
     return path
 
 

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, write_csv
+from benchmarks.common import print_table, write_bench_json, write_csv
 from repro.core.dantzig import DantzigConfig
 from repro.core.solver_dispatch import select_solver, solve_dantzig
 from repro.kernels.dantzig_fused import pick_block_k
@@ -91,7 +91,8 @@ def main(paper: bool = False) -> None:
               "scan_MB", "fused_MB", "hbm_ratio", "max_abs_diff"]
     print_table("fused Dantzig solver: scan vs fused-blocked", header, rows)
     path = write_csv("fused_solver.csv", header, rows)
-    print(f"[fused_solver] wrote {path}")
+    jpath = write_bench_json("fused_solver", header, rows, iters=iters)
+    print(f"[fused_solver] wrote {path} and {jpath}")
     # the whole point of the kernel: >= 10x fewer modeled HBM bytes
     assert all(r[9] >= 10.0 for r in rows), "HBM model ratio regressed"
 

@@ -1,0 +1,140 @@
+"""Folded lambda-path sweep vs L sequential fused launches (SSPerf-A3).
+
+The paper tunes lam ∝ sqrt(log d / n) on a grid, so the per-machine
+hot loop is the SAME (d, k) Dantzig batch solved at L box radii.  Run
+sequentially that is L fused launches and L eigendecompositions of the
+shared Sigma_hat.  :func:`repro.core.path.solve_dantzig_path` folds
+the grid into the column axis of ONE blocked launch (k -> k*L columns;
+``lam``/``rho`` are per-column operands) over ONE
+:class:`~repro.kernels.spectral.SpectralFactor`.
+
+Reported per (d, k, L):
+
+  * wall-clock for the sequential python loop (each iteration passes
+    the RAW matrix, so it pays its own eigh -- the pre-PR schedule)
+    vs the folded launch, best of ``repeats`` after warmup;
+  * the modeled **Sigma-stream HBM bytes**: per launch the kernel
+    re-fetches A and Q once per column block and the factorization
+    streams Sigma in / Q out once.  The (d, k) payload bytes (b in,
+    solution out) are identical in both schedules -- the fold neither
+    adds nor removes them -- so the redundant Sigma traffic is the
+    quantity the fold collapses:
+
+        seq    = L * (blocks(k) + 1) * (2 d^2 + d) * 4
+        folded =     (blocks(k L) + 1) * (2 d^2 + d) * 4
+
+    When the folded batch still fits one block the ratio is exactly
+    L * (blocks(k) + 1) / 2 >= L; total-bytes ratios (payload included)
+    are also recorded;
+  * max-abs parity between folded and sequential solutions (asserted
+    < 1e-5: columns are independent, the fold is exact).
+
+On CPU the kernel runs under the Pallas interpreter, so wall-clock
+mostly measures the L-1 avoided eigendecompositions and launch
+overheads; the bytes model is the TPU-relevant signal.  A green run
+asserts the folded sweep wins wall-clock and >= L x on the modeled
+Sigma-stream bytes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, write_bench_json, write_csv
+from repro.core.dantzig import DantzigConfig
+from repro.core.path import solve_dantzig_path
+from repro.core.solver_dispatch import solve_dantzig
+from repro.kernels.dantzig_fused import pick_block_k
+from repro.stats.synthetic import ar1_covariance
+
+# (d, k, L): k mirrors the direction-block widths the pipeline solves
+# (K = 1 binary, small K multiclass); L is the paper-style tuning grid.
+SHAPES_CI = [(128, 1, 8), (256, 4, 8), (256, 1, 16)]
+SHAPES_PAPER = [(256, 8, 16), (512, 4, 16), (512, 8, 32)]
+
+
+def _blocks(d: int, cols: int) -> int:
+    bk = pick_block_k(d, cols) or cols
+    return -(-cols // bk)
+
+
+def sigma_stream_bytes(d: int, cols: int, launches: int) -> float:
+    """Redundant Sigma traffic: (A + Q per block) + (eigh stream) per launch."""
+    per_launch = (_blocks(d, cols) + 1) * (2.0 * d * d + d)
+    return launches * per_launch * 4.0
+
+
+def total_bytes(d: int, k: int, cols_per_launch: int, launches: int) -> float:
+    """Sigma stream + the (identical-in-both-schedules) payload bytes."""
+    payload = launches * (2.0 * d * cols_per_launch + 2.0 * cols_per_launch)
+    return sigma_stream_bytes(d, cols_per_launch, launches) + payload * 4.0
+
+
+def _time(fn, repeats: int) -> float:
+    jax.block_until_ready(fn())  # compile + warm, fully drained
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(paper: bool = False) -> None:
+    shapes = SHAPES_PAPER if paper else SHAPES_CI
+    iters = 200 if paper else 120
+    repeats = 3
+    rows = []
+    for d, k, L in shapes:
+        a = jnp.asarray(ar1_covariance(d, 0.6), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(d + k + L), (d, k)) * 0.3
+        lams = jnp.linspace(0.05, 0.5, L)
+        cfg = DantzigConfig(max_iters=iters, adapt_rho=False, fused=True)
+
+        def sequential():
+            # the pre-PR schedule: one launch per grid point, each
+            # factorizing the raw matrix it is handed
+            return [solve_dantzig(a, b, lams[i], cfg) for i in range(L)]
+
+        def folded():
+            return solve_dantzig_path(a, b, lams, cfg).beta
+
+        t_seq = _time(sequential, repeats)
+        t_fold = _time(folded, repeats)
+        parity = float(jnp.max(jnp.abs(
+            folded() - jnp.stack(sequential()))))
+        assert parity < 1e-5, (d, k, L, parity)
+
+        sig_seq = sigma_stream_bytes(d, k, L)
+        sig_fold = sigma_stream_bytes(d, k * L, 1)
+        tot_seq = total_bytes(d, k, k, L)
+        tot_fold = total_bytes(d, k, k * L, 1)
+        rows.append([
+            d, k, L, pick_block_k(d, k * L) or k * L, iters,
+            t_seq, t_fold, t_seq / t_fold,
+            sig_seq / 1e6, sig_fold / 1e6, sig_seq / sig_fold,
+            tot_seq / tot_fold, parity,
+        ])
+
+    header = ["d", "k", "L", "block_k", "iters", "seq_s", "folded_s",
+              "speedup", "seq_sigma_MB", "folded_sigma_MB",
+              "sigma_hbm_ratio", "total_hbm_ratio", "max_abs_diff"]
+    print_table("lambda path: folded sweep vs L sequential fused launches",
+                header, rows)
+    path = write_csv("lambda_path.csv", header, rows)
+    jpath = write_bench_json("lambda_path", header, rows, iters=iters)
+    print(f"[lambda_path] wrote {path} and {jpath}")
+    # the point of the fold: beat the sequential sweep on wall-clock
+    # (CPU interpreter) and collapse the redundant Sigma stream >= L x
+    for r in rows:
+        d, k, L, speedup, sigma_ratio = r[0], r[1], r[2], r[7], r[10]
+        assert speedup > 1.0, f"folded sweep slower at {(d, k, L)}: {r}"
+        assert sigma_ratio >= L, f"Sigma-stream ratio < L at {(d, k, L)}: {r}"
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ paper's qualitative claims, so a green run IS the reproduction check.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
@@ -18,10 +19,12 @@ from benchmarks import (
     fig2_fixed_n,
     fig_multiclass,
     fused_solver,
+    lambda_path,
     roofline,
     table1_speedup,
     table2_real,
 )
+from benchmarks.common import bench_json_path, write_bench_json
 
 
 BENCHES = [
@@ -32,6 +35,7 @@ BENCHES = [
     ("table2_real (heart-disease surrogate)", table2_real.main),
     ("corollary48 (machine-count threshold m*)", corollary48_threshold.main),
     ("fused_solver (scan vs fused-blocked kernel)", fused_solver.main),
+    ("lambda_path (folded sweep vs sequential launches)", lambda_path.main),
     ("roofline (dry-run aggregation)", roofline.main),
 ]
 
@@ -44,6 +48,7 @@ def main() -> None:
     args = ap.parse_args()
 
     failures = []
+    summary_rows = []
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -51,11 +56,28 @@ def main() -> None:
         print(f"\n##### {name}")
         try:
             fn(paper=args.paper)
+            summary_rows.append([name, "ok", time.time() - t0])
             print(f"##### {name}: OK ({time.time() - t0:.1f}s)")
         except Exception:
             failures.append(name)
+            summary_rows.append([name, "failed", time.time() - t0])
             traceback.print_exc()
             print(f"##### {name}: FAILED")
+    # per-benchmark status + wall-clock, diffable across PRs alongside
+    # the per-shape BENCH_<name>.json files the benchmarks themselves
+    # emit.  Merged by benchmark name so CI's separate --only
+    # invocations accumulate into one summary instead of clobbering it.
+    header = ["benchmark", "status", "seconds"]
+    try:
+        with open(bench_json_path("run_summary")) as f:
+            prior = {r["benchmark"]: [r[c] for c in header]
+                     for r in json.load(f)["rows"]}
+    except (OSError, ValueError, KeyError):
+        prior = {}
+    prior.update({r[0]: r for r in summary_rows})
+    write_bench_json("run_summary", header,
+                     [prior[name] for name, _ in BENCHES if name in prior],
+                     paper=args.paper)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
     print("\nall benchmarks passed")

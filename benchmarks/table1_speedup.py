@@ -23,7 +23,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Timer, print_table, write_csv
+from benchmarks.common import Timer, print_table, write_bench_json, write_csv
 from repro.core.dantzig import DantzigConfig
 from repro.core.slda import debiased_local_estimator, local_slda, suff_stats
 from repro.stats import synthetic
@@ -84,6 +84,7 @@ def run(paper: bool = False, seed: int = 2):
     print_table(f"Table 1: per-machine wall-clock, d={d}, N={n_total} "
                 "(CPU container; see hardware caveat)", header, rows)
     write_csv("table1_speedup.csv", header, rows)
+    write_bench_json("table1_speedup", header, rows, d=d, n_total=n_total)
     return rows
 
 

@@ -5,6 +5,8 @@ Modules
 dantzig      two-block ADMM Dantzig-type l1 solver (the numerical engine)
 solver_dispatch  scan / fused / fused-blocked solver selection
 clime        CLIME precision-matrix estimation (column-parallel Dantzig)
+path         lambda-regularization-path sweeps folded into one launch
+             (one SpectralFactor + per-column lam/rho operands)
 pipeline     THE worker schedule (head-parameterized; every estimator
              entry point wraps it)
 slda         binary (K=1) face: local estimator, debias, hard threshold

@@ -12,21 +12,25 @@ column block, which :mod:`repro.core.distributed` shards across the
 
 Solves route through :mod:`repro.core.solver_dispatch`, which picks
 the scan or (blocked) fused Pallas path from the shape and config.
-Both entry points take an optional per-column ``rho`` -- on the fused
-path it is a traced operand, so warm rho estimates carried across
-regularization-path sweeps never recompile.
+Both entry points accept either the raw Sigma_hat or its
+:class:`~repro.kernels.spectral.SpectralFactor` -- the pipeline hands
+over the factor it already computed for the direction solve, so CLIME
+adds zero O(d^3) work.  Both take an optional per-column ``rho`` -- on
+the fused path it is a traced operand, so warm rho estimates carried
+across regularization-path sweeps never recompile.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.dantzig import DantzigConfig
+from repro.core.dantzig import DantzigConfig, SpectralFactor
 from repro.core.solver_dispatch import solve_dantzig
+from repro.kernels.spectral import sigma_of
 
 
 def solve_clime_columns(
-    sigma: jnp.ndarray,
+    sigma: jnp.ndarray | SpectralFactor,
     cols: jnp.ndarray,
     lam: float | jnp.ndarray,
     cfg: DantzigConfig = DantzigConfig(),
@@ -36,20 +40,21 @@ def solve_clime_columns(
 
     Returns (d, len(cols)) block of Theta_hat.
     """
-    d = sigma.shape[0]
-    rhs = jnp.zeros((d, cols.shape[0]), sigma.dtype).at[cols, jnp.arange(cols.shape[0])].set(1.0)
+    mat = sigma_of(sigma)
+    d = mat.shape[0]
+    rhs = jnp.zeros((d, cols.shape[0]), mat.dtype).at[cols, jnp.arange(cols.shape[0])].set(1.0)
     return solve_dantzig(sigma, rhs, lam, cfg, rho=rho)
 
 
 def solve_clime(
-    sigma: jnp.ndarray,
+    sigma: jnp.ndarray | SpectralFactor,
     lam: float | jnp.ndarray,
     cfg: DantzigConfig = DantzigConfig(),
     rho: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Full (d, d) CLIME estimate (all columns in one batched solve)."""
-    d = sigma.shape[0]
-    rhs = jnp.eye(d, dtype=sigma.dtype)
+    mat = sigma_of(sigma)
+    rhs = jnp.eye(mat.shape[0], dtype=mat.dtype)
     return solve_dantzig(sigma, rhs, lam, cfg, rho=rho)
 
 

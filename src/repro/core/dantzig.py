@@ -22,7 +22,18 @@ matmuls.  Every iteration is therefore a handful of (d,d)x(d,k)
 matmuls + clip + shrink: fixed shapes, MXU-shaped, batchable over many
 right-hand sides (CLIME batches the model-axis shard of columns).
 Empirically this reaches KKT 1e-3 where the linearized variant sat at
-0.18 (same iteration count).
+0.18 (same iteration count).  (The linearized variant also needed a
+power-iteration estimate of sigma_max(A) for its step size; the exact
+splitting has no such tuning knob, so that helper is gone with it.)
+
+The cached factor is rho- and lam-independent, so it is shared across
+EVERY solve on a machine: pass a
+:class:`~repro.kernels.spectral.SpectralFactor` (from
+:func:`~repro.kernels.spectral.spectral_factor`) in place of ``a`` to
+any solver entry point and the O(d^3) eigendecomposition is skipped --
+the pipeline factorizes Sigma_hat once and threads the factor through
+the direction solve, the CLIME columns, and whole lambda-path sweeps
+(:mod:`repro.core.path`).
 
 Extras, all fixed-shape and `lax.scan`-able:
   * over-relaxation (alpha ~ 1.7),
@@ -56,6 +67,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels.spectral import (  # noqa: F401  (re-exported API)
+    SpectralFactor,
+    spectral_factor,
+)
 
 
 class DantzigConfig(NamedTuple):
@@ -81,19 +96,10 @@ class DantzigConfig(NamedTuple):
     # explicit columns-per-grid-step override for the fused kernel
     # (None = size the block to the VMEM budget)
     block_k: int | None = None
-
-
-def estimate_sigma_max(a: jnp.ndarray, iters: int, key=None) -> jnp.ndarray:
-    """Largest singular value of symmetric ``a`` by power iteration."""
-    d = a.shape[0]
-    v0 = jnp.full((d,), 1.0 / jnp.sqrt(d), dtype=a.dtype)
-
-    def body(_, v):
-        w = a @ v
-        return w / (jnp.linalg.norm(w) + 1e-30)
-
-    v = jax.lax.fori_loop(0, iters, body, v0)
-    return jnp.linalg.norm(a @ v)
+    # fast-memory budget in bytes for the fused kernel's blocking model
+    # (None = derive from the active backend, see
+    # repro.kernels.dantzig_fused.backend_vmem_budget)
+    vmem_budget: int | None = None
 
 
 def soft_threshold(x: jnp.ndarray, t: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
@@ -112,7 +118,7 @@ class DantzigState(NamedTuple):
 
 
 def solve_dantzig(
-    a: jnp.ndarray,
+    a: jnp.ndarray | SpectralFactor,
     b: jnp.ndarray,
     lam: jnp.ndarray | float,
     cfg: DantzigConfig = DantzigConfig(),
@@ -126,7 +132,7 @@ def solve_dantzig(
     module docstring for the dispatch rules.
 
     Args:
-      a:   (d, d) PSD matrix.
+      a:   (d, d) PSD matrix, or its :class:`SpectralFactor`.
       b:   (d,) or (d, k) right-hand side(s).
       lam: scalar or (k,) per-problem box radius.
       rho: optional scalar or (k,) per-column ADMM penalty override.
@@ -139,28 +145,37 @@ def solve_dantzig(
     return solver_dispatch.solve_dantzig(a, b, lam, cfg, rho=rho)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+@partial(jax.jit, static_argnames=("cfg", "return_rho"))
 def solve_dantzig_scan(
-    a: jnp.ndarray,
+    a: jnp.ndarray | SpectralFactor,
     b: jnp.ndarray,
     lam: jnp.ndarray | float,
     cfg: DantzigConfig = DantzigConfig(),
     rho0: jnp.ndarray | None = None,
+    *,
+    return_rho: bool = False,
 ) -> jnp.ndarray:
     """The ``lax.scan`` ADMM implementation (adaptive rho lives here).
 
+    ``a`` may be the raw matrix (factorized here) or a
+    :class:`SpectralFactor` (the eigendecomposition is reused as-is).
     ``rho0`` optionally seeds the per-problem rho state (scalar or
-    (k,)); it defaults to ``cfg.rho``.
+    (k,)); it defaults to ``cfg.rho``.  With ``return_rho`` the final
+    adapted per-problem rho rides along -- the warm estimate that
+    lambda-path sweeps carry into their next call.
     """
     squeeze = b.ndim == 1
     if squeeze:
         b = b[:, None]
     d, k = b.shape
-    lam = jnp.broadcast_to(jnp.asarray(lam, a.dtype), (k,))[None, :]
 
-    # cached spectral factor of (A^2 + I); rho-independent.
-    evals, q = jnp.linalg.eigh(a)
-    inv_eig = (1.0 / (evals * evals + 1.0))[:, None]
+    # cached spectral factor of (A^2 + I); rho- and lam-independent.
+    factor = a if isinstance(a, SpectralFactor) else spectral_factor(a)
+    a = factor.sigma
+    q = factor.q
+    inv_eig = factor.inv_eig[:, None]
+
+    lam = jnp.broadcast_to(jnp.asarray(lam, a.dtype), (k,))[None, :]
 
     def solve_m(v):  # (A^2 + I)^{-1} v
         return q @ (inv_eig * (q.T @ v))
@@ -206,8 +221,10 @@ def solve_dantzig_scan(
         return DantzigState(z, w, u1, u2, new_rho), None
 
     state, _ = jax.lax.scan(body, init, jnp.arange(cfg.max_iters))
-    beta = state.w
-    return beta[:, 0] if squeeze else beta
+    beta = state.w[:, 0] if squeeze else state.w
+    if return_rho:
+        return beta, (state.rho[0] if squeeze else state.rho)
+    return beta
 
 
 def kkt_violation(a: jnp.ndarray, b: jnp.ndarray, beta: jnp.ndarray, lam) -> jnp.ndarray:

@@ -29,7 +29,12 @@ every entry point here is a head- or mesh-specific wrapper:
 ``distributed_slda_shardmap`` (binary, K=1) and
 ``distributed_mc_slda_shardmap`` (K-class, Chen's multicategory
 one-shot schedule: each machine uplinks one (d, K) block) share the
-same core, as do the single-device simulations below.
+same core, as do the single-device simulations below.  That includes
+the single-factorization invariant: inside every shard function the
+pipeline computes ONE :class:`~repro.kernels.spectral.SpectralFactor`
+of the device's replicated Sigma_hat and threads it through both the
+direction solve and the CLIME column block -- the mesh paths pay one
+eigendecomposition per model-device per round, not two.
 """
 
 from __future__ import annotations

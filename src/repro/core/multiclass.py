@@ -31,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import path as _path
 from repro.core import pipeline
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import (  # noqa: F401
@@ -49,6 +50,7 @@ __all__ = [
     "local_mc_slda",
     "mc_debias",
     "mc_debiased_local",
+    "mc_debiased_local_path",
     "simulated_distributed_mc_slda",
     "simulated_naive_mc_slda",
     "centralized_mc_slda",
@@ -82,6 +84,34 @@ def mc_debiased_local(
         lam=lam, lam_prime=lam if lam_prime is None else lam_prime, cfg=cfg,
     )
     return beta_tilde, hs.aux
+
+
+def mc_debiased_local_path(
+    x: jnp.ndarray,
+    labels: jnp.ndarray,
+    num_classes: int,
+    lams: jnp.ndarray,
+    lam_prime: float | None = None,
+    cfg: DantzigConfig = DantzigConfig(),
+    rho_beta: jnp.ndarray | None = None,
+) -> _path.WorkerPathResult:
+    """All K directions at EVERY lambda in one folded launch.
+
+    The K-class analogue of
+    :func:`repro.core.slda.debiased_local_estimator_path`: the K*L
+    direction columns ride one blocked fused call, and one
+    eigendecomposition + one CLIME solve serve the whole sweep (see
+    :mod:`repro.core.path`).  ``lam_prime=None`` pins the CLIME radius
+    to the middle of the grid.  Returns the (L, d, K)-blocked
+    :class:`~repro.core.path.WorkerPathResult`.
+    """
+    lams = jnp.asarray(lams)
+    if lam_prime is None:
+        lam_prime = lams[lams.shape[0] // 2]
+    return _path.worker_debiased_path(
+        MulticlassHead(num_classes), x, labels,
+        lams=lams, lam_prime=lam_prime, cfg=cfg, rho_beta=rho_beta,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "cfg"))

@@ -1,0 +1,230 @@
+"""Lambda-regularization-path solves folded into ONE blocked launch.
+
+The paper picks the Dantzig box radius lam ∝ sqrt(log d / n) with
+constants tuned on held-out data (§5; Lee et al.'s one-shot sparse
+regression and Wang et al.'s EDSL run the same per-machine sweeps), so
+in practice every worker solves the SAME problem across an L-point
+lambda grid.  Run naively that is L sequential solver launches and
+L + 1 eigendecompositions per worker (each launch re-factorizes, plus
+the CLIME solve).  Both redundancies fold away:
+
+  * the spectral factor (:mod:`repro.kernels.spectral`) is lam- and
+    rho-independent, so ONE ``eigh`` serves the whole sweep AND the
+    CLIME solve;
+  * ``lam`` and ``rho`` are per-column operands of the blocked fused
+    kernel, so an L-point grid over a (d, k) batch is just a
+    (d, k*L) batch with ``lam`` varying across the replicated column
+    blocks -- one launch, with
+    :func:`repro.kernels.dantzig_fused.pick_block_k` sizing the Pallas
+    grid exactly as for any other wide batch.
+
+:func:`solve_dantzig_path` implements the fold for a raw solve;
+:func:`worker_debiased_path` runs a worker's ENTIRE debiased pipeline
+across the grid (one eigh, one wide direction launch, one CLIME solve
+shared by every lambda).  Selection helpers pick the operating point
+from the single launch: :func:`select_by_kkt` (most-constrained
+feasible lambda) or :func:`select_by_validation` (held-out score).
+Warm per-(column, lambda) rho rides along in the results, so repeated
+sweeps (e.g. across bootstrap draws or data refreshes) thread their
+penalties forward without recompiling -- rho is a traced operand.
+
+Column layout: lambda index l owns columns [l*k, (l+1)*k); outputs
+unfold to a leading (L, ...) axis.  Columns never interact in the
+kernel, so the folded sweep is exact, not approximate -- pinned to
+1e-5 against L independent solves on every dispatch path by
+``tests/test_spectral_path.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.clime import solve_clime_columns
+from repro.core.dantzig import DantzigConfig, kkt_violation
+from repro.core.pipeline import DiscriminantHead, HeadStats
+from repro.core.solver_dispatch import solve_dantzig_with_rho
+from repro.kernels.spectral import SpectralFactor, as_spectral_factor
+
+__all__ = [
+    "PathResult",
+    "WorkerPathResult",
+    "solve_dantzig_path",
+    "worker_debiased_path",
+    "select_by_kkt",
+    "select_by_validation",
+    "take_lambda",
+]
+
+
+class PathResult(NamedTuple):
+    """One folded sweep: everything indexed by the leading lambda axis."""
+
+    beta: jnp.ndarray  # (L, d, k) solutions ((L, d) for vector rhs)
+    lam: jnp.ndarray  # (L,) the grid
+    kkt: jnp.ndarray  # (L, k) constraint violations ((L,) for vector rhs)
+    rho: jnp.ndarray  # (L, k) final per-(lambda, column) ADMM penalties
+
+
+def solve_dantzig_path(
+    a: jnp.ndarray | SpectralFactor,
+    b: jnp.ndarray,
+    lams: jnp.ndarray,
+    cfg: DantzigConfig = DantzigConfig(),
+    *,
+    rho: jnp.ndarray | None = None,
+    backend: str | None = None,
+) -> PathResult:
+    """Solve a (d, k) Dantzig batch at EVERY lambda in one launch.
+
+    Args:
+      a:    (d, d) PSD matrix or its :class:`SpectralFactor`; a raw
+            matrix is factorized once for the whole sweep.
+      b:    (d,) or (d, k) right-hand side(s), shared by all lambdas.
+      lams: (L,) box-radius grid.
+      rho:  optional warm per-(lambda, column) penalties -- scalar,
+            (L,), (k,), or (L, k) (e.g. ``PathResult.rho`` from the
+            previous sweep); a traced operand on the fused paths, so
+            re-sweeping never recompiles.
+
+    The k*L columns dispatch as ONE batch: ``select_solver`` sees
+    (d, k*L) and tiles it over the Pallas grid with the same
+    ``pick_block_k`` sizing as any other batch (or falls back to scan
+    under the usual rules).  Returns a :class:`PathResult`.
+    """
+    factor = as_spectral_factor(a)
+    squeeze = b.ndim == 1
+    b2 = b[:, None] if squeeze else b
+    d, k = b2.shape
+    lams = jnp.asarray(lams)
+    (L,) = lams.shape
+
+    # fold: lambda l owns columns [l*k, (l+1)*k)
+    wide_b = jnp.tile(b2, (1, L))
+    wide_lam = jnp.repeat(lams.astype(b2.dtype), k)
+    wide_rho = None
+    if rho is not None:
+        r = jnp.asarray(rho, jnp.float32)
+        if r.ndim == 0:
+            r = jnp.broadcast_to(r, (L, k))
+        elif r.ndim == 1:
+            # (L,) = per-lambda (wins the L == k ambiguity), (k,) = per-column
+            if r.shape[0] == L:
+                r = jnp.broadcast_to(r[:, None], (L, k))
+            elif r.shape[0] == k:
+                r = jnp.broadcast_to(r[None, :], (L, k))
+            else:
+                raise ValueError(f"rho shape {r.shape} matches neither "
+                                 f"(L,)=({L},) nor (k,)=({k},)")
+        else:
+            r = jnp.broadcast_to(r, (L, k))
+        wide_rho = r.reshape(L * k)
+
+    wide_out, wide_rho_final = solve_dantzig_with_rho(
+        factor, wide_b, wide_lam, cfg, rho=wide_rho, backend=backend)
+
+    wide_kkt = kkt_violation(factor.sigma, wide_b, wide_out, wide_lam)
+
+    beta = jnp.moveaxis(wide_out.reshape(d, L, k), 1, 0)  # (L, d, k)
+    kkt = wide_kkt.reshape(L, k)
+    rho_final = jnp.broadcast_to(
+        jnp.asarray(wide_rho_final, jnp.float32), (L * k,)).reshape(L, k)
+    if squeeze:
+        return PathResult(beta[:, :, 0], lams, kkt[:, 0], rho_final)
+    return PathResult(beta, lams, kkt, rho_final)
+
+
+class WorkerPathResult(NamedTuple):
+    """A worker's debiased pipeline swept across the lambda grid."""
+
+    beta_tilde: jnp.ndarray  # (L, d, K) debiased direction blocks
+    beta_hat: jnp.ndarray  # (L, d, K) biased local estimates
+    lam: jnp.ndarray  # (L,)
+    kkt: jnp.ndarray  # (L, K) direction-solve constraint violations
+    rho_beta: jnp.ndarray  # (L, K) warm penalties for the next sweep
+    stats: HeadStats  # the head's sufficient statistics (lambda-free)
+
+
+def worker_debiased_path(
+    head: DiscriminantHead,
+    *data: jnp.ndarray,
+    lams: jnp.ndarray,
+    lam_prime,
+    cfg: DantzigConfig = DantzigConfig(),
+    rho_beta: jnp.ndarray | None = None,
+    rho_theta: jnp.ndarray | None = None,
+) -> WorkerPathResult:
+    """One machine's debiased estimate at EVERY lambda in one launch.
+
+    The lambda-path analogue of
+    :func:`repro.core.pipeline.worker_debiased`: one ``eigh``
+    factorizes Sigma_hat for the entire sweep, the (d, K) direction
+    block solves at all L grid points in a single folded launch
+    (k = K -> K*L columns), and ONE CLIME solve at ``lam_prime``
+    (lambda-independent, like the factor) debiases every grid point:
+
+        beta_tilde_l = beta_hat_l - Theta^T (Sigma beta_hat_l - rhs).
+
+    That is 1 launch + 1 eigendecomposition where the sequential sweep
+    pays L launches + L+1 eigendecompositions.  ``rho_beta`` /
+    ``rho_theta`` thread warm penalties exactly as in the single-point
+    pipeline (``rho_beta`` additionally accepts the (L, K) carry from a
+    previous :class:`WorkerPathResult`).
+
+    Runs unsharded (the mesh paths tune lambda per machine before
+    entering shard_map; the CLIME model-axis sharding composes with a
+    single chosen lambda, not with the sweep).
+    """
+    hs = head.stats(*data)
+    factor = as_spectral_factor(hs.sigma)
+    dir_path = solve_dantzig_path(
+        factor, hs.rhs, lams, cfg, rho=rho_beta)  # beta: (L, d, K)
+    d = hs.rhs.shape[0]
+    theta = solve_clime_columns(
+        factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta)  # (d, d)
+    # debias every grid point with the ONE shared Theta_hat
+    resid = jnp.einsum("ij,ljk->lik", hs.sigma, dir_path.beta) - hs.rhs[None]
+    beta_tilde = dir_path.beta - jnp.einsum("ji,ljk->lik", theta, resid)
+    return WorkerPathResult(
+        beta_tilde=beta_tilde,
+        beta_hat=dir_path.beta,
+        lam=dir_path.lam,
+        kkt=dir_path.kkt,
+        rho_beta=dir_path.rho,
+        stats=hs,
+    )
+
+
+def select_by_kkt(result: "PathResult | WorkerPathResult", tol: float = 1e-3):
+    """Index of the smallest lambda whose solve is tol-feasible.
+
+    Smaller lambda = tighter box = better statistical rate (the paper's
+    lam ∝ sqrt(log d / n) is the smallest radius the concentration
+    bound allows), but below the solvable radius ADMM leaves a
+    constraint violation.  Rule: among grid points with
+    ``max_k kkt <= tol`` pick the smallest lambda; if none qualify,
+    fall back to the smallest violation.  Returns a traced scalar index
+    into ``result.lam``.
+    """
+    kkt = result.kkt
+    kkt_max = kkt if kkt.ndim == 1 else jnp.max(kkt, axis=-1)  # (L,)
+    feasible = kkt_max <= tol
+    lam_key = jnp.where(feasible, result.lam, jnp.inf)
+    return jnp.where(
+        jnp.any(feasible), jnp.argmin(lam_key), jnp.argmin(kkt_max))
+
+
+def select_by_validation(betas: jnp.ndarray, score_fn):
+    """Index of the best-scoring estimate along the leading lambda axis.
+
+    ``score_fn(beta) -> scalar`` (higher is better, e.g. held-out
+    accuracy); evaluated per grid point.  Returns ``(index, scores)``.
+    """
+    scores = jnp.stack([score_fn(betas[i]) for i in range(betas.shape[0])])
+    return jnp.argmax(scores), scores
+
+
+def take_lambda(path_values: jnp.ndarray, idx) -> jnp.ndarray:
+    """Select one grid point from any (L, ...) path output (traced-safe)."""
+    return jnp.take(path_values, idx, axis=0)

@@ -37,6 +37,17 @@ fused / fused_blocked picked from shape + config), and warm per-column
 ADMM penalties thread through as ``rho_beta`` (K,) / ``rho_theta``
 (columns-per-device,): on the fused paths they are traced operands, so
 warm estimates carried across lambda sweeps never recompile.
+
+Sigma_hat is factorized EXACTLY ONCE per worker
+(:func:`~repro.kernels.spectral.spectral_factor`, one ``eigh``): the
+direction solve and the CLIME columns both consume the same
+:class:`~repro.kernels.spectral.SpectralFactor`, halving the O(d^3)
+work per machine on every path, including the shard_map mesh paths
+(the factorization sits inside the per-device shard function, so each
+model-device factorizes its replicated Sigma_hat once).  The invariant
+is pinned by the eigh-count jaxpr test in ``tests/test_spectral_path.py``.
+Lambda-path sweeps extend the same sharing across an entire grid of
+box radii -- see :mod:`repro.core.path`.
 """
 
 from __future__ import annotations
@@ -50,6 +61,7 @@ from repro.core.clime import solve_clime_columns
 from repro.core.dantzig import DantzigConfig
 from repro.core.solver_dispatch import solve_dantzig
 from repro.kernels import ops as kops
+from repro.kernels.spectral import spectral_factor
 
 
 class HeadStats(NamedTuple):
@@ -221,12 +233,15 @@ def worker_debiased(
     their correction rows are masked out of the gather.
     """
     hs = head.stats(*data)
-    beta_hat = solve_dantzig(hs.sigma, hs.rhs, lam, cfg, rho=rho_beta)
+    # ONE eigendecomposition per worker: the direction solve and every
+    # CLIME column share this factor (it is rho- and lam-independent).
+    factor = spectral_factor(hs.sigma)
+    beta_hat = solve_dantzig(factor, hs.rhs, lam, cfg, rho=rho_beta)
     d = beta_hat.shape[0]
     resid = hs.sigma @ beta_hat - hs.rhs  # (d, K)
     if model_axis is None:
         theta = solve_clime_columns(
-            hs.sigma, jnp.arange(d), lam_prime, cfg, rho=rho_theta
+            factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta
         )
         correction = theta.T @ resid
     else:
@@ -236,7 +251,7 @@ def worker_debiased(
         cols = idx * cols_per + jnp.arange(cols_per)
         valid = cols < d
         theta_block = solve_clime_columns(
-            hs.sigma, jnp.minimum(cols, d - 1), lam_prime, cfg, rho=rho_theta
+            factor, jnp.minimum(cols, d - 1), lam_prime, cfg, rho=rho_theta
         )
         corr_slice = jnp.where(
             valid[:, None], theta_block.T @ resid, 0.0

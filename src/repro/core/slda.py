@@ -15,13 +15,20 @@ over ``pipeline.worker_debiased(BinaryHead(), ...)`` -- plus the
 master-side aggregation and the two baselines the paper compares
 against (centralized SLDA, naive averaging -- assembled in
 :mod:`repro.core.distributed`).
+
+Lambda tuning (the paper's lam ∝ sqrt(log d / n) with grid-tuned
+constants) goes through :func:`debiased_local_estimator_path`: the
+whole grid solves in ONE folded launch sharing ONE eigendecomposition
+(:mod:`repro.core.path`), and :func:`tune_lambda_validation` picks the
+operating point by held-out misclassification.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from repro.core import pipeline
+from repro.core import classifier, path, pipeline
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import BinaryHead, SuffStats, suff_stats  # noqa: F401
 from repro.core.solver_dispatch import solve_dantzig
@@ -32,6 +39,8 @@ __all__ = [
     "local_slda",
     "debias",
     "debiased_local_estimator",
+    "debiased_local_estimator_path",
+    "tune_lambda_validation",
     "hard_threshold",
     "aggregate",
     "centralized_slda",
@@ -67,6 +76,57 @@ def debiased_local_estimator(
         lam=lam, lam_prime=lam if lam_prime is None else lam_prime, cfg=cfg,
     )
     return beta_tilde[:, 0], beta_hat[:, 0]
+
+
+def debiased_local_estimator_path(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    lams: jnp.ndarray,
+    lam_prime: float | None = None,
+    cfg: DantzigConfig = DantzigConfig(),
+    rho_beta: jnp.ndarray | None = None,
+) -> path.WorkerPathResult:
+    """The worker pipeline at EVERY lambda in ``lams``, in one launch.
+
+    One eigendecomposition + one folded direction launch + one CLIME
+    solve serve the whole grid (vs L launches and L+1 eigh's run
+    naively); see :mod:`repro.core.path`.  ``lam_prime=None`` pins the
+    CLIME radius to the middle of the grid (a lambda-independent
+    choice keeps Theta_hat shared across the sweep).  ``rho_beta``
+    accepts the (L, 1) warm carry from a previous sweep's result.
+    Returns the full :class:`~repro.core.path.WorkerPathResult`
+    ((L, d, 1) blocks; squeeze the trailing axis for the paper's
+    vectors).
+    """
+    lams = jnp.asarray(lams)
+    if lam_prime is None:
+        lam_prime = lams[lams.shape[0] // 2]
+    return path.worker_debiased_path(
+        BinaryHead(), x, y, lams=lams, lam_prime=lam_prime, cfg=cfg,
+        rho_beta=rho_beta,
+    )
+
+
+def tune_lambda_validation(
+    result: path.WorkerPathResult,
+    z_val: jnp.ndarray,
+    labels_val: jnp.ndarray,
+):
+    """Pick lambda by held-out misclassification of the Fisher rule.
+
+    ``result.stats.aux`` carries the worker's (mu1, mu2), so the rule
+    needs only the validation draw.  Returns ``(idx, error_rates)``;
+    the tuned estimator is ``result.beta_tilde[idx, :, 0]`` (use
+    :func:`repro.core.path.take_lambda` under jit).
+    """
+    s = result.stats.aux
+
+    def err(beta_block):  # (d, 1) -> scalar error rate
+        return classifier.misclassification_rate(
+            z_val, labels_val, beta_block[:, 0], s.mu1, s.mu2)
+
+    errors = jax.vmap(err)(result.beta_tilde)  # (L,)
+    return jnp.argmin(errors), errors
 
 
 def hard_threshold(beta: jnp.ndarray, t) -> jnp.ndarray:

@@ -1,16 +1,17 @@
 """One dispatch layer for every Dantzig/CLIME solve in the system.
 
 Every solver entry point (:mod:`repro.core.slda`, :mod:`repro.core.clime`,
-:mod:`repro.core.distributed`) routes through :func:`solve_dantzig` here,
-which picks the implementation from the problem shape and config:
+:mod:`repro.core.distributed`, :mod:`repro.core.path`) routes through
+:func:`solve_dantzig` here, which picks the implementation from the
+problem shape and config:
 
 ``scan``
     The ``lax.scan`` ADMM in :func:`repro.core.dantzig.solve_dantzig_scan`.
     Selected when ``cfg.fused`` is False (it is the only path with
     residual-balancing adaptive rho), or as the fallback when the fused
-    kernel cannot fit even one column block in VMEM (the two (d, d)
-    operands A and Q alone exceed the budget, d ≳ 1250 at f32 with the
-    default 12 MiB budget).
+    kernel cannot fit even one column block in the fast-memory budget
+    (the two (d, d) operands A and Q alone exceed it, d ≳ 1250 at f32
+    with the default TPU 12 MiB budget).
 
 ``fused``
     The Pallas kernel in :mod:`repro.kernels.dantzig_fused` with the
@@ -18,9 +19,21 @@ which picks the implementation from the problem shape and config:
 
 ``fused_blocked``
     The same kernel with the column batch tiled over a Pallas grid;
-    chosen when the single-block footprint exceeds the VMEM budget.
-    Block size comes from :func:`repro.kernels.dantzig_fused.pick_block_k`
+    chosen when the single-block footprint exceeds the budget.  Block
+    size comes from :func:`repro.kernels.dantzig_fused.pick_block_k`
     (override with ``cfg.block_k``).
+
+The fast-memory budget is ``cfg.vmem_budget`` when set, else derived
+from the backend (:func:`repro.kernels.dantzig_fused.backend_vmem_budget`):
+TPU gets the 12 MiB VMEM budget, CPU mirrors it so shapes validated
+under the interpreter pick the TPU's path, and GPU gets a shared-memory
+-sized budget that routes realistic CLIME shapes to the scan solver
+(the fused kernel is a TPU design).
+
+Every entry point accepts either the raw (d, d) matrix or its
+:class:`~repro.kernels.spectral.SpectralFactor`; a factor is threaded
+to the implementation untouched, so the O(d^3) eigendecomposition
+happens exactly once per Sigma_hat no matter how many solves share it.
 
 The choice is made at trace time from static shapes, so it adds zero
 runtime cost and composes with jit/vmap/shard_map.  On non-TPU backends
@@ -39,15 +52,19 @@ from repro.core import dantzig as _dantzig
 from repro.kernels import ops as kops
 from repro.kernels.dantzig_fused import (
     DEFAULT_VMEM_BUDGET,
+    backend_vmem_budget,
     fused_block_vmem_bytes,
     pick_block_k,
 )
+from repro.kernels.spectral import SpectralFactor  # noqa: F401  (re-export)
 
 __all__ = [
     "SolverChoice",
     "select_solver",
     "solve_dantzig",
+    "solve_dantzig_with_rho",
     "fused_block_vmem_bytes",
+    "backend_vmem_budget",
     "DEFAULT_VMEM_BUDGET",
 ]
 
@@ -67,21 +84,22 @@ def select_solver(
 ) -> SolverChoice:
     """Pick the solver implementation for a (d, k) batch.
 
-    ``backend`` is reserved for backend-specific budgets and currently
-    unused: the VMEM model is TPU's, and the interpreter honors the
-    same blocking so shapes validated on CPU behave identically on TPU.
+    The fast-memory budget is ``cfg.vmem_budget`` when set, else the
+    ``backend``'s budget (None = the active ``jax.default_backend()``).
     """
-    del backend
     if not cfg.fused:
         return SolverChoice("scan")
-    bk = pick_block_k(d, k)
+    budget = cfg.vmem_budget
+    if budget is None:
+        budget = backend_vmem_budget(backend)
+    bk = pick_block_k(d, k, budget)
     if bk is None:
         # even one column per block cannot fit next to A and Q; an
         # explicit cfg.block_k cannot override infeasibility
         return SolverChoice("scan")
     if cfg.block_k is not None:
         # an override may force FINER blocking but never a block that
-        # busts the VMEM budget (bk from pick_block_k is the max that fits)
+        # busts the budget (bk from pick_block_k is the max that fits)
         bk = max(1, min(cfg.block_k, k, bk))
     if bk >= k:
         return SolverChoice("fused", k)
@@ -89,7 +107,7 @@ def select_solver(
 
 
 def solve_dantzig(
-    a: jnp.ndarray,
+    a: "jnp.ndarray | SpectralFactor",
     b: jnp.ndarray,
     lam,
     cfg: "_dantzig.DantzigConfig | None" = None,
@@ -100,7 +118,10 @@ def solve_dantzig(
     """Solve a (batch of) Dantzig problems via the dispatched implementation.
 
     Args:
-      a:   (d, d) PSD matrix.
+      a:   (d, d) PSD matrix, or its precomputed
+           :class:`~repro.kernels.spectral.SpectralFactor` (skips the
+           O(d^3) eigendecomposition -- the pipeline shares one factor
+           across the direction solve, CLIME, and lambda sweeps).
       b:   (d,) or (d, k) right-hand side(s).
       lam: scalar or (k,) per-problem box radius.
       rho: optional scalar or (k,) per-column ADMM penalty.  On the
@@ -111,6 +132,26 @@ def solve_dantzig(
     dtype on every path (so toggling ``cfg.fused`` never changes the
     output dtype).
     """
+    out, _ = solve_dantzig_with_rho(a, b, lam, cfg, rho=rho, backend=backend)
+    return out
+
+
+def solve_dantzig_with_rho(
+    a: "jnp.ndarray | SpectralFactor",
+    b: jnp.ndarray,
+    lam,
+    cfg: "_dantzig.DantzigConfig | None" = None,
+    *,
+    rho: jnp.ndarray | None = None,
+    backend: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`solve_dantzig` plus the final per-problem rho.
+
+    On the scan path the returned rho is the residual-balanced adapted
+    value; on the fused paths (fixed rho) it is the input broadcast to
+    (k,).  Either way it is the warm estimate to thread into the next
+    solve of a regularization-path sweep.
+    """
     if cfg is None:
         cfg = _dantzig.DantzigConfig()
     squeeze = b.ndim == 1
@@ -118,14 +159,21 @@ def solve_dantzig(
     d, k = b2.shape
     choice = select_solver(cfg, d, k, backend)
     if choice.kind == "scan":
-        out = _dantzig.solve_dantzig_scan(a, b2, lam, cfg, rho0=rho)
+        out, rho_final = _dantzig.solve_dantzig_scan(
+            a, b2, lam, cfg, rho0=rho, return_rho=True)
         out = out.astype(b.dtype)
     else:
+        rho_in = cfg.rho if rho is None else rho
         out = kops.dantzig_fused(
             a, b2, lam,
             iters=cfg.max_iters,
-            rho=cfg.rho if rho is None else rho,
+            rho=rho_in,
             alpha=cfg.alpha,
             block_k=choice.block_k,
+            vmem_budget=cfg.vmem_budget,
         )
-    return out[:, 0] if squeeze else out
+        rho_final = jnp.broadcast_to(
+            jnp.asarray(rho_in, jnp.float32), (k,))
+    if squeeze:
+        return out[:, 0], rho_final if rho_final.ndim == 0 else rho_final[0]
+    return out, rho_final

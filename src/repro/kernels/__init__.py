@@ -4,6 +4,9 @@
 - ``soft_threshold``: fused ADMM shrink step.
 - ``dantzig_fused``: whole Dantzig/CLIME ADMM solve, column batch
   tiled over a Pallas grid so any (d, k) shape fits VMEM.
+- ``spectral``: the SpectralFactor value type every solver entry point
+  accepts in place of a raw matrix (one eigendecomposition per
+  Sigma_hat, shared by the direction solve, CLIME, and lambda sweeps).
 
 Each kernel ships with a pure-jnp oracle in :mod:`repro.kernels.ref`.
 """

@@ -45,9 +45,34 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.spectral import SpectralFactor
+
 # Per-core VMEM is ~16 MiB; leave headroom for Mosaic's own buffers,
 # semaphores and the pipeline's double-buffered operand copies.
 DEFAULT_VMEM_BUDGET = 12 * 2**20
+
+# Per-backend fast-memory budgets for the blocking model.
+#   tpu: the VMEM budget above.
+#   cpu: mirrors the TPU budget on purpose -- the Pallas interpreter has
+#        no real VMEM limit, but honoring the same blocking means shapes
+#        validated on CPU pick the same scan/fused/fused_blocked path
+#        they will pick on TPU (see DESIGN.md §5).
+#   gpu: the kernel keeps A and Q resident, which maps to shared memory
+#        on GPU (~228 KB on H100); with headroom that routes realistic
+#        CLIME shapes (d >= ~128) to the XLA scan solver, which is the
+#        right call -- the fused design is a TPU design.
+BACKEND_VMEM_BUDGETS = {
+    "tpu": DEFAULT_VMEM_BUDGET,
+    "cpu": DEFAULT_VMEM_BUDGET,
+    "gpu": 192 * 2**10,
+}
+
+
+def backend_vmem_budget(backend: str | None = None) -> int:
+    """Fast-memory budget for ``backend`` (None = the active backend)."""
+    if backend is None:
+        backend = jax.default_backend()
+    return BACKEND_VMEM_BUDGETS.get(backend, DEFAULT_VMEM_BUDGET)
 
 
 def fused_block_vmem_bytes(d: int, block_k: int) -> int:
@@ -128,11 +153,11 @@ def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, rho_ref, out_ref,
     jax.jit, static_argnames=("iters", "alpha", "block_k", "interpret")
 )
 def dantzig_fused_pallas(
-    a: jnp.ndarray,
-    q: jnp.ndarray,
-    inv_eig: jnp.ndarray,
-    b: jnp.ndarray,
-    lam: jnp.ndarray,
+    a: jnp.ndarray | SpectralFactor,
+    q: jnp.ndarray | None = None,
+    inv_eig: jnp.ndarray | None = None,
+    b: jnp.ndarray | None = None,
+    lam: jnp.ndarray | float | None = None,
     rho: jnp.ndarray | float = 1.0,
     *,
     iters: int = 500,
@@ -143,7 +168,10 @@ def dantzig_fused_pallas(
     """Blocked fused ADMM solve.
 
     Args:
-      a, q:    (d, d) f32 matrix and its eigenvectors.
+      a, q:    (d, d) f32 matrix and its eigenvectors -- or pass a
+               :class:`~repro.kernels.spectral.SpectralFactor` as ``a``
+               (with ``q``/``inv_eig`` omitted) and the factor's pieces
+               are used as-is; the kernel never re-factorizes.
       inv_eig: (d,) 1/(eig^2 + 1).
       b:       (d, k) right-hand sides.
       lam:     scalar or (k,) per-column box radius.
@@ -152,6 +180,20 @@ def dantzig_fused_pallas(
       block_k: columns per grid step (None = whole batch in one block).
     Returns the sparse ADMM copy w: (d, k) f32.
     """
+    if isinstance(a, SpectralFactor):
+        if q is not None or inv_eig is not None:
+            raise TypeError(
+                "dantzig_fused_pallas: pass EITHER a SpectralFactor OR "
+                "(a, q, inv_eig), not both")
+        a, q, inv_eig = a.sigma, a.q, a.inv_eig
+    elif q is None or inv_eig is None:
+        raise TypeError(
+            "dantzig_fused_pallas: a raw matrix needs q and inv_eig "
+            "(or pass a SpectralFactor as the first argument)")
+    if b is None:
+        raise TypeError("dantzig_fused_pallas: missing right-hand sides b")
+    if lam is None:
+        raise TypeError("dantzig_fused_pallas: missing box radius lam")
     d, k = b.shape
     if block_k is None:
         block_k = k

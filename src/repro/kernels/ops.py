@@ -40,57 +40,66 @@ def soft_threshold(x: jnp.ndarray, t, **kw) -> jnp.ndarray:
     jax.jit, static_argnames=("iters", "alpha", "block_k", "interpret")
 )
 def _dantzig_fused_jit(a, b, lam, rho, *, iters, alpha, block_k, interpret):
-    """Spectral factor (O(d^3), cached by jit) + the blocked kernel."""
+    """Spectral factor (O(d^3), skipped when handed one) + the kernel."""
     from repro.kernels.dantzig_fused import dantzig_fused_pallas
+    from repro.kernels.spectral import SpectralFactor, spectral_factor
 
-    evals, q = jnp.linalg.eigh(a.astype(jnp.float32))
-    inv_eig = 1.0 / (evals * evals + 1.0)
-    out = dantzig_fused_pallas(a, q, inv_eig, b, lam, rho,
+    if not isinstance(a, SpectralFactor):
+        a = spectral_factor(a.astype(jnp.float32))
+    out = dantzig_fused_pallas(a, b=b, lam=lam, rho=rho,
                                iters=iters, alpha=alpha, block_k=block_k,
                                interpret=interpret)
     return out.astype(b.dtype)
 
 
 def dantzig_fused(a, b, lam, *, iters=500, rho=1.0, alpha=1.7,
-                  block_k=None, **kw):
+                  block_k=None, vmem_budget=None, **kw):
     """Whole Dantzig/CLIME ADMM solve in the blocked VMEM-resident kernel.
 
-    Computes the spectral factor outside the kernel (O(d^3) once), then
-    runs all iterations on-chip, one column block per grid step.
+    ``a`` is either the raw (d, d) matrix -- factorized here, O(d^3)
+    once per trace -- or a :class:`~repro.kernels.spectral.SpectralFactor`
+    whose eigendecomposition is reused as-is (the pipeline factorizes
+    Sigma_hat exactly once and threads the factor through every solve).
 
     ``rho`` may be a scalar or a (k,) per-column array (a traced
     operand -- warm per-column estimates do not recompile).  ``block_k``
     of None lets :func:`repro.kernels.dantzig_fused.pick_block_k` size
-    the block to the VMEM budget.  Returns a (d, k) sparse solution in
-    ``b``'s dtype (the dispatch layer applies the same contract to the
-    scan path, so toggling ``cfg.fused`` never changes dtypes).
+    the block to ``vmem_budget`` (None = the active backend's budget,
+    see :func:`repro.kernels.dantzig_fused.backend_vmem_budget`).
+    Returns a (d, k) sparse solution in ``b``'s dtype (the dispatch
+    layer applies the same contract to the scan path, so toggling
+    ``cfg.fused`` never changes dtypes).
     """
     from repro.kernels.dantzig_fused import (
-        DEFAULT_VMEM_BUDGET, fused_block_vmem_bytes, pick_block_k,
+        backend_vmem_budget, fused_block_vmem_bytes, pick_block_k,
     )
+    from repro.kernels.spectral import sigma_of
 
     interpret = kw.pop("interpret", None)
     if interpret is None:
         interpret = _interpret()
     if kw:
         raise TypeError(f"unexpected keyword arguments: {sorted(kw)}")
+    if vmem_budget is None:
+        vmem_budget = backend_vmem_budget()
+    d = sigma_of(a).shape[0]
     squeeze = b.ndim == 1
     if squeeze:
         b = b[:, None]
     if block_k is None:
-        block_k = pick_block_k(a.shape[0], b.shape[1])
+        block_k = pick_block_k(d, b.shape[1], vmem_budget)
         if block_k is None:
             if not interpret:
                 raise ValueError(
-                    f"dantzig_fused: A and Q at d={a.shape[0]} exceed the "
+                    f"dantzig_fused: A and Q at d={d} exceed the "
                     "VMEM budget for any column block; use the scan solver "
                     "(repro.core.solver_dispatch falls back automatically)")
             block_k = b.shape[1]  # interpreter has no VMEM limit
     elif not interpret:
         bk = max(1, min(block_k, b.shape[1]))
-        if fused_block_vmem_bytes(a.shape[0], bk) > DEFAULT_VMEM_BUDGET:
+        if fused_block_vmem_bytes(d, bk) > vmem_budget:
             raise ValueError(
-                f"dantzig_fused: block_k={block_k} at d={a.shape[0]} exceeds "
+                f"dantzig_fused: block_k={block_k} at d={d} exceeds "
                 "the VMEM budget; pass block_k=None to auto-size the block")
     out = _dantzig_fused_jit(a, b, lam, rho, iters=iters, alpha=alpha,
                              block_k=block_k, interpret=interpret)

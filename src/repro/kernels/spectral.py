@@ -1,0 +1,84 @@
+"""The cached spectral factor every Dantzig/CLIME solve shares.
+
+The exact two-block ADMM iteration (repro.core.dantzig) solves
+``(A^2 + I) beta = v`` once per iteration.  With one symmetric
+eigendecomposition ``A = Q L Q^T`` the solve is two matmuls:
+``Q diag(1/(L^2+1)) Q^T v``.  Crucially the factor depends ONLY on A --
+not on the right-hand sides, not on the box radius ``lam``, not on the
+ADMM penalty ``rho`` (rho enters the iteration only through the shrink
+threshold and the scaled duals).  One factorization therefore serves
+
+  * the direction solve AND the CLIME solve of a worker (both share
+    the machine's Sigma_hat),
+  * every point of a lambda-regularization-path sweep
+    (:mod:`repro.core.path`),
+  * every warm-rho re-solve.
+
+:class:`SpectralFactor` packages (A, Q, 1/(L^2+1)) as a NamedTuple --
+a pytree, so it flows through jit/vmap/shard_map like any array -- and
+every solver entry point accepts it in place of the raw matrix
+(`repro.core.solver_dispatch.solve_dantzig`, the scan solver, the
+fused kernel wrappers, the CLIME entry points).  Contract: whoever
+computes Sigma factorizes it ONCE via :func:`spectral_factor`; callees
+never re-factorize a factor they are handed (see DESIGN.md §6).
+
+This lives in the kernels layer because the fused Pallas kernel
+(:mod:`repro.kernels.dantzig_fused`) consumes the factor directly as
+operands; the core layer imports downward, never the reverse.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SpectralFactor(NamedTuple):
+    """``sigma = q @ diag(evals) @ q.T``, the worker's one factorization.
+
+    The factor stores the RAW eigenvalues; the ADMM diagonal
+    ``1 / (evals^2 + 1)`` (the diagonal of ``(sigma^2 + I)^{-1}`` in
+    the eigenbasis) is exposed as the :attr:`inv_eig` property and
+    recomputed at each use site.  Deliberate: ``eigh`` is bitwise
+    stable across jit boundaries but the elementwise chain is not (XLA
+    fuses ``e*e + 1`` into an fma inside a larger program), so deriving
+    ``inv_eig`` inside the consumer's own trace keeps solves handed a
+    factor bit-for-bit identical to solves that factorize internally.
+    The recompute is d elementwise ops -- free next to the O(d^3) eigh
+    it caches.
+    """
+
+    sigma: jnp.ndarray  # (d, d) the matrix itself (PSD sample covariance)
+    q: jnp.ndarray  # (d, d) orthonormal eigenvectors
+    evals: jnp.ndarray  # (d,) eigenvalues
+
+    @property
+    def d(self) -> int:
+        return self.sigma.shape[0]
+
+    @property
+    def inv_eig(self) -> jnp.ndarray:
+        """(d,) diagonal of ``(sigma^2 + I)^{-1}`` in the eigenbasis."""
+        return 1.0 / (self.evals * self.evals + 1.0)
+
+
+def spectral_factor(sigma: jnp.ndarray) -> SpectralFactor:
+    """Factorize ``sigma`` ONCE (the only ``eigh`` call in the system).
+
+    O(d^3); everything downstream of it is (d, d) x (d, k) matmuls.
+    """
+    evals, q = jnp.linalg.eigh(sigma)
+    return SpectralFactor(sigma, q, evals)
+
+
+def as_spectral_factor(a) -> SpectralFactor:
+    """Pass a factor through; factorize a raw matrix."""
+    if isinstance(a, SpectralFactor):
+        return a
+    return spectral_factor(a)
+
+
+def sigma_of(a) -> jnp.ndarray:
+    """The raw matrix behind either calling convention."""
+    return a.sigma if isinstance(a, SpectralFactor) else a

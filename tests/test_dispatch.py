@@ -8,6 +8,7 @@ from repro.core.dantzig import DantzigConfig, solve_dantzig, solve_dantzig_scan
 from repro.core.solver_dispatch import (
     DEFAULT_VMEM_BUDGET,
     SolverChoice,
+    backend_vmem_budget,
     select_solver,
     fused_block_vmem_bytes,
 )
@@ -81,6 +82,52 @@ def test_scan_accepts_warm_rho_seed():
     warm = solve_dantzig(a, b, 0.1, DantzigConfig(max_iters=1200),
                          rho=jnp.full((k,), 2.0))
     np.testing.assert_allclose(np.asarray(base), np.asarray(warm), atol=5e-4)
+
+
+def test_backend_budgets_drive_selection():
+    """The backend parameter is live: it resolves the fast-memory budget."""
+    # cpu mirrors the TPU budget so interpreter-validated shapes pick
+    # the path they will pick on TPU
+    assert backend_vmem_budget("cpu") == backend_vmem_budget("tpu") \
+        == DEFAULT_VMEM_BUDGET
+    # the active backend is the default (this suite runs on cpu)
+    assert backend_vmem_budget() == backend_vmem_budget(
+        jax.default_backend())
+    cfg = DantzigConfig(fused=True)
+    # (256, 64) fits one block under the TPU budget...
+    assert select_solver(cfg, 256, 64, backend="tpu").kind == "fused"
+    # ...but A + Q at d=256 alone bust a GPU shared-memory-sized
+    # budget, so the same shape falls back to scan there
+    assert backend_vmem_budget("gpu") < DEFAULT_VMEM_BUDGET
+    assert select_solver(cfg, 256, 64, backend="gpu").kind == "scan"
+    # an unknown backend gets the conservative default
+    assert backend_vmem_budget("wasm") == DEFAULT_VMEM_BUDGET
+
+
+def test_cfg_vmem_budget_overrides_backend():
+    """DantzigConfig.vmem_budget wins over any backend derivation."""
+    # a budget too small for even one column at d=256 forces scan on
+    # every backend
+    tiny = DantzigConfig(fused=True, vmem_budget=100_000)
+    assert select_solver(tiny, 256, 64).kind == "scan"
+    assert select_solver(tiny, 256, 64, backend="tpu").kind == "scan"
+    # a budget big enough for one block keeps the whole batch fused
+    # even where the backend budget would have tiled or bailed
+    huge = DantzigConfig(fused=True, vmem_budget=2**30)
+    assert select_solver(huge, 768, 512, backend="gpu") == \
+        SolverChoice("fused", 512)
+    # and the end-to-end solve under an explicit budget stays exact
+    d = 32
+    a = jnp.asarray(ar1_covariance(d, 0.6), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(3), (d, 6))
+    base = solve_dantzig(a, b, 0.1,
+                         DantzigConfig(max_iters=150, adapt_rho=False))
+    for budget in (100_000, 2**26):
+        cfg = DantzigConfig(max_iters=150, adapt_rho=False, fused=True,
+                            vmem_budget=budget)
+        np.testing.assert_allclose(
+            np.asarray(solve_dantzig(a, b, 0.1, cfg)), np.asarray(base),
+            atol=1e-4)
 
 
 def test_clime_forwards_warm_rho():
