@@ -1,13 +1,19 @@
-"""CI gate over the BENCH_*.json artifacts: fail on parity regression.
+"""CI gate over the BENCH_*.json artifacts: fail on perf/parity regression.
 
 Run AFTER ``python -m benchmarks.run --only fused_solver`` (and
-optionally ``--only lambda_path``).  Reads the machine-readable
-benchmark output and exits nonzero when the scan-vs-fused solver
-parity (``max_abs_diff``) exceeds the pinned budget -- a tighter bar
-than the benchmark's own internal 1e-3 assert, because on the CI CPU
-the interpreter executes the same float ops as the scan path and the
-observed diff is ~0; anything above 1e-5 means a real numerical
-regression in the kernel or the dispatch contract, not noise.
+optionally ``--only lambda_path`` / ``--only admm_convergence``).
+Reads the machine-readable benchmark output and exits nonzero when
+
+  * the scan-vs-fused solver parity (``max_abs_diff``) exceeds the
+    pinned 1e-5 budget -- a tighter bar than the benchmark's own
+    internal 1e-3 assert, because on the CI CPU the interpreter
+    executes the same float ops as the scan path and the observed diff
+    is ~0; anything above 1e-5 means a real numerical regression in
+    the kernel or the dispatch contract, not noise;
+  * the convergence-adaptive solver (``admm_convergence``) drifts
+    more than 1e-4 from the fixed-500 solution, or any *gated*
+    warm-started lambda-path re-sweep stops converging in fewer
+    iterations than its cold counterpart (DESIGN.md §7).
 
 Usage: ``PYTHONPATH=src python -m benchmarks.ci_gate``
 """
@@ -20,18 +26,20 @@ import sys
 from benchmarks.common import bench_json_path
 
 PARITY_BUDGET = 1e-5
+ADAPTIVE_PARITY_BUDGET = 1e-4  # early-exit solution vs fixed-500
 
-# name -> column holding the scan-vs-fused max-abs parity
+# name -> column holding the gated max-abs parity
 GATED = {
-    "fused_solver": "max_abs_diff",
-    "lambda_path": "max_abs_diff",
+    "fused_solver": ("max_abs_diff", PARITY_BUDGET),
+    "lambda_path": ("max_abs_diff", PARITY_BUDGET),
+    "admm_convergence": ("max_abs_diff", ADAPTIVE_PARITY_BUDGET),
 }
 
 
 def main() -> int:
     failures = []
     checked = 0
-    for name, col in GATED.items():
+    for name, (col, budget) in GATED.items():
         path = bench_json_path(name)
         try:
             with open(path) as f:
@@ -45,16 +53,33 @@ def main() -> int:
             checked += 1
             val = float(row[col])
             tag = {k: row[k] for k in ("d", "k", "L") if k in row}
-            if val > PARITY_BUDGET:
+            if val > budget:
                 failures.append(
-                    f"{name} {tag}: {col}={val:g} > {PARITY_BUDGET:g}")
+                    f"{name} {tag}: {col}={val:g} > {budget:g}")
             else:
                 print(f"[ci_gate] {name} {tag}: {col}={val:g} OK")
+        if name == "admm_convergence":
+            for wc in payload.get("warm_vs_cold", []):
+                checked += 1
+                if not wc.get("gated", False):
+                    print(f"[ci_gate] {name} {wc['scenario']}: "
+                          f"cold={wc['cold_iters']} warm={wc['warm_iters']} "
+                          "(recorded, ungated)")
+                    continue
+                if not wc["warm_iters"] < wc["cold_iters"]:
+                    failures.append(
+                        f"{name} {wc['scenario']}: warm-started sweep "
+                        f"iterations {wc['warm_iters']} not below cold "
+                        f"{wc['cold_iters']}")
+                else:
+                    print(f"[ci_gate] {name} {wc['scenario']}: "
+                          f"warm {wc['warm_iters']} < cold "
+                          f"{wc['cold_iters']} OK")
     if failures:
         for msg in failures:
             print(f"[ci_gate] FAIL: {msg}", file=sys.stderr)
         return 1
-    print(f"[ci_gate] parity within {PARITY_BUDGET:g} on {checked} rows")
+    print(f"[ci_gate] all gates green on {checked} rows")
     return 0
 
 

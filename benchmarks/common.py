@@ -9,8 +9,8 @@ import platform
 import time
 from typing import Iterable, Sequence
 
-OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                       "experiments", "bench")
+REPO_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.path.join(REPO_DIR, "experiments", "bench")
 
 
 def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]) -> str:
@@ -36,6 +36,11 @@ def write_bench_json(name: str, header: Sequence[str],
     [{col: value, ...}, ...], **extra}``.  Rows mirror the CSV so the
     perf trajectory (timings + HBM model per shape) can be diffed
     across PRs and gated in CI (see ``benchmarks/ci_gate.py``).
+
+    Every file is MIRRORED to the repo root (``BENCH_<name>.json``):
+    the cross-PR perf-trajectory tooling reads the root-level files,
+    so writing only ``experiments/bench/`` makes the trajectory read
+    as empty.
     """
     import jax
 
@@ -48,10 +53,12 @@ def write_bench_json(name: str, header: Sequence[str],
         "rows": [dict(zip(header, r)) for r in rows],
     }
     payload.update(extra)
+    blob = json.dumps(payload, indent=2, default=float) + "\n"
     path = bench_json_path(name)
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2, default=float)
-        f.write("\n")
+        f.write(blob)
+    with open(os.path.join(REPO_DIR, f"BENCH_{name}.json"), "w") as f:
+        f.write(blob)
     return path
 
 

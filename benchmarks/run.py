@@ -14,6 +14,7 @@ import time
 import traceback
 
 from benchmarks import (
+    admm_convergence,
     corollary48_threshold,
     fig1_machines,
     fig2_fixed_n,
@@ -36,6 +37,8 @@ BENCHES = [
     ("corollary48 (machine-count threshold m*)", corollary48_threshold.main),
     ("fused_solver (scan vs fused-blocked kernel)", fused_solver.main),
     ("lambda_path (folded sweep vs sequential launches)", lambda_path.main),
+    ("admm_convergence (adaptive early exit + warm starts)",
+     admm_convergence.main),
     ("roofline (dry-run aggregation)", roofline.main),
 ]
 

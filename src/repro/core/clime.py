@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.dantzig import DantzigConfig, SpectralFactor
+from repro.core.dantzig import AdmmState, DantzigConfig, SpectralFactor
 from repro.core.solver_dispatch import solve_dantzig
 from repro.kernels.spectral import sigma_of
 
@@ -35,15 +35,19 @@ def solve_clime_columns(
     lam: float | jnp.ndarray,
     cfg: DantzigConfig = DantzigConfig(),
     rho: jnp.ndarray | None = None,
+    state: AdmmState | None = None,
 ) -> jnp.ndarray:
     """Solve CLIME for the columns indexed by ``cols``.
 
+    ``state`` optionally resumes the column block from a previous
+    solve's ADMM state (leaves (d, len(cols))) -- the warm-start carry
+    of repeated re-solves, riding next to the warm per-column ``rho``.
     Returns (d, len(cols)) block of Theta_hat.
     """
     mat = sigma_of(sigma)
     d = mat.shape[0]
     rhs = jnp.zeros((d, cols.shape[0]), mat.dtype).at[cols, jnp.arange(cols.shape[0])].set(1.0)
-    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho)
+    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho, state=state)
 
 
 def solve_clime(
@@ -51,11 +55,12 @@ def solve_clime(
     lam: float | jnp.ndarray,
     cfg: DantzigConfig = DantzigConfig(),
     rho: jnp.ndarray | None = None,
+    state: AdmmState | None = None,
 ) -> jnp.ndarray:
     """Full (d, d) CLIME estimate (all columns in one batched solve)."""
     mat = sigma_of(sigma)
     rhs = jnp.eye(mat.shape[0], dtype=mat.dtype)
-    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho)
+    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho, state=state)
 
 
 def symmetrize_min(theta: jnp.ndarray) -> jnp.ndarray:

@@ -39,7 +39,16 @@ Extras, all fixed-shape and `lax.scan`-able:
   * over-relaxation (alpha ~ 1.7),
   * residual-balancing adaptive rho -- free here because the cached
     factor (A^2+I) does not depend on rho; only the scaled duals and
-    the shrink threshold rescale.
+    the shrink threshold rescale,
+  * residual-gated early exit (``cfg.tol``): the fixed ``lax.scan``
+    becomes a bounded ``lax.while_loop`` over ``cfg.check_every``-
+    iteration chunks that stops once the batch's max scaled residual
+    drops below ``tol`` (same residual definitions as the fused
+    kernel -- DESIGN.md §7), and full-state warm starts (``state0`` /
+    the returned :class:`~repro.kernels.dantzig_fused.AdmmState`)
+    that resume a solve instead of restarting from zero.  The default
+    ``cfg.tol=None`` keeps the historical fixed-iteration scan --
+    bit-exact with the pre-adaptive golden pins.
 
 Dispatch rules: :func:`solve_dantzig` is a thin shim over
 :func:`repro.core.solver_dispatch.solve_dantzig`, which picks between
@@ -67,6 +76,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels.dantzig_fused import AdmmState  # noqa: F401  (re-export)
 from repro.kernels.spectral import (  # noqa: F401  (re-exported API)
     SpectralFactor,
     spectral_factor,
@@ -100,6 +110,14 @@ class DantzigConfig(NamedTuple):
     # (None = derive from the active backend, see
     # repro.kernels.dantzig_fused.backend_vmem_budget)
     vmem_budget: int | None = None
+    # residual-gated early exit (DESIGN.md §7): stop once the batch's
+    # max scaled primal/dual residual drops below `tol`, checking every
+    # `check_every` iterations, capped at `max_iters`.  None (default)
+    # keeps the historical fixed-`max_iters` schedule bit-exact -- the
+    # mode the golden pre-refactor pins require.  `tol` is static:
+    # changing it recompiles (it gates trace-time control flow).
+    tol: float | None = None
+    check_every: int = 10
 
 
 def soft_threshold(x: jnp.ndarray, t: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
@@ -145,7 +163,7 @@ def solve_dantzig(
     return solver_dispatch.solve_dantzig(a, b, lam, cfg, rho=rho)
 
 
-@partial(jax.jit, static_argnames=("cfg", "return_rho"))
+@partial(jax.jit, static_argnames=("cfg", "return_rho", "return_info"))
 def solve_dantzig_scan(
     a: jnp.ndarray | SpectralFactor,
     b: jnp.ndarray,
@@ -154,8 +172,10 @@ def solve_dantzig_scan(
     rho0: jnp.ndarray | None = None,
     *,
     return_rho: bool = False,
+    state0: AdmmState | None = None,
+    return_info: bool = False,
 ) -> jnp.ndarray:
-    """The ``lax.scan`` ADMM implementation (adaptive rho lives here).
+    """The XLA ADMM implementation (adaptive rho lives here).
 
     ``a`` may be the raw matrix (factorized here) or a
     :class:`SpectralFactor` (the eigendecomposition is reused as-is).
@@ -163,6 +183,15 @@ def solve_dantzig_scan(
     (k,)); it defaults to ``cfg.rho``.  With ``return_rho`` the final
     adapted per-problem rho rides along -- the warm estimate that
     lambda-path sweeps carry into their next call.
+
+    ``state0`` optionally resumes the iteration from a previous solve's
+    :class:`~repro.kernels.dantzig_fused.AdmmState` (zero cold start
+    when None).  With ``cfg.tol`` set the fixed ``lax.scan`` becomes a
+    bounded ``lax.while_loop`` over ``cfg.check_every``-iteration
+    chunks with the residual-gated early exit of DESIGN.md §7;
+    ``return_info`` appends ``(state, iters)`` to the return value:
+    ``(beta[, rho], state, iters)`` with ``iters`` the scalar executed
+    iteration count.
     """
     squeeze = b.ndim == 1
     if squeeze:
@@ -183,9 +212,15 @@ def solve_dantzig_scan(
     zeros = jnp.zeros((d, k), a.dtype)
     rho_init = (jnp.full((k,), cfg.rho, a.dtype) if rho0 is None
                 else jnp.broadcast_to(jnp.asarray(rho0, a.dtype), (k,)))
-    init = DantzigState(
-        z=zeros, w=zeros, u1=zeros, u2=zeros, rho=rho_init,
-    )
+    if state0 is None:
+        init = DantzigState(
+            z=zeros, w=zeros, u1=zeros, u2=zeros, rho=rho_init,
+        )
+    else:
+        s0 = [jnp.asarray(v, a.dtype) for v in state0]
+        s0 = [v[:, None] if v.ndim == 1 else v for v in s0]
+        init = DantzigState(z=s0[0], w=s0[1], u1=s0[2], u2=s0[3],
+                            rho=rho_init)
 
     alpha = cfg.alpha
 
@@ -220,11 +255,56 @@ def solve_dantzig_scan(
         u2 = u2 / scale[None, :]
         return DantzigState(z, w, u1, u2, new_rho), None
 
-    state, _ = jax.lax.scan(body, init, jnp.arange(cfg.max_iters))
+    if cfg.tol is None:
+        state, _ = jax.lax.scan(body, init, jnp.arange(cfg.max_iters))
+        iters = jnp.int32(cfg.max_iters)
+    else:
+        # residual-gated early exit, mirroring the fused kernel's
+        # chunked while_loop (DESIGN.md §7): run `check_every`
+        # iterations, then compute the batch's max scaled residual and
+        # stop once it drops below tol (capped at exactly max_iters --
+        # the final chunk is clamped when check_every does not divide).
+        check_every = cfg.check_every
+
+        def chunk_body(carry):
+            it, state, _ = carry
+            n = jnp.minimum(jnp.int32(check_every), cfg.max_iters - it)
+
+            def inner(j, c):
+                state, _, _ = c
+                new, _ = body(state, it + j)
+                return new, new.z - state.z, new.w - state.w
+
+            state, dz, dw = jax.lax.fori_loop(
+                0, n, inner, (state, zeros, zeros))
+            beta = solve_m(a @ (state.z + b - state.u1)
+                           + (state.w - state.u2))
+            ab = a @ beta
+            r_pri = jnp.maximum(jnp.max(jnp.abs(ab - state.z - b)),
+                                jnp.max(jnp.abs(beta - state.w)))
+            s_dual = jnp.max(state.rho[None, :]
+                             * jnp.max(jnp.abs(a @ dz + dw), axis=0,
+                                       keepdims=True))
+            return it + n, state, jnp.maximum(r_pri, s_dual)
+
+        def chunk_cond(carry):
+            it, _, res = carry
+            return jnp.logical_and(it < cfg.max_iters, res > cfg.tol)
+
+        iters, state, _ = jax.lax.while_loop(
+            chunk_cond, chunk_body,
+            (jnp.int32(0), init, jnp.asarray(jnp.inf, a.dtype)))
+
     beta = state.w[:, 0] if squeeze else state.w
+    out = (beta,)
     if return_rho:
-        return beta, (state.rho[0] if squeeze else state.rho)
-    return beta
+        out += (state.rho[0] if squeeze else state.rho,)
+    if return_info:
+        leaves = (state.z, state.w, state.u1, state.u2)
+        if squeeze:
+            leaves = tuple(v[:, 0] for v in leaves)
+        out += (AdmmState(*leaves), iters)
+    return out if len(out) > 1 else out[0]
 
 
 def kkt_violation(a: jnp.ndarray, b: jnp.ndarray, beta: jnp.ndarray, lam) -> jnp.ndarray:

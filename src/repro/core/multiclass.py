@@ -94,6 +94,7 @@ def mc_debiased_local_path(
     lam_prime: float | None = None,
     cfg: DantzigConfig = DantzigConfig(),
     rho_beta: jnp.ndarray | None = None,
+    state_beta: "_path.AdmmState | None" = None,
 ) -> _path.WorkerPathResult:
     """All K directions at EVERY lambda in one folded launch.
 
@@ -111,6 +112,7 @@ def mc_debiased_local_path(
     return _path.worker_debiased_path(
         MulticlassHead(num_classes), x, labels,
         lams=lams, lam_prime=lam_prime, cfg=cfg, rho_beta=rho_beta,
+        state_beta=state_beta,
     )
 
 

@@ -33,6 +33,17 @@ unfold to a leading (L, ...) axis.  Columns never interact in the
 kernel, so the folded sweep is exact, not approximate -- pinned to
 1e-5 against L independent solves on every dispatch path by
 ``tests/test_spectral_path.py``.
+
+Continuation (DESIGN.md §7): every sweep returns the full per-(lambda,
+column) ADMM state next to the warm rho, and accepts one back via
+``state=`` -- the re-sweep resumes each grid point from its previous
+solution instead of restarting from zero (glmnet-style homotopy).  A
+single solve's (d, k) state broadcasts across the grid, and
+:func:`seed_path_state` re-maps a sweep's states onto a NEW grid by
+nearest lambda (grid refinement seeds each lambda's columns from the
+adjacent grid point).  With ``cfg.tol`` set the solver's
+residual-gated early exit turns those warm starts into measured
+iteration savings (``PathResult.iters``).
 """
 
 from __future__ import annotations
@@ -42,9 +53,9 @@ from typing import Any, NamedTuple
 import jax.numpy as jnp
 
 from repro.core.clime import solve_clime_columns
-from repro.core.dantzig import DantzigConfig, kkt_violation
+from repro.core.dantzig import AdmmState, DantzigConfig, kkt_violation
 from repro.core.pipeline import DiscriminantHead, HeadStats
-from repro.core.solver_dispatch import solve_dantzig_with_rho
+from repro.core.solver_dispatch import solve_dantzig_full
 from repro.kernels.spectral import SpectralFactor, as_spectral_factor
 
 __all__ = [
@@ -52,6 +63,7 @@ __all__ = [
     "WorkerPathResult",
     "solve_dantzig_path",
     "worker_debiased_path",
+    "seed_path_state",
     "select_by_kkt",
     "select_by_validation",
     "take_lambda",
@@ -65,6 +77,54 @@ class PathResult(NamedTuple):
     lam: jnp.ndarray  # (L,) the grid
     kkt: jnp.ndarray  # (L, k) constraint violations ((L,) for vector rhs)
     rho: jnp.ndarray  # (L, k) final per-(lambda, column) ADMM penalties
+    state: AdmmState  # full final states, leaves (L, d, k) ((L, d) vector)
+    iters: jnp.ndarray  # (L, k) executed iterations ((L,) for vector rhs)
+
+
+def _unfold(wide: jnp.ndarray, d: int, L: int, k: int) -> jnp.ndarray:
+    """(d, L*k) -> (L, d, k) under the lambda-owns-contiguous-columns fold."""
+    return jnp.moveaxis(wide.reshape(d, L, k), 1, 0)
+
+
+def _fold_state(state: AdmmState, d: int, L: int, k: int) -> AdmmState:
+    """Warm path state -> the (d, L*k) wide layout.
+
+    Accepts leaves of shape (L, d, k) (a previous sweep, e.g.
+    ``PathResult.state``), (L, d) (vector-rhs sweep), or (d, k) / (d,)
+    (a single solve, broadcast to every grid point -- seeding the whole
+    grid from one adjacent solution).
+    """
+    leaves = []
+    for leaf in state:
+        leaf = jnp.asarray(leaf, jnp.float32)
+        if leaf.ndim == 1:  # (d,) single vector solve
+            leaf = leaf[None, :, None]
+        elif leaf.ndim == 2 and leaf.shape[0] == d and leaf.shape != (L, d):
+            # (d, k) single solve (shape (L, d) only when a vector-rhs
+            # sweep's leaves ride in; d == L keeps the sweep reading)
+            leaf = leaf[None]
+        elif leaf.ndim == 2:  # (L, d) vector-rhs sweep
+            leaf = leaf[:, :, None]
+        leaf = jnp.broadcast_to(leaf, (L, d, k))
+        leaves.append(jnp.moveaxis(leaf, 0, 1).reshape(d, L * k))
+    return AdmmState(*leaves)
+
+
+def seed_path_state(
+    state: AdmmState, lams_from: jnp.ndarray, lams_to: jnp.ndarray
+) -> AdmmState:
+    """Re-map a sweep's per-lambda states onto a NEW lambda grid.
+
+    Each new grid point is seeded from the nearest old grid point's
+    state (glmnet-style homotopy for grid refinement): leaves go
+    (L_from, d, k) -> (L_to, d, k).  Feed the result straight into
+    :func:`solve_dantzig_path`'s ``state=``.
+    """
+    lams_from = jnp.asarray(lams_from)
+    lams_to = jnp.asarray(lams_to)
+    nearest = jnp.argmin(
+        jnp.abs(lams_to[:, None] - lams_from[None, :]), axis=1)  # (L_to,)
+    return AdmmState(*(jnp.take(leaf, nearest, axis=0) for leaf in state))
 
 
 def solve_dantzig_path(
@@ -74,6 +134,7 @@ def solve_dantzig_path(
     cfg: DantzigConfig = DantzigConfig(),
     *,
     rho: jnp.ndarray | None = None,
+    state: AdmmState | None = None,
     backend: str | None = None,
 ) -> PathResult:
     """Solve a (d, k) Dantzig batch at EVERY lambda in one launch.
@@ -87,6 +148,12 @@ def solve_dantzig_path(
             (L,), (k,), or (L, k) (e.g. ``PathResult.rho`` from the
             previous sweep); a traced operand on the fused paths, so
             re-sweeping never recompiles.
+      state: optional warm ADMM state -- a previous sweep's
+            ``PathResult.state`` (leaves (L, d, k) / (L, d)), or a
+            single solve's state (leaves (d, k) / (d,), broadcast to
+            every grid point).  Use :func:`seed_path_state` to re-map
+            states across different grids.  Traced operands: warm
+            re-sweeps never recompile.
 
     The k*L columns dispatch as ONE batch: ``select_solver`` sees
     (d, k*L) and tiles it over the Pallas grid with the same
@@ -120,19 +187,27 @@ def solve_dantzig_path(
         else:
             r = jnp.broadcast_to(r, (L, k))
         wide_rho = r.reshape(L * k)
+    wide_state = None if state is None else _fold_state(state, d, L, k)
 
-    wide_out, wide_rho_final = solve_dantzig_with_rho(
-        factor, wide_b, wide_lam, cfg, rho=wide_rho, backend=backend)
+    result = solve_dantzig_full(
+        factor, wide_b, wide_lam, cfg, rho=wide_rho, state=wide_state,
+        backend=backend)
 
-    wide_kkt = kkt_violation(factor.sigma, wide_b, wide_out, wide_lam)
+    wide_kkt = kkt_violation(factor.sigma, wide_b, result.beta, wide_lam)
 
-    beta = jnp.moveaxis(wide_out.reshape(d, L, k), 1, 0)  # (L, d, k)
+    beta = _unfold(result.beta, d, L, k)  # (L, d, k)
     kkt = wide_kkt.reshape(L, k)
     rho_final = jnp.broadcast_to(
-        jnp.asarray(wide_rho_final, jnp.float32), (L * k,)).reshape(L, k)
+        jnp.asarray(result.rho, jnp.float32), (L * k,)).reshape(L, k)
+    state_final = AdmmState(
+        *(_unfold(leaf, d, L, k) for leaf in result.state))
+    iters = result.iters.reshape(L, k)
     if squeeze:
-        return PathResult(beta[:, :, 0], lams, kkt[:, 0], rho_final)
-    return PathResult(beta, lams, kkt, rho_final)
+        return PathResult(
+            beta[:, :, 0], lams, kkt[:, 0], rho_final,
+            AdmmState(*(leaf[:, :, 0] for leaf in state_final)),
+            iters[:, 0])
+    return PathResult(beta, lams, kkt, rho_final, state_final, iters)
 
 
 class WorkerPathResult(NamedTuple):
@@ -144,6 +219,8 @@ class WorkerPathResult(NamedTuple):
     kkt: jnp.ndarray  # (L, K) direction-solve constraint violations
     rho_beta: jnp.ndarray  # (L, K) warm penalties for the next sweep
     stats: HeadStats  # the head's sufficient statistics (lambda-free)
+    state_beta: AdmmState  # (L, d, K) direction states for the next sweep
+    iters: jnp.ndarray  # (L, K) executed direction-solve iterations
 
 
 def worker_debiased_path(
@@ -154,6 +231,8 @@ def worker_debiased_path(
     cfg: DantzigConfig = DantzigConfig(),
     rho_beta: jnp.ndarray | None = None,
     rho_theta: jnp.ndarray | None = None,
+    state_beta: AdmmState | None = None,
+    state_theta: AdmmState | None = None,
 ) -> WorkerPathResult:
     """One machine's debiased estimate at EVERY lambda in one launch.
 
@@ -170,7 +249,11 @@ def worker_debiased_path(
     pays L launches + L+1 eigendecompositions.  ``rho_beta`` /
     ``rho_theta`` thread warm penalties exactly as in the single-point
     pipeline (``rho_beta`` additionally accepts the (L, K) carry from a
-    previous :class:`WorkerPathResult`).
+    previous :class:`WorkerPathResult`), and ``state_beta`` /
+    ``state_theta`` thread the full ADMM states the same way
+    (``state_beta`` accepts the ``state_beta`` carry of a previous
+    result; with ``cfg.tol`` set the resumed sweep exits in fewer
+    iterations -- see ``WorkerPathResult.iters``).
 
     Runs unsharded (the mesh paths tune lambda per machine before
     entering shard_map; the CLIME model-axis sharding composes with a
@@ -179,10 +262,12 @@ def worker_debiased_path(
     hs = head.stats(*data)
     factor = as_spectral_factor(hs.sigma)
     dir_path = solve_dantzig_path(
-        factor, hs.rhs, lams, cfg, rho=rho_beta)  # beta: (L, d, K)
+        factor, hs.rhs, lams, cfg, rho=rho_beta,
+        state=state_beta)  # beta: (L, d, K)
     d = hs.rhs.shape[0]
     theta = solve_clime_columns(
-        factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta)  # (d, d)
+        factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta,
+        state=state_theta)  # (d, d)
     # debias every grid point with the ONE shared Theta_hat
     resid = jnp.einsum("ij,ljk->lik", hs.sigma, dir_path.beta) - hs.rhs[None]
     beta_tilde = dir_path.beta - jnp.einsum("ji,ljk->lik", theta, resid)
@@ -193,6 +278,8 @@ def worker_debiased_path(
         kkt=dir_path.kkt,
         rho_beta=dir_path.rho,
         stats=hs,
+        state_beta=dir_path.state,
+        iters=dir_path.iters,
     )
 
 

@@ -58,7 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.clime import solve_clime_columns
-from repro.core.dantzig import DantzigConfig
+from repro.core.dantzig import AdmmState, DantzigConfig
 from repro.core.solver_dispatch import solve_dantzig
 from repro.kernels import ops as kops
 from repro.kernels.spectral import spectral_factor
@@ -209,6 +209,8 @@ def worker_debiased(
     model_axis_size: int = 1,
     rho_beta: jnp.ndarray | None = None,
     rho_theta: jnp.ndarray | None = None,
+    state_beta: AdmmState | None = None,
+    state_theta: AdmmState | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, HeadStats]:
     """One machine's full debiased estimate of the (d, K) direction block.
 
@@ -222,6 +224,10 @@ def worker_debiased(
         ``model_axis_size`` devices (pad-and-mask, exact for any d).
       rho_beta / rho_theta: optional warm per-column ADMM penalties for
         the direction / CLIME solves (traced on the fused paths).
+      state_beta / state_theta: optional warm ADMM states for the same
+        two solves (leaves (d, K) / (d, columns-per-device)) -- a
+        re-solve resumes from them instead of restarting from zero,
+        riding exactly like the warm rho (DESIGN.md §7).
 
     Returns ``(beta_tilde, beta_hat, stats)`` with (d, K) blocks.
 
@@ -236,12 +242,14 @@ def worker_debiased(
     # ONE eigendecomposition per worker: the direction solve and every
     # CLIME column share this factor (it is rho- and lam-independent).
     factor = spectral_factor(hs.sigma)
-    beta_hat = solve_dantzig(factor, hs.rhs, lam, cfg, rho=rho_beta)
+    beta_hat = solve_dantzig(factor, hs.rhs, lam, cfg, rho=rho_beta,
+                             state=state_beta)
     d = beta_hat.shape[0]
     resid = hs.sigma @ beta_hat - hs.rhs  # (d, K)
     if model_axis is None:
         theta = solve_clime_columns(
-            factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta
+            factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta,
+            state=state_theta,
         )
         correction = theta.T @ resid
     else:
@@ -251,7 +259,8 @@ def worker_debiased(
         cols = idx * cols_per + jnp.arange(cols_per)
         valid = cols < d
         theta_block = solve_clime_columns(
-            factor, jnp.minimum(cols, d - 1), lam_prime, cfg, rho=rho_theta
+            factor, jnp.minimum(cols, d - 1), lam_prime, cfg, rho=rho_theta,
+            state=state_theta,
         )
         corr_slice = jnp.where(
             valid[:, None], theta_block.T @ resid, 0.0

@@ -85,6 +85,7 @@ def debiased_local_estimator_path(
     lam_prime: float | None = None,
     cfg: DantzigConfig = DantzigConfig(),
     rho_beta: jnp.ndarray | None = None,
+    state_beta: "path.AdmmState | None" = None,
 ) -> path.WorkerPathResult:
     """The worker pipeline at EVERY lambda in ``lams``, in one launch.
 
@@ -92,18 +93,19 @@ def debiased_local_estimator_path(
     solve serve the whole grid (vs L launches and L+1 eigh's run
     naively); see :mod:`repro.core.path`.  ``lam_prime=None`` pins the
     CLIME radius to the middle of the grid (a lambda-independent
-    choice keeps Theta_hat shared across the sweep).  ``rho_beta``
-    accepts the (L, 1) warm carry from a previous sweep's result.
-    Returns the full :class:`~repro.core.path.WorkerPathResult`
-    ((L, d, 1) blocks; squeeze the trailing axis for the paper's
-    vectors).
+    choice keeps Theta_hat shared across the sweep).  ``rho_beta`` /
+    ``state_beta`` accept the warm carries from a previous sweep's
+    result (with ``cfg.tol`` set, a resumed sweep exits in fewer
+    iterations -- DESIGN.md §7).  Returns the full
+    :class:`~repro.core.path.WorkerPathResult` ((L, d, 1) blocks;
+    squeeze the trailing axis for the paper's vectors).
     """
     lams = jnp.asarray(lams)
     if lam_prime is None:
         lam_prime = lams[lams.shape[0] // 2]
     return path.worker_debiased_path(
         BinaryHead(), x, y, lams=lams, lam_prime=lam_prime, cfg=cfg,
-        rho_beta=rho_beta,
+        rho_beta=rho_beta, state_beta=state_beta,
     )
 
 

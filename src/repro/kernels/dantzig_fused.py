@@ -12,11 +12,11 @@ that share only the loop-invariant operands (A, Q, inv).  The kernel
 therefore tiles the column batch k over a 1-D Pallas grid:
 
   grid step i owns columns [i*block_k, (i+1)*block_k) and runs the
-  ENTIRE solve for its block in VMEM -- a lax.fori_loop whose body is
+  ENTIRE solve for its block in VMEM -- an iteration loop whose body is
   four (d, d) x (d, block_k) MXU matmuls plus clip/shrink on the VPU.
 
 ``block_k`` is chosen (see :func:`pick_block_k`) so that
-``A + Q + inv + b + out + 4 ADMM state blocks + loop temporaries`` fit
+``A + Q + inv + b + out + ADMM state blocks + loop temporaries`` fit
 the per-core VMEM budget.  A and Q are re-fetched once per block --
 still ~iters x fewer HBM bytes per block than the XLA scan path, which
 re-streams them every iteration.  When the whole batch fits, the grid
@@ -24,10 +24,12 @@ collapses to a single step and the kernel degenerates to the original
 whole-array design.
 
 Tail handling: k is padded up to a multiple of ``block_k`` with
-neutral columns (b = 0, lam = 1, rho = 1, whose exact solution is 0),
-so *any* (d, k) shape is exact; the wrapper slices the pad columns off
-the output.  Columns never interact, so the pad is mathematically
-inert, not just approximately so.
+neutral columns (b = 0, lam = 1, rho = 1, zero warm state, whose exact
+solution is 0), so *any* (d, k) shape is exact; the wrapper slices the
+pad columns off the output.  Columns never interact, so the pad is
+mathematically inert, not just approximately so -- and because the
+neutral column's residual is exactly zero from the first iteration, a
+pad column can never hold a block's convergence gate open.
 
 ``rho`` is a per-column (1, k) *operand* rather than a compile-time
 scalar: callers (repro.core.clime) can reuse warm per-column rho
@@ -35,11 +37,32 @@ estimates across calls without triggering recompilation.  ``iters``
 and ``alpha`` remain static.  No adaptive rho inside the kernel (it is
 per-column scalar control flow); the exact-ADMM iteration is robust to
 a fixed rho (see EXPERIMENTS.md SSPerf-A1).
+
+Convergence-adaptive mode (DESIGN.md §7): with a static ``tol`` the
+fixed ``fori_loop`` becomes a bounded ``lax.while_loop`` over chunks of
+``check_every`` iterations.  After each chunk the kernel computes the
+block's max scaled-ADMM residual IN VMEM (no HBM round trip):
+
+  r_pri  = max_j max(||A beta_j - z_j - b_j||_inf, ||beta_j - w_j||_inf)
+  s_dual = max_j rho_j * ||A dz_j + dw_j||_inf
+
+(dz/dw are the last in-chunk iteration deltas of the constraint
+copies) and stops the whole block when ``max(r_pri, s_dual) <= tol``,
+capped at exactly ``max_iters`` iterations (the final chunk is
+clamped when ``check_every`` does not divide it).  The executed
+iteration count per block rides out as an extra (1, num_blocks) int32
+output.  The adaptive kernel also takes and returns the full ADMM
+state ``(z, w, u1, u2)`` (:class:`AdmmState`), so a solve can RESUME
+from an earlier solution -- glmnet-style warm starts across lambda-path
+re-sweeps -- instead of restarting from zero.  ``tol=None`` keeps the
+original fixed-iteration kernel (bit-exact with the pre-adaptive
+golden pins).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +91,35 @@ BACKEND_VMEM_BUDGETS = {
 }
 
 
+class AdmmState(NamedTuple):
+    """The full two-block ADMM state of a (d, k) batch -- a pytree.
+
+    Passing a previous solve's state back in resumes the iteration
+    instead of restarting from zero (the warm-start carry of lambda-path
+    re-sweeps, riding next to the per-column warm ``rho``).  Leaves may
+    carry extra leading axes (e.g. the (L, d, k) per-lambda states of a
+    folded path sweep).
+    """
+
+    z: jnp.ndarray  # box-constrained copy of A beta - b
+    w: jnp.ndarray  # sparse copy of beta (the solution estimate)
+    u1: jnp.ndarray  # scaled dual for A beta - z = b
+    u2: jnp.ndarray  # scaled dual for beta - w = 0
+
+    @classmethod
+    def zeros(cls, d: int, k: int, dtype=jnp.float32) -> "AdmmState":
+        z = jnp.zeros((d, k), dtype)
+        return cls(z, z, z, z)
+
+
+class FusedSolveResult(NamedTuple):
+    """Adaptive-mode kernel outputs (see DESIGN.md §7)."""
+
+    beta: jnp.ndarray  # (d, k) the sparse ADMM copy w
+    state: AdmmState  # full final state, resumable
+    iters: jnp.ndarray  # (num_blocks,) int32 executed iterations per block
+
+
 def backend_vmem_budget(backend: str | None = None) -> int:
     """Fast-memory budget for ``backend`` (None = the active backend)."""
     if backend is None:
@@ -75,28 +127,41 @@ def backend_vmem_budget(backend: str | None = None) -> int:
     return BACKEND_VMEM_BUDGETS.get(backend, DEFAULT_VMEM_BUDGET)
 
 
-def fused_block_vmem_bytes(d: int, block_k: int) -> int:
+def fused_block_vmem_bytes(d: int, block_k: int, state_io: bool = False) -> int:
     """f32 VMEM footprint of one grid step of the fused kernel.
 
-    a, q: d*d each; inv: d; b, out: d*block_k; lam, rho: block_k;
-    ADMM state (z, w, u1, u2): 4*d*block_k; loop temporaries
+    Fixed mode: a, q: d*d each; inv: d; b, out: d*block_k; lam, rho:
+    block_k; ADMM state (z, w, u1, u2): 4*d*block_k; loop temporaries
     (beta, ab, relaxed copies): ~3*d*block_k.
+
+    ``state_io`` (the adaptive / warm-start kernel) additionally
+    streams the 4-leaf :class:`AdmmState` both IN and OUT and carries
+    the last-iteration deltas (dz, dw) for the dual residual: b + 4
+    state-in + 4 state-out + ~5 temporaries = 14 (d, block_k) arrays,
+    plus the residual row temporaries.
     """
-    return 4 * (2 * d * d + d + 9 * d * block_k + 2 * block_k)
+    per_col = 14 if state_io else 9
+    rows = 4 if state_io else 2
+    return 4 * (2 * d * d + d + per_col * d * block_k + rows * block_k)
 
 
-def pick_block_k(d: int, k: int, budget: int = DEFAULT_VMEM_BUDGET) -> int | None:
+def pick_block_k(d: int, k: int, budget: int = DEFAULT_VMEM_BUDGET,
+                 state_io: bool = False) -> int | None:
     """Largest column-block size whose grid step fits the VMEM budget.
 
     Returns ``k`` when the whole batch fits in one block, a smaller
     (lane-friendly) block size when it must be tiled, or ``None`` when
     even a single column cannot fit (A + Q alone blow the budget) --
     callers fall back to the XLA scan solver in that case.
+    ``state_io`` selects the adaptive kernel's larger per-column
+    footprint (see :func:`fused_block_vmem_bytes`).
     """
     avail = budget // 4 - 2 * d * d - d
     if avail <= 0:
         return None
-    bk = avail // (9 * d + 2)
+    per_col = 14 if state_io else 9
+    rows = 4 if state_io else 2
+    bk = avail // (per_col * d + rows)
     if bk < 1:
         return None
     if bk >= k:
@@ -111,8 +176,32 @@ def pick_block_k(d: int, k: int, budget: int = DEFAULT_VMEM_BUDGET) -> int | Non
     return bk
 
 
+def _matmul(m, x):
+    return jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _shrink(x, t):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def _admm_iteration(a, q, inv, b, lam, inv_rho, alpha, z, w, u1, u2):
+    """One exact two-block ADMM iteration (identical on every path)."""
+    beta = _matmul(q, inv * _matmul(q.T, _matmul(a, z + b - u1) + (w - u2)))
+    ab = _matmul(a, beta)
+    ab_r = alpha * ab + (1.0 - alpha) * (z + b)
+    beta_r = alpha * beta + (1.0 - alpha) * w
+    z_new = jnp.clip(ab_r - b + u1, -lam, lam)
+    w_new = _shrink(beta_r + u2, inv_rho)
+    u1 = u1 + ab_r - z_new - b
+    u2 = u2 + beta_r - w_new
+    return z_new, w_new, u1, u2
+
+
 def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, rho_ref, out_ref,
                        *, iters: int, alpha: float):
+    """Fixed-iteration, cold-start kernel (the golden-pinned fast path)."""
     a = a_ref[...]  # (d, d) VMEM-resident across all iterations
     q = q_ref[...]  # (d, d) eigenvectors of A
     inv = inv_ref[...]  # (d, 1) 1/(eig^2 + 1)
@@ -120,37 +209,99 @@ def _fused_admm_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, rho_ref, out_ref,
     lam = lam_ref[...]  # (1, block_k)
     inv_rho = 1.0 / rho_ref[...]  # (1, block_k) per-column shrink threshold
 
-    def matmul(m, x):
-        return jax.lax.dot_general(
-            m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-
-    def solve_m(v):  # (A^2 + I)^{-1} v  via the cached spectral factor
-        return matmul(q, inv * matmul(q.T, v))
-
-    def shrink(x, t):
-        return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
-
     zeros = jnp.zeros_like(b)
 
     def body(_, carry):
         z, w, u1, u2 = carry
-        beta = solve_m(matmul(a, z + b - u1) + (w - u2))
-        ab = matmul(a, beta)
-        ab_r = alpha * ab + (1.0 - alpha) * (z + b)
-        beta_r = alpha * beta + (1.0 - alpha) * w
-        z = jnp.clip(ab_r - b + u1, -lam, lam)
-        w = shrink(beta_r + u2, inv_rho)
-        u1 = u1 + ab_r - z - b
-        u2 = u2 + beta_r - w
-        return z, w, u1, u2
+        return _admm_iteration(a, q, inv, b, lam, inv_rho, alpha, z, w, u1, u2)
 
     z, w, u1, u2 = jax.lax.fori_loop(0, iters, body, (zeros, zeros, zeros, zeros))
     out_ref[...] = w
 
 
+def _fused_admm_state_kernel(a_ref, q_ref, inv_ref, b_ref, lam_ref, rho_ref,
+                             z0_ref, w0_ref, u10_ref, u20_ref,
+                             w_ref, z_ref, u1_ref, u2_ref, it_ref,
+                             *, max_iters: int, alpha: float,
+                             tol: float | None, check_every: int):
+    """Warm-startable kernel with full state I/O and (optionally) the
+    residual-gated early exit (DESIGN.md §7).
+
+    ``tol=None`` runs exactly ``max_iters`` iterations from the given
+    state; otherwise the loop runs ``check_every``-iteration chunks
+    under a bounded ``lax.while_loop``, stopping the whole block once
+    its max scaled residual drops below ``tol`` (capped at exactly
+    ``max_iters`` iterations -- the final chunk is clamped).
+    """
+    a = a_ref[...]
+    q = q_ref[...]
+    inv = inv_ref[...]
+    b = b_ref[...]
+    lam = lam_ref[...]
+    rho = rho_ref[...]  # (1, block_k)
+    inv_rho = 1.0 / rho
+    state0 = (z0_ref[...], w0_ref[...], u10_ref[...], u20_ref[...])
+
+    if tol is None:
+        def body(_, carry):
+            z, w, u1, u2 = carry
+            return _admm_iteration(
+                a, q, inv, b, lam, inv_rho, alpha, z, w, u1, u2)
+
+        z, w, u1, u2 = jax.lax.fori_loop(0, max_iters, body, state0)
+        it = jnp.int32(max_iters)
+    else:
+        def chunk_body(carry):
+            it, z, w, u1, u2, _ = carry
+            # the final chunk is clamped so the cap is EXACTLY max_iters
+            # even when check_every does not divide it
+            n = jnp.minimum(jnp.int32(check_every), max_iters - it)
+
+            def body(_, c):
+                z, w, u1, u2, _, _ = c
+                zn, wn, u1n, u2n = _admm_iteration(
+                    a, q, inv, b, lam, inv_rho, alpha, z, w, u1, u2)
+                return zn, wn, u1n, u2n, zn - z, wn - w
+
+            zeros = jnp.zeros_like(b)
+            z, w, u1, u2, dz, dw = jax.lax.fori_loop(
+                0, n, body, (z, w, u1, u2, zeros, zeros))
+            # scaled-ADMM residuals of the block, entirely in VMEM:
+            # one extra beta solve (4 matmuls) per chunk -- a
+            # 1/check_every relative overhead on the chunk's compute.
+            beta = _matmul(q, inv * _matmul(q.T, _matmul(a, z + b - u1)
+                                            + (w - u2)))
+            ab = _matmul(a, beta)
+            r_pri = jnp.maximum(jnp.max(jnp.abs(ab - z - b)),
+                                jnp.max(jnp.abs(beta - w)))
+            dual_col = jnp.max(jnp.abs(_matmul(a, dz) + dw), axis=0,
+                               keepdims=True)  # (1, block_k)
+            s_dual = jnp.max(rho * dual_col)
+            return it + n, z, w, u1, u2, jnp.maximum(r_pri, s_dual)
+
+        def chunk_cond(carry):
+            it, _, _, _, _, res = carry
+            return jnp.logical_and(it < max_iters, res > tol)
+
+        it, z, w, u1, u2, _ = jax.lax.while_loop(
+            chunk_cond, chunk_body,
+            (jnp.int32(0), *state0, jnp.float32(jnp.inf)))
+
+    w_ref[...] = w
+    z_ref[...] = z
+    u1_ref[...] = u1
+    u2_ref[...] = u2
+    it_ref[...] = jnp.full((1, 1), it, jnp.int32)
+
+
+def _pad_cols(x: jnp.ndarray, pad: int, value: float = 0.0) -> jnp.ndarray:
+    return jnp.pad(x, ((0, 0), (0, pad)), constant_values=value)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("iters", "alpha", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("iters", "alpha", "block_k", "interpret",
+                     "tol", "check_every", "return_info"),
 )
 def dantzig_fused_pallas(
     a: jnp.ndarray | SpectralFactor,
@@ -164,7 +315,11 @@ def dantzig_fused_pallas(
     alpha: float = 1.7,
     block_k: int | None = None,
     interpret: bool = False,
-) -> jnp.ndarray:
+    tol: float | None = None,
+    check_every: int = 10,
+    state: AdmmState | None = None,
+    return_info: bool = False,
+) -> jnp.ndarray | FusedSolveResult:
     """Blocked fused ADMM solve.
 
     Args:
@@ -178,7 +333,17 @@ def dantzig_fused_pallas(
       rho:     scalar or (k,) per-column fixed ADMM penalty (an operand:
                changing it does NOT recompile).
       block_k: columns per grid step (None = whole batch in one block).
-    Returns the sparse ADMM copy w: (d, k) f32.
+      tol:     static residual tolerance; None = fixed ``iters``
+               iterations (bit-exact with the pre-adaptive kernel),
+               else the chunked while_loop early exit (DESIGN.md §7).
+      check_every: iterations per residual check (adaptive mode only).
+      state:   optional :class:`AdmmState` with (d, k) leaves to resume
+               from (zero-state cold start when None).
+      return_info: also return the final state and per-block iteration
+               counts as a :class:`FusedSolveResult`.
+
+    Returns the sparse ADMM copy w: (d, k) f32, or a
+    :class:`FusedSolveResult` when ``return_info``.
     """
     if isinstance(a, SpectralFactor):
         if q is not None or inv_eig is not None:
@@ -205,27 +370,64 @@ def dantzig_fused_pallas(
 
     num_blocks = -(-k // block_k)
     k_pad = num_blocks * block_k
-    if k_pad != k:
-        # neutral tail columns: b = 0, lam = 1, rho = 1 solve exactly to 0
-        pad = k_pad - k
-        b2 = jnp.pad(b2, ((0, 0), (0, pad)))
-        lam2 = jnp.pad(lam2, ((0, 0), (0, pad)), constant_values=1.0)
-        rho2 = jnp.pad(rho2, ((0, 0), (0, pad)), constant_values=1.0)
+    pad = k_pad - k
+    if pad:
+        # neutral tail columns: b = 0, lam = 1, rho = 1 (and zero warm
+        # state) solve exactly to 0 AND report zero residual from the
+        # first chunk, so a pad column never holds a block's
+        # while_loop open
+        b2 = _pad_cols(b2, pad)
+        lam2 = _pad_cols(lam2, pad, 1.0)
+        rho2 = _pad_cols(rho2, pad, 1.0)
 
-    kernel = functools.partial(_fused_admm_kernel, iters=iters, alpha=alpha)
-    out = pl.pallas_call(
+    a2 = a.astype(jnp.float32)
+    q2 = q.astype(jnp.float32)
+    shared_specs = [
+        pl.BlockSpec((d, d), lambda i: (0, 0)),
+        pl.BlockSpec((d, d), lambda i: (0, 0)),
+        pl.BlockSpec((d, 1), lambda i: (0, 0)),
+        pl.BlockSpec((d, block_k), lambda i: (0, i)),
+        pl.BlockSpec((1, block_k), lambda i: (0, i)),
+        pl.BlockSpec((1, block_k), lambda i: (0, i)),
+    ]
+
+    if tol is None and state is None and not return_info:
+        # the original fixed-iteration kernel: smallest VMEM footprint,
+        # bit-exact with the pre-adaptive golden pins
+        kernel = functools.partial(_fused_admm_kernel, iters=iters,
+                                   alpha=alpha)
+        out = pl.pallas_call(
+            kernel,
+            grid=(num_blocks,),
+            in_specs=shared_specs,
+            out_specs=pl.BlockSpec((d, block_k), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((d, k_pad), jnp.float32),
+            interpret=interpret,
+        )(a2, q2, inv2, b2, lam2, rho2)
+        return out[:, :k] if pad else out
+
+    if state is None:
+        state = AdmmState.zeros(d, k_pad)
+    else:
+        leaves = [jnp.asarray(s, jnp.float32) for s in state]
+        if pad:
+            leaves = [_pad_cols(s, pad) for s in leaves]
+        state = AdmmState(*leaves)
+
+    kernel = functools.partial(
+        _fused_admm_state_kernel, max_iters=iters, alpha=alpha,
+        tol=tol, check_every=check_every)
+    col_spec = pl.BlockSpec((d, block_k), lambda i: (0, i))
+    w, z, u1, u2, it = pl.pallas_call(
         kernel,
         grid=(num_blocks,),
-        in_specs=[
-            pl.BlockSpec((d, d), lambda i: (0, 0)),
-            pl.BlockSpec((d, d), lambda i: (0, 0)),
-            pl.BlockSpec((d, 1), lambda i: (0, 0)),
-            pl.BlockSpec((d, block_k), lambda i: (0, i)),
-            pl.BlockSpec((1, block_k), lambda i: (0, i)),
-            pl.BlockSpec((1, block_k), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((d, block_k), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((d, k_pad), jnp.float32),
+        in_specs=shared_specs + [col_spec] * 4,
+        out_specs=[col_spec] * 4 + [pl.BlockSpec((1, 1), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((d, k_pad), jnp.float32)] * 4
+        + [jax.ShapeDtypeStruct((1, num_blocks), jnp.int32)],
         interpret=interpret,
-    )(a.astype(jnp.float32), q.astype(jnp.float32), inv2, b2, lam2, rho2)
-    return out[:, :k] if k_pad != k else out
+    )(a2, q2, inv2, b2, lam2, rho2, *state)
+    if pad:
+        w, z, u1, u2 = (x[:, :k] for x in (w, z, u1, u2))
+    result = FusedSolveResult(w, AdmmState(z, w, u1, u2), it.reshape(-1))
+    return result if return_info else result.beta

@@ -110,6 +110,51 @@ def test_solve_with_factor_traces_zero_eigh():
         assert _count_eqns(jaxpr.jaxpr, "eigh") == 0, f"fused={fused}"
 
 
+def test_adaptive_worker_traces_one_eigh():
+    """tol-mode (the while_loop kernel) keeps the one-eigh contract."""
+    cfg = DantzigConfig(max_iters=50, adapt_rho=False, fused=True, tol=1e-3)
+    x = jax.random.normal(jax.random.PRNGKey(20), (40, 12))
+    y = jax.random.normal(jax.random.PRNGKey(21), (44, 12))
+
+    def worker(x, y):
+        return pipeline.worker_debiased(
+            BinaryHead(), x, y, lam=0.1, lam_prime=0.1, cfg=cfg)
+
+    jaxpr = jax.make_jaxpr(worker)(x, y)
+    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+
+
+def test_adaptive_sweep_traces_one_eigh_and_one_launch_per_solve():
+    """With tol-mode on, an ENTIRE folded sweep still traces ONE eigh
+    and ONE kernel launch for the direction fold (plus exactly one for
+    the shared CLIME solve) -- the early exit lives INSIDE the kernel,
+    it does not fragment the launch."""
+    cfg = DantzigConfig(max_iters=50, adapt_rho=False, fused=True, tol=1e-3)
+    lams = jnp.linspace(0.05, 0.4, 6)
+    x = jax.random.normal(jax.random.PRNGKey(22), (40, 12))
+    y = jax.random.normal(jax.random.PRNGKey(23), (44, 12))
+
+    def sweep(x, y):
+        return rpath.worker_debiased_path(
+            BinaryHead(), x, y, lams=lams, lam_prime=0.1, cfg=cfg)
+
+    jaxpr = jax.make_jaxpr(sweep)(x, y)
+    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+    assert _count_eqns(jaxpr.jaxpr, "pallas_call") == 2
+
+    # warm re-sweep: threading rho AND full state changes neither count
+    res = sweep(x, y)
+
+    def resweep(x, y, rho, state):
+        return rpath.worker_debiased_path(
+            BinaryHead(), x, y, lams=lams, lam_prime=0.1, cfg=cfg,
+            rho_beta=rho, state_beta=state)
+
+    jaxpr = jax.make_jaxpr(resweep)(x, y, res.rho_beta, res.state_beta)
+    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+    assert _count_eqns(jaxpr.jaxpr, "pallas_call") == 2
+
+
 # ---------------------------------------------------------------------------
 # lambda-path fold parity: one wide launch == L independent launches
 # ---------------------------------------------------------------------------
