@@ -1,8 +1,9 @@
 """CI gate over the BENCH_*.json artifacts: fail on perf/parity regression.
 
 Run AFTER ``python -m benchmarks.run --only fused_solver`` (and
-optionally ``--only lambda_path`` / ``--only admm_convergence``).
-Reads the machine-readable benchmark output and exits nonzero when
+optionally ``--only lambda_path`` / ``--only admm_convergence`` /
+``--only multi_round``).  Reads the machine-readable benchmark output
+and exits nonzero when
 
   * the scan-vs-fused solver parity (``max_abs_diff``) exceeds the
     pinned 1e-5 budget -- a tighter bar than the benchmark's own
@@ -11,9 +12,29 @@ Reads the machine-readable benchmark output and exits nonzero when
     is ~0; anything above 1e-5 means a real numerical regression in
     the kernel or the dispatch contract, not noise;
   * the convergence-adaptive solver (``admm_convergence``) drifts
-    more than 1e-4 from the fixed-500 solution, or any *gated*
-    warm-started lambda-path re-sweep stops converging in fewer
-    iterations than its cold counterpart (DESIGN.md §7).
+    more than 1e-4 from the fixed-500 solution;
+  * any *gated* warm-started re-solve (``admm_convergence``'s
+    lambda-path re-sweeps, ``multi_round``'s pipeline re-entry) stops
+    converging in strictly fewer iterations than its cold counterpart
+    (DESIGN.md §7/§8);
+  * multi-round refinement stops recovering: T=3 support-recovery F1
+    at the largest machine count must stay within ``RECOVERY_GAP`` of
+    the centralized baseline (``multi_round``'s ``recovery`` payload);
+  * wall-clock regresses more than ``WALLCLOCK_TOL`` against the
+    COMMITTED root ``BENCH_*.json`` baselines for the fused-solver and
+    lambda-path suites, summed over the (d, k, L) shapes both runs
+    share.  The benchmarks mirror their fresh output to the repo root
+    (clobbering the working copy), so the baseline is read from git --
+    the default-branch tip when an origin exists (a PR that commits
+    its own regenerated mirrors must not be its own baseline), else
+    HEAD (local trajectory runs).  When git or the baseline is
+    unavailable, or the baseline was recorded on a different backend
+    or host (cross-machine timings gate noise, not code; homogeneous
+    runner fleets opt in via ``CI_GATE_FORCE_WALLCLOCK=1``), the
+    wall-clock gate is skipped with a notice -- parity gates still
+    apply.  A fresh payload that stops emitting the timing column
+    while the baseline has it FAILS (schema drift must not silently
+    disarm the gate).
 
 Usage: ``PYTHONPATH=src python -m benchmarks.ci_gate``
 """
@@ -21,19 +42,121 @@ Usage: ``PYTHONPATH=src python -m benchmarks.ci_gate``
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 
-from benchmarks.common import bench_json_path
+from benchmarks.common import REPO_DIR, bench_json_path
 
 PARITY_BUDGET = 1e-5
 ADAPTIVE_PARITY_BUDGET = 1e-4  # early-exit solution vs fixed-500
+RECOVERY_GAP = 0.05  # T=3 F1 within 5% of the centralized baseline
+WALLCLOCK_TOL = 0.20  # fail when >20% slower than the committed baseline
 
 # name -> column holding the gated max-abs parity
 GATED = {
     "fused_solver": ("max_abs_diff", PARITY_BUDGET),
     "lambda_path": ("max_abs_diff", PARITY_BUDGET),
     "admm_convergence": ("max_abs_diff", ADAPTIVE_PARITY_BUDGET),
+    "multi_round": (None, None),  # warm_vs_cold + recovery gates only
 }
+
+# name -> wall-clock column summed across rows and compared against the
+# committed baseline (the cross-PR perf trajectory, PR 4's root mirrors)
+WALLCLOCK_GATED = {
+    "fused_solver": "fused_s",
+    "lambda_path": "folded_s",
+}
+
+
+def _committed_baseline(name: str) -> dict | None:
+    """The committed root BENCH_<name>.json (see module doc).
+
+    Prefers the default-branch tip over HEAD: a PR that regenerates and
+    commits its own mirrors would otherwise be compared against its own
+    numbers and a regression could never trip the gate.  Falls back to
+    HEAD where no origin exists (local trajectory runs, where HEAD is
+    the pre-change baseline).
+    """
+    for ref in ("origin/HEAD", "origin/main", "HEAD"):
+        try:
+            out = subprocess.run(
+                ["git", "show", f"{ref}:BENCH_{name}.json"],
+                capture_output=True, text=True, cwd=REPO_DIR, timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            return None
+        if out.returncode != 0:
+            continue
+        try:
+            payload = json.loads(out.stdout)
+        except ValueError:
+            continue
+        payload["_baseline_ref"] = ref
+        return payload
+    return None
+
+
+def _shape_key(row: dict) -> tuple:
+    return tuple((k, row[k]) for k in ("d", "k", "L") if k in row)
+
+
+def _gate_wallclock(name: str, payload: dict, failures: list[str]) -> int:
+    col = WALLCLOCK_GATED[name]
+    base = _committed_baseline(name)
+    if base is None:
+        print(f"[ci_gate] {name}: no committed baseline readable from git "
+              "-- wall-clock gate skipped")
+        return 0
+    ref = base.get("_baseline_ref", "HEAD")
+    if base.get("backend") != payload.get("backend"):
+        print(f"[ci_gate] {name}: baseline backend "
+              f"{base.get('backend')!r} != {payload.get('backend')!r} "
+              "-- wall-clock gate skipped")
+        return 0
+    if base.get("host") != payload.get("host"):
+        # timings are only comparable on the machine class that recorded
+        # the baseline; a different host gates noise, not code.  Fleets
+        # with homogeneous runners opt in via the env override.
+        if not os.environ.get("CI_GATE_FORCE_WALLCLOCK"):
+            print(f"[ci_gate] {name}: baseline host "
+                  f"{base.get('host')!r} != {payload.get('host')!r} "
+                  "-- wall-clock gate skipped "
+                  "(set CI_GATE_FORCE_WALLCLOCK=1 on homogeneous runners)")
+            return 0
+        print(f"[ci_gate] {name}: host mismatch overridden by "
+              "CI_GATE_FORCE_WALLCLOCK")
+    # sum only over (d, k, L) shapes present in BOTH runs, so a grid
+    # change skips cleanly instead of comparing apples to oranges
+    base_by = {_shape_key(r): float(r[col]) for r in base["rows"]
+               if col in r}
+    fresh_by = {_shape_key(r): float(r[col]) for r in payload["rows"]
+                if col in r}
+    shared = sorted(base_by.keys() & fresh_by.keys())
+    if not shared:
+        if fresh_by or not base_by:
+            print(f"[ci_gate] {name}: no shared {col} shapes with the "
+                  "baseline -- wall-clock gate skipped")
+        else:
+            # the baseline has timings but the fresh run emits none:
+            # schema drift would silently disarm the gate
+            failures.append(
+                f"{name}: fresh payload has no {col} rows but the "
+                "committed baseline does -- wall-clock gate measured "
+                "nothing")
+        return 0
+    base_s = sum(base_by[k] for k in shared)
+    fresh_s = sum(fresh_by[k] for k in shared)
+    ratio = fresh_s / base_s
+    if ratio > 1.0 + WALLCLOCK_TOL:
+        failures.append(
+            f"{name}: wall-clock sum({col}) over {len(shared)} shared "
+            f"shapes {fresh_s:.4f}s is {ratio:.2f}x the committed "
+            f"baseline {base_s:.4f}s at {ref} (> {1 + WALLCLOCK_TOL:.2f}x)")
+    else:
+        print(f"[ci_gate] {name}: sum({col}) over {len(shared)} shared "
+              f"shapes {fresh_s:.4f}s vs baseline {base_s:.4f}s at {ref} "
+              f"({ratio:.2f}x) OK")
+    return 1
 
 
 def main() -> int:
@@ -49,32 +172,56 @@ def main() -> int:
                 failures.append(f"{path} missing -- run "
                                 "`python -m benchmarks.run --only fused_solver` first")
             continue  # other benches are gated only when present
-        for row in payload["rows"]:
-            checked += 1
-            val = float(row[col])
-            tag = {k: row[k] for k in ("d", "k", "L") if k in row}
-            if val > budget:
-                failures.append(
-                    f"{name} {tag}: {col}={val:g} > {budget:g}")
-            else:
-                print(f"[ci_gate] {name} {tag}: {col}={val:g} OK")
-        if name == "admm_convergence":
-            for wc in payload.get("warm_vs_cold", []):
+        if col is not None:
+            for row in payload["rows"]:
                 checked += 1
-                if not wc.get("gated", False):
-                    print(f"[ci_gate] {name} {wc['scenario']}: "
-                          f"cold={wc['cold_iters']} warm={wc['warm_iters']} "
-                          "(recorded, ungated)")
-                    continue
-                if not wc["warm_iters"] < wc["cold_iters"]:
+                val = float(row[col])
+                tag = {k: row[k] for k in ("d", "k", "L") if k in row}
+                if val > budget:
                     failures.append(
-                        f"{name} {wc['scenario']}: warm-started sweep "
-                        f"iterations {wc['warm_iters']} not below cold "
-                        f"{wc['cold_iters']}")
+                        f"{name} {tag}: {col}={val:g} > {budget:g}")
                 else:
-                    print(f"[ci_gate] {name} {wc['scenario']}: "
-                          f"warm {wc['warm_iters']} < cold "
-                          f"{wc['cold_iters']} OK")
+                    print(f"[ci_gate] {name} {tag}: {col}={val:g} OK")
+        for wc in payload.get("warm_vs_cold", []):
+            checked += 1
+            if not wc.get("gated", False):
+                print(f"[ci_gate] {name} {wc['scenario']}: "
+                      f"cold={wc['cold_iters']} warm={wc['warm_iters']} "
+                      "(recorded, ungated)")
+                continue
+            if not wc["warm_iters"] < wc["cold_iters"]:
+                failures.append(
+                    f"{name} {wc['scenario']}: warm-started solve "
+                    f"iterations {wc['warm_iters']} not below cold "
+                    f"{wc['cold_iters']}")
+            elif ("drift_budget" in wc
+                  and float(wc["max_abs_diff"]) > float(wc["drift_budget"])):
+                # fewer iterations only counts if the resumed solve still
+                # lands on the cold solution
+                failures.append(
+                    f"{name} {wc['scenario']}: warm-vs-cold solution "
+                    f"drift {wc['max_abs_diff']:g} exceeds the "
+                    f"{wc['drift_budget']:g} budget")
+            else:
+                print(f"[ci_gate] {name} {wc['scenario']}: "
+                      f"warm {wc['warm_iters']} < cold "
+                      f"{wc['cold_iters']} OK")
+        if name == "multi_round" and "recovery" in payload:
+            rec = payload["recovery"]
+            checked += 1
+            gap = float(rec["gap"])
+            budget = float(rec.get("gap_budget", RECOVERY_GAP))
+            if gap > budget:
+                failures.append(
+                    f"multi_round m={rec['m']}: T=3 F1 {rec['f1_t3']:.3f} "
+                    f"trails centralized {rec['f1_cent']:.3f} by "
+                    f"{gap:.3f} (> {budget})")
+            else:
+                print(f"[ci_gate] multi_round m={rec['m']}: T=3 F1 "
+                      f"{rec['f1_t3']:.3f} within {gap:.3f} of centralized "
+                      f"{rec['f1_cent']:.3f} OK")
+        if name in WALLCLOCK_GATED:
+            checked += _gate_wallclock(name, payload, failures)
     if failures:
         for msg in failures:
             print(f"[ci_gate] FAIL: {msg}", file=sys.stderr)

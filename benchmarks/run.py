@@ -21,6 +21,7 @@ from benchmarks import (
     fig_multiclass,
     fused_solver,
     lambda_path,
+    multi_round,
     roofline,
     table1_speedup,
     table2_real,
@@ -39,6 +40,8 @@ BENCHES = [
     ("lambda_path (folded sweep vs sequential launches)", lambda_path.main),
     ("admm_convergence (adaptive early exit + warm starts)",
      admm_convergence.main),
+    ("multi_round (refinement rounds past the one-shot m-barrier)",
+     multi_round.main),
     ("roofline (dry-run aggregation)", roofline.main),
 ]
 

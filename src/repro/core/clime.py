@@ -25,8 +25,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.dantzig import AdmmState, DantzigConfig, SpectralFactor
-from repro.core.solver_dispatch import solve_dantzig
+from repro.core.solver_dispatch import SolveResult, solve_dantzig, solve_dantzig_full
 from repro.kernels.spectral import sigma_of
+
+
+def _clime_rhs(sigma, cols: jnp.ndarray) -> jnp.ndarray:
+    mat = sigma_of(sigma)
+    d = mat.shape[0]
+    return jnp.zeros((d, cols.shape[0]), mat.dtype).at[
+        cols, jnp.arange(cols.shape[0])].set(1.0)
 
 
 def solve_clime_columns(
@@ -44,10 +51,27 @@ def solve_clime_columns(
     of repeated re-solves, riding next to the warm per-column ``rho``.
     Returns (d, len(cols)) block of Theta_hat.
     """
-    mat = sigma_of(sigma)
-    d = mat.shape[0]
-    rhs = jnp.zeros((d, cols.shape[0]), mat.dtype).at[cols, jnp.arange(cols.shape[0])].set(1.0)
-    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho, state=state)
+    return solve_dantzig(sigma, _clime_rhs(sigma, cols), lam, cfg, rho=rho,
+                         state=state)
+
+
+def solve_clime_columns_full(
+    sigma: jnp.ndarray | SpectralFactor,
+    cols: jnp.ndarray,
+    lam: float | jnp.ndarray,
+    cfg: DantzigConfig = DantzigConfig(),
+    rho: jnp.ndarray | None = None,
+    state: AdmmState | None = None,
+) -> SolveResult:
+    """:func:`solve_clime_columns` returning the full warm-carry result.
+
+    The :class:`~repro.core.solver_dispatch.SolveResult` carries the
+    final per-column rho, the resumable ADMM state and the executed
+    iteration counts -- what multi-round drivers and iteration
+    benchmarks thread across repeated invocations (DESIGN.md §7/§8).
+    """
+    return solve_dantzig_full(sigma, _clime_rhs(sigma, cols), lam, cfg,
+                              rho=rho, state=state)
 
 
 def solve_clime(
@@ -56,11 +80,21 @@ def solve_clime(
     cfg: DantzigConfig = DantzigConfig(),
     rho: jnp.ndarray | None = None,
     state: AdmmState | None = None,
+    symmetrize: bool = False,
 ) -> jnp.ndarray:
-    """Full (d, d) CLIME estimate (all columns in one batched solve)."""
+    """Full (d, d) CLIME estimate (all columns in one batched solve).
+
+    ``symmetrize`` applies eq. 3.3's min-magnitude symmetrization
+    (:func:`symmetrize_min`) to the raw column solves -- possible here
+    because this entry point owns ALL d columns (the model-axis-sharded
+    column path cannot pair theta_ij with theta_ji without an extra
+    (d, d) gather; see ``pipeline.worker_solves``).  Default False
+    preserves the historical raw-column estimate bit-for-bit.
+    """
     mat = sigma_of(sigma)
     rhs = jnp.eye(mat.shape[0], dtype=mat.dtype)
-    return solve_dantzig(sigma, rhs, lam, cfg, rho=rho, state=state)
+    theta = solve_dantzig(sigma, rhs, lam, cfg, rho=rho, state=state)
+    return symmetrize_min(theta) if symmetrize else theta
 
 
 def symmetrize_min(theta: jnp.ndarray) -> jnp.ndarray:

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import pipeline, slda
+from repro.core import rounds as rounds_core, slda
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import BinaryHead, MulticlassHead
 
@@ -72,12 +72,18 @@ def distributed_slda_shardmap(
     cfg: DantzigConfig = DantzigConfig(),
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = "model",
+    rounds: int = 1,
 ) -> jnp.ndarray:
-    """One-shot distributed sparse LDA over a mesh.
+    """Distributed sparse LDA over a mesh (one-shot, or T-round refined).
 
     Args:
       x: (N1, d) class-1 samples, shardable over the data axes.
       y: (N2, d) class-2 samples.
+      rounds: communication rounds.  1 (default) is the paper's
+        one-shot schedule; T > 1 runs T-1 extra refinement rounds
+        around the aggregate (DESIGN.md §8) -- each an O(d) ``pmean``
+        reusing the round-one solves, no extra eigendecompositions --
+        recovering the centralized rate past the one-shot m-barrier.
     Returns:
       beta_bar: (d,) aggregated sparse discriminant vector (replicated).
     """
@@ -86,15 +92,13 @@ def distributed_slda_shardmap(
     model_size = mesh.shape[model_axis] if model_axis is not None else 1
 
     def shard_fn(xs, ys):
-        beta_tilde, _, _ = pipeline.worker_debiased(
-            BinaryHead(), xs, ys, lam=lam, lam_prime=lam_prime, cfg=cfg,
+        # ---- the T communication rounds of Algorithm 1 / DESIGN §8 ----
+        beta_bar, _ = rounds_core.worker_rounds(
+            BinaryHead(), xs, ys, lam=lam, lam_prime=lam_prime,
+            rounds=rounds, cfg=cfg, data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
         )
-        # ---- the single communication round of Algorithm 1 ----
-        beta_mean = beta_tilde[:, 0]
-        for ax in data_axes:
-            beta_mean = jax.lax.pmean(beta_mean, ax)
-        return slda.hard_threshold(beta_mean, t)
+        return slda.hard_threshold(beta_bar[:, 0], t)
 
     fn = _shard_map(shard_fn, mesh, (in_spec, in_spec), P())
     return fn(x, y)
@@ -111,14 +115,17 @@ def distributed_mc_slda_shardmap(
     cfg: DantzigConfig = DantzigConfig(),
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = "model",
+    rounds: int = 1,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """One-shot distributed K-class sparse LDA over a mesh.
+    """Distributed K-class sparse LDA over a mesh (one-shot or T-round).
 
     The multiclass analogue of :func:`distributed_slda_shardmap`: each
     data-slice is one machine, the d CLIME columns shard over the model
-    axis, and the single communication round is one ``pmean`` of a
-    (d, K) direction block plus the (K, d) class means -- O(dK) bytes
-    per link, the multicategory one-shot budget.
+    axis, and each communication round is one ``pmean`` of a (d, K)
+    direction block -- O(dK) bytes per link, the multicategory budget.
+    The (K, d) class means ride one extra ``pmean`` once (they are
+    round-independent), and ``rounds`` > 1 refines the direction block
+    around the aggregate exactly as in the binary driver (DESIGN.md §8).
 
     Args:
       x: (N, d) samples, shardable over the data axes.
@@ -130,16 +137,16 @@ def distributed_mc_slda_shardmap(
     model_size = mesh.shape[model_axis] if model_axis is not None else 1
 
     def shard_fn(xs, labs):
-        beta_tilde, _, hs = pipeline.worker_debiased(
+        beta_bar, ws = rounds_core.worker_rounds(
             MulticlassHead(num_classes), xs, labs,
-            lam=lam, lam_prime=lam_prime, cfg=cfg,
+            lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg,
+            data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
         )
-        beta_mean, means = beta_tilde, hs.aux.means
+        means = ws.stats.aux.means
         for ax in data_axes:
-            beta_mean = jax.lax.pmean(beta_mean, ax)
             means = jax.lax.pmean(means, ax)
-        return slda.hard_threshold(beta_mean, t), means
+        return slda.hard_threshold(beta_bar, t), means
 
     fn = _shard_map(
         shard_fn, mesh, (P(data_axes, None), P(data_axes)), (P(), P())
@@ -172,33 +179,35 @@ def naive_averaged_slda_shardmap(
 # ---------------------------------------------------------------------------
 # Single-device simulation (statistical experiments / tests).  Identical
 # math; machines are a leading vmap axis instead of mesh shards.  The
-# per-machine body is the SAME pipeline.worker_debiased the mesh runs.
+# per-machine body is the SAME pipeline.worker_solves schedule the mesh
+# runs, driven through the same rounds core (pipeline.worker_debiased's
+# one-shot correction is its rounds=1 case).
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "rounds"))
 def simulated_debiased_mean(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
     lam: float,
     lam_prime: float,
     cfg: DantzigConfig = DantzigConfig(),
+    rounds: int = 1,
 ) -> jnp.ndarray:
     """Mean of debiased locals WITHOUT the hard threshold.
 
     Benchmarks tune the threshold t post hoc over a grid (the paper
     reports grid-tuned best results); exposing the raw mean makes that
-    tuning free (HT is O(d))."""
+    tuning free (HT is O(d)).  ``rounds`` > 1 applies the extra
+    refinement rounds around the aggregate (DESIGN.md §8), sharing the
+    per-machine solves across all rounds."""
+    beta_bar, _ = rounds_core.simulate_multi_round(
+        BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
+        rounds=rounds, cfg=cfg)
+    return beta_bar[:, 0]
 
-    def one_machine(x, y):
-        bt, _, _ = pipeline.worker_debiased(
-            BinaryHead(), x, y, lam=lam, lam_prime=lam_prime, cfg=cfg)
-        return bt[:, 0]
 
-    return jnp.mean(jax.vmap(one_machine)(xs, ys), axis=0)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "rounds"))
 def simulated_distributed_slda(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -206,10 +215,11 @@ def simulated_distributed_slda(
     lam_prime: float,
     t: float,
     cfg: DantzigConfig = DantzigConfig(),
+    rounds: int = 1,
 ) -> jnp.ndarray:
     """xs: (m, n1, d), ys: (m, n2, d) -> aggregated beta_bar (d,)."""
     return slda.hard_threshold(
-        simulated_debiased_mean(xs, ys, lam, lam_prime, cfg), t)
+        simulated_debiased_mean(xs, ys, lam, lam_prime, cfg, rounds), t)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import path as _path
 from repro.core import pipeline
+from repro.core import rounds as _rounds
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import (  # noqa: F401
     MCStats,
@@ -51,6 +52,7 @@ __all__ = [
     "mc_debias",
     "mc_debiased_local",
     "mc_debiased_local_path",
+    "mc_multi_round_slda",
     "simulated_distributed_mc_slda",
     "simulated_naive_mc_slda",
     "centralized_mc_slda",
@@ -77,13 +79,40 @@ def mc_debiased_local(
     lam: float,
     lam_prime: float | None = None,
     cfg: DantzigConfig = DantzigConfig(),
+    symmetrize: bool = False,
 ) -> tuple[jnp.ndarray, MCStats]:
-    """Full worker-side pipeline: returns (beta_tilde (d, K), stats)."""
+    """Full worker-side pipeline: returns (beta_tilde (d, K), stats).
+
+    ``symmetrize`` debiases with the eq.-3.3-symmetrized Theta_hat
+    (unsharded full-CLIME path only; default False keeps the
+    historical raw-column debias).
+    """
     beta_tilde, _, hs = pipeline.worker_debiased(
         MulticlassHead(num_classes), x, labels,
         lam=lam, lam_prime=lam if lam_prime is None else lam_prime, cfg=cfg,
+        symmetrize=symmetrize,
     )
     return beta_tilde, hs.aux
+
+
+def mc_multi_round_slda(
+    xs: jnp.ndarray,
+    labels: jnp.ndarray,
+    num_classes: int,
+    lam: float,
+    lam_prime: float,
+    t: float,
+    rounds: int = 3,
+    cfg: DantzigConfig = DantzigConfig(),
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """T-round refined K-class estimator on stacked machine draws.
+
+    The large-m face (DESIGN.md §8): xs (m, n, d) / labels (m, n) ->
+    (beta_bar (d, K), means (K, d)) after ``rounds`` O(dK)
+    communication rounds sharing one set of per-machine solves.
+    """
+    return simulated_distributed_mc_slda(
+        xs, labels, num_classes, lam, lam_prime, t, cfg, rounds)
 
 
 def mc_debiased_local_path(
@@ -95,6 +124,7 @@ def mc_debiased_local_path(
     cfg: DantzigConfig = DantzigConfig(),
     rho_beta: jnp.ndarray | None = None,
     state_beta: "_path.AdmmState | None" = None,
+    symmetrize: bool = False,
 ) -> _path.WorkerPathResult:
     """All K directions at EVERY lambda in one folded launch.
 
@@ -112,11 +142,11 @@ def mc_debiased_local_path(
     return _path.worker_debiased_path(
         MulticlassHead(num_classes), x, labels,
         lams=lams, lam_prime=lam_prime, cfg=cfg, rho_beta=rho_beta,
-        state_beta=state_beta,
+        state_beta=state_beta, symmetrize=symmetrize,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes", "cfg"))
+@functools.partial(jax.jit, static_argnames=("num_classes", "cfg", "rounds"))
 def simulated_distributed_mc_slda(
     xs: jnp.ndarray,
     labels: jnp.ndarray,
@@ -125,22 +155,20 @@ def simulated_distributed_mc_slda(
     lam_prime: float,
     t: float,
     cfg: DantzigConfig = DantzigConfig(),
+    rounds: int = 1,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """xs: (m, n, d), labels: (m, n) -> (beta_bar (d, K), means (K, d)).
 
     The vmap axis is the machine; the master aggregation is one mean of
-    (d, K) blocks + hard threshold -- the multi-class analogue of the
-    paper's one-round schedule.  Mesh-executed twin:
+    (d, K) blocks per round + hard threshold -- the multi-class
+    analogue of the paper's schedule (``rounds=1`` one-shot, T > 1
+    refined around the aggregate, DESIGN.md §8).  Mesh-executed twin:
     :func:`repro.core.distributed.distributed_mc_slda_shardmap`.
     """
-
-    def one_machine(x, lab):
-        bt, stats = mc_debiased_local(x, lab, num_classes, lam, lam_prime, cfg)
-        return bt, stats.means
-
-    betas, means = jax.vmap(one_machine)(xs, labels)
-    beta_bar = hard_threshold(jnp.mean(betas, axis=0), t)
-    return beta_bar, jnp.mean(means, axis=0)
+    beta_bar, ws = _rounds.simulate_multi_round(
+        MulticlassHead(num_classes), (xs, labels),
+        lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg)
+    return hard_threshold(beta_bar, t), jnp.mean(ws.stats.aux.means, axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "cfg"))

@@ -52,7 +52,7 @@ from typing import Any, NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core.clime import solve_clime_columns
+from repro.core.clime import solve_clime_columns, symmetrize_min
 from repro.core.dantzig import AdmmState, DantzigConfig, kkt_violation
 from repro.core.pipeline import DiscriminantHead, HeadStats
 from repro.core.solver_dispatch import solve_dantzig_full
@@ -86,25 +86,71 @@ def _unfold(wide: jnp.ndarray, d: int, L: int, k: int) -> jnp.ndarray:
     return jnp.moveaxis(wide.reshape(d, L, k), 1, 0)
 
 
-def _fold_state(state: AdmmState, d: int, L: int, k: int) -> AdmmState:
+_STATE_LAYOUTS = ("auto", "grid", "single")
+
+
+def _fold_state(state: AdmmState, d: int, L: int, k: int,
+                layout: str = "auto") -> AdmmState:
     """Warm path state -> the (d, L*k) wide layout.
 
-    Accepts leaves of shape (L, d, k) (a previous sweep, e.g.
-    ``PathResult.state``), (L, d) (vector-rhs sweep), or (d, k) / (d,)
+    Accepts leaves of shape (L, d, k) or (L, d, 1) (a previous sweep,
+    e.g. ``PathResult.state``; the ``grid`` layout), or (d, k) / (d,)
     (a single solve, broadcast to every grid point -- seeding the whole
-    grid from one adjacent solution).
+    grid from one adjacent solution; the ``single`` layout).
+
+    2-D leaves are ambiguous when the static shapes collide: a (d, k)
+    single-solve leaf and an (L, d) vector-sweep leaf are
+    indistinguishable once ``L == d == k`` (and ``(d, d)`` collides
+    with ``(L, d)`` whenever ``L == d``).  ``layout="auto"`` infers the
+    kind only when exactly one reading fits and raises on a collision;
+    pass ``layout="grid"`` / ``layout="single"`` (or reshape vector-
+    sweep leaves to the always-unambiguous (L, d, 1)) to disambiguate
+    explicitly.
     """
+    if layout not in _STATE_LAYOUTS:
+        raise ValueError(
+            f"state_layout must be one of {_STATE_LAYOUTS}, got {layout!r}")
     leaves = []
     for leaf in state:
         leaf = jnp.asarray(leaf, jnp.float32)
         if leaf.ndim == 1:  # (d,) single vector solve
+            if leaf.shape != (d,):
+                raise ValueError(
+                    f"1-D warm-state leaf {leaf.shape} != (d,)=({d},)")
             leaf = leaf[None, :, None]
-        elif leaf.ndim == 2 and leaf.shape[0] == d and leaf.shape != (L, d):
-            # (d, k) single solve (shape (L, d) only when a vector-rhs
-            # sweep's leaves ride in; d == L keeps the sweep reading)
-            leaf = leaf[None]
-        elif leaf.ndim == 2:  # (L, d) vector-rhs sweep
-            leaf = leaf[:, :, None]
+        elif leaf.ndim == 2:
+            as_single = leaf.shape in ((d, k), (d, 1))
+            as_grid = leaf.shape == (L, d)
+            kind = layout
+            if kind == "auto":
+                if as_single and as_grid:
+                    raise ValueError(
+                        f"warm-state leaf {leaf.shape} is ambiguous at "
+                        f"L={L}, d={d}, k={k}: it reads both as a (d, k) "
+                        "single solve and as an (L, d) vector sweep. Pass "
+                        "state_layout='single' or 'grid' (or reshape "
+                        "sweep leaves to (L, d, 1)).")
+                kind = "single" if as_single else "grid"
+            if kind == "single":
+                if not as_single:
+                    raise ValueError(
+                        f"single-solve warm-state leaf {leaf.shape} != "
+                        f"(d, k)=({d}, {k})")
+                leaf = leaf[None]  # (1, d, k|1): broadcast to the grid
+            else:
+                if not as_grid:
+                    raise ValueError(
+                        f"vector-sweep warm-state leaf {leaf.shape} != "
+                        f"(L, d)=({L}, {d})")
+                leaf = leaf[:, :, None]
+        elif leaf.ndim == 3:
+            if leaf.shape not in ((L, d, k), (L, d, 1)):
+                raise ValueError(
+                    f"3-D warm-state leaf {leaf.shape} matches neither "
+                    f"(L, d, k)=({L}, {d}, {k}) nor (L, d, 1)")
+        else:
+            raise ValueError(
+                f"warm-state leaf has ndim={leaf.ndim}; expected 1-3")
         leaf = jnp.broadcast_to(leaf, (L, d, k))
         leaves.append(jnp.moveaxis(leaf, 0, 1).reshape(d, L * k))
     return AdmmState(*leaves)
@@ -135,6 +181,7 @@ def solve_dantzig_path(
     *,
     rho: jnp.ndarray | None = None,
     state: AdmmState | None = None,
+    state_layout: str = "auto",
     backend: str | None = None,
 ) -> PathResult:
     """Solve a (d, k) Dantzig batch at EVERY lambda in one launch.
@@ -145,15 +192,23 @@ def solve_dantzig_path(
       b:    (d,) or (d, k) right-hand side(s), shared by all lambdas.
       lams: (L,) box-radius grid.
       rho:  optional warm per-(lambda, column) penalties -- scalar,
-            (L,), (k,), or (L, k) (e.g. ``PathResult.rho`` from the
-            previous sweep); a traced operand on the fused paths, so
-            re-sweeping never recompiles.
+            (L,) per-lambda, (k,) per-column, or (L, k) (e.g.
+            ``PathResult.rho`` from the previous sweep); a traced
+            operand on the fused paths, so re-sweeping never
+            recompiles.  When ``L == k`` the two 1-D readings collide
+            and a 1-D rho raises -- pass the explicit 2-D broadcast
+            (``rho[:, None]`` per-lambda, ``rho[None, :]`` per-column).
       state: optional warm ADMM state -- a previous sweep's
-            ``PathResult.state`` (leaves (L, d, k) / (L, d)), or a
-            single solve's state (leaves (d, k) / (d,), broadcast to
-            every grid point).  Use :func:`seed_path_state` to re-map
-            states across different grids.  Traced operands: warm
-            re-sweeps never recompile.
+            ``PathResult.state`` (leaves (L, d, k) / (L, d) / the
+            always-unambiguous (L, d, 1)), or a single solve's state
+            (leaves (d, k) / (d,), broadcast to every grid point).  Use
+            :func:`seed_path_state` to re-map states across different
+            grids.  Traced operands: warm re-sweeps never recompile.
+      state_layout: disambiguates 2-D warm-state leaves when the
+            shapes collide (``L == d == k``): ``"grid"`` reads them as
+            (L, d) vector-sweep carries, ``"single"`` as (d, k) single
+            solves; the default ``"auto"`` infers when only one
+            reading fits and raises on a collision.
 
     The k*L columns dispatch as ONE batch: ``select_solver`` sees
     (d, k*L) and tiles it over the Pallas grid with the same
@@ -176,7 +231,14 @@ def solve_dantzig_path(
         if r.ndim == 0:
             r = jnp.broadcast_to(r, (L, k))
         elif r.ndim == 1:
-            # (L,) = per-lambda (wins the L == k ambiguity), (k,) = per-column
+            # (L,) = per-lambda, (k,) = per-column; at L == k the two
+            # readings collide and silently picking one would misfold
+            # the warm carry -- demand the explicit 2-D broadcast.
+            if L == k and r.shape[0] == L:
+                raise ValueError(
+                    f"1-D rho of shape {r.shape} is ambiguous at "
+                    f"L == k == {L}: pass rho[:, None] for per-lambda "
+                    "or rho[None, :] for per-column.")
             if r.shape[0] == L:
                 r = jnp.broadcast_to(r[:, None], (L, k))
             elif r.shape[0] == k:
@@ -187,7 +249,8 @@ def solve_dantzig_path(
         else:
             r = jnp.broadcast_to(r, (L, k))
         wide_rho = r.reshape(L * k)
-    wide_state = None if state is None else _fold_state(state, d, L, k)
+    wide_state = (None if state is None
+                  else _fold_state(state, d, L, k, state_layout))
 
     result = solve_dantzig_full(
         factor, wide_b, wide_lam, cfg, rho=wide_rho, state=wide_state,
@@ -233,6 +296,8 @@ def worker_debiased_path(
     rho_theta: jnp.ndarray | None = None,
     state_beta: AdmmState | None = None,
     state_theta: AdmmState | None = None,
+    state_layout: str = "auto",
+    symmetrize: bool = False,
 ) -> WorkerPathResult:
     """One machine's debiased estimate at EVERY lambda in one launch.
 
@@ -257,17 +322,24 @@ def worker_debiased_path(
 
     Runs unsharded (the mesh paths tune lambda per machine before
     entering shard_map; the CLIME model-axis sharding composes with a
-    single chosen lambda, not with the sweep).
+    single chosen lambda, not with the sweep).  ``symmetrize`` debiases
+    every grid point with the eq.-3.3-symmetrized Theta_hat (this path
+    always owns the full (d, d) estimate, so the symmetrization the
+    sharded pipeline cannot afford is free here); default False keeps
+    the historical raw-column debias.  ``state_layout`` disambiguates
+    2-D ``state_beta`` leaves exactly as in :func:`solve_dantzig_path`.
     """
     hs = head.stats(*data)
     factor = as_spectral_factor(hs.sigma)
     dir_path = solve_dantzig_path(
         factor, hs.rhs, lams, cfg, rho=rho_beta,
-        state=state_beta)  # beta: (L, d, K)
+        state=state_beta, state_layout=state_layout)  # beta: (L, d, K)
     d = hs.rhs.shape[0]
     theta = solve_clime_columns(
         factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta,
         state=state_theta)  # (d, d)
+    if symmetrize:
+        theta = symmetrize_min(theta)
     # debias every grid point with the ONE shared Theta_hat
     resid = jnp.einsum("ij,ljk->lik", hs.sigma, dir_path.beta) - hs.rhs[None]
     beta_tilde = dir_path.beta - jnp.einsum("ji,ljk->lik", theta, resid)

@@ -57,9 +57,13 @@ from typing import Any, NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core.clime import solve_clime_columns
+from repro.core.clime import (
+    solve_clime_columns,
+    solve_clime_columns_full,
+    symmetrize_min,
+)
 from repro.core.dantzig import AdmmState, DantzigConfig
-from repro.core.solver_dispatch import solve_dantzig
+from repro.core.solver_dispatch import solve_dantzig, solve_dantzig_full
 from repro.kernels import ops as kops
 from repro.kernels.spectral import spectral_factor
 
@@ -199,6 +203,141 @@ def debias(
     return beta_hat - theta_hat.T @ resid
 
 
+class WorkerSolves(NamedTuple):
+    """One machine's round-zero heavy lifting, reusable across rounds.
+
+    Everything downstream of the two ADMM solves -- the debias
+    correction of the one-shot schedule AND every refinement round of
+    :mod:`repro.core.rounds` -- is closed-form in these fields, so a
+    T-round run pays the eigendecomposition and both solves exactly
+    once.  The warm-carry fields (``rho_*`` / ``state_*`` /
+    ``iters_*``) are populated only by ``full=True`` solves
+    (:func:`worker_solves`); the narrow mode leaves them ``None`` and
+    keeps the historical solver kernels bit-exact.
+    """
+
+    stats: HeadStats
+    beta_hat: jnp.ndarray  # (d, K) biased local direction block
+    theta: jnp.ndarray  # (d, cols) CLIME block ((d, d) unsharded)
+    valid: jnp.ndarray | None  # (cols,) non-pad mask (sharded paths only)
+    rho_beta: jnp.ndarray | None  # warm carries of the two solves
+    rho_theta: jnp.ndarray | None
+    state_beta: AdmmState | None
+    state_theta: AdmmState | None
+    iters_beta: jnp.ndarray | None  # executed ADMM iterations per column
+    iters_theta: jnp.ndarray | None
+
+
+def worker_solves(
+    head: DiscriminantHead,
+    *data: jnp.ndarray,
+    lam,
+    lam_prime,
+    cfg: DantzigConfig = DantzigConfig(),
+    model_axis: str | None = None,
+    model_axis_size: int = 1,
+    rho_beta: jnp.ndarray | None = None,
+    rho_theta: jnp.ndarray | None = None,
+    state_beta: AdmmState | None = None,
+    state_theta: AdmmState | None = None,
+    symmetrize: bool = False,
+    full: bool = False,
+) -> WorkerSolves:
+    """Run one machine's ADMM solves (direction block + CLIME columns).
+
+    The expensive, round-independent part of Algorithm 1's worker
+    schedule: sufficient statistics, ONE eigendecomposition, the (d, K)
+    direction solve and the CLIME column block.  :func:`worker_debiased`
+    composes this with one :func:`apply_correction`;
+    :mod:`repro.core.rounds` reuses the same result across T refinement
+    rounds.
+
+    ``symmetrize`` applies the CLIME symmetrization (eq. 3.3,
+    ``theta_ij <- the smaller-magnitude of theta_ij / theta_ji``) to the
+    full (d, d) Theta_hat.  It requires the UNSHARDED path: a
+    model-axis device owns only its column block, and eq. 3.3 pairs
+    ``theta_ij`` with ``theta_ji`` across blocks, so symmetrizing under
+    sharding would need an extra (d, d) all-to-all gather -- exactly
+    the communication the column sharding avoids.  ``model_axis`` +
+    ``symmetrize`` therefore raises.
+
+    ``full=False`` (the default) issues the narrow dispatched solves --
+    bit-identical to the historical pipeline, the mode the golden
+    pre-refactor pins require.  ``full=True`` routes both solves
+    through :func:`~repro.core.solver_dispatch.solve_dantzig_full` and
+    populates the warm-carry fields (final rho, resumable
+    :class:`AdmmState`, executed iteration counts) -- the mode
+    multi-round drivers and iteration-count benchmarks use.
+    """
+    if symmetrize and model_axis is not None:
+        raise ValueError(
+            "symmetrize=True needs the full (d, d) Theta_hat on one "
+            "device; the model-axis-sharded path would need an extra "
+            "(d, d) gather to pair theta_ij with theta_ji (eq. 3.3). "
+            "Run with model_axis=None to symmetrize.")
+    hs = head.stats(*data)
+    # ONE eigendecomposition per worker: the direction solve and every
+    # CLIME column share this factor (it is rho- and lam-independent).
+    factor = spectral_factor(hs.sigma)
+    d = hs.rhs.shape[0]
+    if model_axis is None:
+        cols = jnp.arange(d)
+        valid = None
+    else:
+        size = model_axis_size
+        idx = jax.lax.axis_index(model_axis)
+        cols_per = -(-d // size)  # ceil: pad d to a multiple of size
+        cols = idx * cols_per + jnp.arange(cols_per)
+        valid = cols < d
+        cols = jnp.minimum(cols, d - 1)
+    if full:
+        dir_res = solve_dantzig_full(factor, hs.rhs, lam, cfg, rho=rho_beta,
+                                     state=state_beta)
+        theta_res = solve_clime_columns_full(
+            factor, cols, lam_prime, cfg, rho=rho_theta, state=state_theta)
+        beta_hat, theta = dir_res.beta, theta_res.beta
+        carries = dict(
+            rho_beta=dir_res.rho, rho_theta=theta_res.rho,
+            state_beta=dir_res.state, state_theta=theta_res.state,
+            iters_beta=dir_res.iters, iters_theta=theta_res.iters)
+    else:
+        beta_hat = solve_dantzig(factor, hs.rhs, lam, cfg, rho=rho_beta,
+                                 state=state_beta)
+        theta = solve_clime_columns(
+            factor, cols, lam_prime, cfg, rho=rho_theta, state=state_theta)
+        carries = dict(rho_beta=None, rho_theta=None, state_beta=None,
+                       state_theta=None, iters_beta=None, iters_theta=None)
+    if symmetrize:
+        theta = symmetrize_min(theta)
+    return WorkerSolves(stats=hs, beta_hat=beta_hat, theta=theta,
+                        valid=valid, **carries)
+
+
+def apply_correction(
+    theta: jnp.ndarray,
+    valid: jnp.ndarray | None,
+    resid: jnp.ndarray,
+    model_axis: str | None = None,
+) -> jnp.ndarray:
+    """Assemble the (d, K) debias correction ``Theta^T resid``.
+
+    The correction must use ALL d CLIME columns (Theorem 4.5's
+    one-round guarantee is exact only then), so on the sharded path
+    (``model_axis`` set, ``valid`` the non-pad mask from
+    :func:`worker_solves`) each device contributes its (cols, K) slice,
+    pad rows are masked to zero, and one intra-machine ``all_gather``
+    over the model axis reassembles the full vector -- global column j
+    lands at row j, pad columns sit at rows >= d and are dropped.
+    """
+    if model_axis is None:
+        return theta.T @ resid
+    corr_slice = jnp.where(valid[:, None], theta.T @ resid, 0.0)
+    gathered = jax.lax.all_gather(
+        corr_slice, model_axis, axis=0, tiled=True
+    )  # (size * cols_per, K), device i's block at [i*cols_per, ...)
+    return gathered[: resid.shape[0]]
+
+
 def worker_debiased(
     head: DiscriminantHead,
     *data: jnp.ndarray,
@@ -211,6 +350,7 @@ def worker_debiased(
     rho_theta: jnp.ndarray | None = None,
     state_beta: AdmmState | None = None,
     state_theta: AdmmState | None = None,
+    symmetrize: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray, HeadStats]:
     """One machine's full debiased estimate of the (d, K) direction block.
 
@@ -228,46 +368,26 @@ def worker_debiased(
         two solves (leaves (d, K) / (d, columns-per-device)) -- a
         re-solve resumes from them instead of restarting from zero,
         riding exactly like the warm rho (DESIGN.md §7).
+      symmetrize: apply eq. 3.3's CLIME symmetrization to Theta_hat
+        before debiasing (unsharded paths only -- see
+        :func:`worker_solves`; default False preserves the historical
+        raw-column debias bit-for-bit).
 
     Returns ``(beta_tilde, beta_hat, stats)`` with (d, K) blocks.
 
-    The debias correction ``Theta^T (Sigma beta_hat - rhs)`` must use
-    ALL d CLIME columns (Theorem 4.5's one-round guarantee is exact only
-    then), so when d is not a multiple of the model-axis size, d is
-    padded up to ``size * ceil(d / size)``: each device solves the same
-    number of columns, pad columns are clamped onto column d-1 and
-    their correction rows are masked out of the gather.
+    The schedule decomposes as :func:`worker_solves` (suff stats + one
+    eigh + both ADMM solves) followed by one closed-form
+    :func:`apply_correction`; multi-round refinement
+    (:mod:`repro.core.rounds`, DESIGN.md §8) reuses the same solves and
+    re-applies the correction around the master's aggregate.
     """
-    hs = head.stats(*data)
-    # ONE eigendecomposition per worker: the direction solve and every
-    # CLIME column share this factor (it is rho- and lam-independent).
-    factor = spectral_factor(hs.sigma)
-    beta_hat = solve_dantzig(factor, hs.rhs, lam, cfg, rho=rho_beta,
-                             state=state_beta)
-    d = beta_hat.shape[0]
-    resid = hs.sigma @ beta_hat - hs.rhs  # (d, K)
-    if model_axis is None:
-        theta = solve_clime_columns(
-            factor, jnp.arange(d), lam_prime, cfg, rho=rho_theta,
-            state=state_theta,
-        )
-        correction = theta.T @ resid
-    else:
-        size = model_axis_size
-        idx = jax.lax.axis_index(model_axis)
-        cols_per = -(-d // size)  # ceil: pad d to a multiple of size
-        cols = idx * cols_per + jnp.arange(cols_per)
-        valid = cols < d
-        theta_block = solve_clime_columns(
-            factor, jnp.minimum(cols, d - 1), lam_prime, cfg, rho=rho_theta,
-            state=state_theta,
-        )
-        corr_slice = jnp.where(
-            valid[:, None], theta_block.T @ resid, 0.0
-        )  # (cols_per, K)
-        gathered = jax.lax.all_gather(
-            corr_slice, model_axis, axis=0, tiled=True
-        )  # (size * cols_per, K), device i's block at [i*cols_per, ...)
-        # global column j lands at row j; pad columns sit at rows >= d
-        correction = gathered[:d]
-    return beta_hat - correction, beta_hat, hs
+    ws = worker_solves(
+        head, *data, lam=lam, lam_prime=lam_prime, cfg=cfg,
+        model_axis=model_axis, model_axis_size=model_axis_size,
+        rho_beta=rho_beta, rho_theta=rho_theta,
+        state_beta=state_beta, state_theta=state_theta,
+        symmetrize=symmetrize,
+    )
+    resid = ws.stats.sigma @ ws.beta_hat - ws.stats.rhs  # (d, K)
+    correction = apply_correction(ws.theta, ws.valid, resid, model_axis)
+    return ws.beta_hat - correction, ws.beta_hat, ws.stats

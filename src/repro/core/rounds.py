@@ -1,0 +1,188 @@
+"""Multi-round refinement: past the one-shot m-barrier (DESIGN.md §8).
+
+The paper's one-shot aggregation attains the centralized rate only
+while the machine count m stays below Theorem 4.5's threshold; past it
+the averaged debiased estimator degrades and the one-shot schedule has
+no recourse.  Wang et al.'s EDSL and Lee et al.'s one-shot sparse
+regression show the fix: a few extra O(d)-communication rounds recover
+the centralized rate under much weaker conditions on m.
+
+The refinement iteration here re-applies each worker's debias
+correction AROUND THE MASTER'S AGGREGATE instead of the worker's own
+biased estimate.  With anchor_1 = beta_hat (the local estimate), every
+round t = 1..T is the SAME closed-form map
+
+    beta_tilde_t^i = anchor_t^i - Theta_hat_i^T (Sigma_hat_i anchor_t^i - rhs_i)
+    beta_bar_t     = mean_i beta_tilde_t^i        (ONE pmean of (d, K))
+    anchor_{t+1}^i = beta_bar_t                   (replicated post-pmean)
+
+so T = 1 IS the paper's one-shot estimator, bit for bit.  Writing
+M = mean_i Theta_i^T Sigma_i, the aggregate error contracts as
+``e_t = (I - M) e_{t-1}``: per-machine CLIME/covariance noise makes
+``I - Theta_i^T Sigma_i`` small (entrywise <= lam' by the CLIME
+constraint), and the FIXED POINT solves ``mean_i Theta_i^T (Sigma_i
+beta - rhs_i) = 0`` -- its deviation from beta* averages the m
+machines' score noise, i.e. the centralized rate, with no condition
+tying m to the one-shot threshold.  The hard threshold stays a
+master-side O(dK) postlude, exactly as in eq. 3.5.
+
+Cost accounting (the whole point of the design):
+
+* **Compute.**  Every round reuses the worker's ONE
+  :class:`~repro.kernels.spectral.SpectralFactor`, its already-solved
+  CLIME block and direction solve (:class:`~repro.core.pipeline.
+  WorkerSolves`): a round is two (d, d) x (d, K) matmuls -- ZERO extra
+  eigendecompositions, ZERO extra ADMM iterations.
+* **Communication.**  One ``pmean`` of a (d, K) block per round over
+  the data axes (T rounds = exactly T times the paper's per-round
+  budget), plus the intra-machine model-axis ``all_gather`` of the
+  correction slice -- inside a machine in the paper's cost model,
+  exactly as in the one-shot schedule.
+* **Warm re-entry.**  ``collect_info=True`` threads both solves
+  through the full dispatched result, so the returned
+  :class:`~repro.core.pipeline.WorkerSolves` carries the warm
+  rho/:class:`~repro.core.dantzig.AdmmState`/iteration counts.  A
+  re-entry (a tuning loop re-running the rounds pipeline after moving
+  lambda or t) passes them back and resumes each ADMM solve instead of
+  restarting from zero -- with ``cfg.tol`` set, measurably fewer
+  iterations (gated by ``benchmarks/multi_round.py``).
+
+The round loop body is a plain carry -> carry map (``lax.fori_loop``-
+able); the drivers unroll the T (static, small) rounds so the jaxpr
+pins in ``tests/test_rounds.py`` can count exactly T (d, K) ``pmean``s
+and ONE ``eigh`` per worker.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core.dantzig import AdmmState, DantzigConfig
+from repro.core.pipeline import DiscriminantHead, WorkerSolves
+
+__all__ = [
+    "refine_step",
+    "worker_rounds",
+    "simulate_multi_round",
+]
+
+
+def refine_step(ws: WorkerSolves, anchor: jnp.ndarray,
+                model_axis: str | None = None) -> jnp.ndarray:
+    """One worker's closed-form debias correction around ``anchor``.
+
+    ``beta_tilde = anchor - Theta_hat^T (Sigma_hat anchor - rhs)``:
+    round 1 anchors at the worker's own ``beta_hat`` (the paper's
+    eq. 3.4), later rounds at the replicated aggregate.  No solver
+    runs -- the round reuses the :class:`WorkerSolves` CLIME block
+    (sharded blocks reassemble through the same masked intra-machine
+    gather as the one-shot path).
+    """
+    resid = ws.stats.sigma @ anchor - ws.stats.rhs  # (d, K)
+    return anchor - pipeline.apply_correction(
+        ws.theta, ws.valid, resid, model_axis)
+
+
+def worker_rounds(
+    head: DiscriminantHead,
+    *data: jnp.ndarray,
+    lam,
+    lam_prime,
+    rounds: int = 1,
+    cfg: DantzigConfig = DantzigConfig(),
+    data_axes: Sequence[str] = ("data",),
+    model_axis: str | None = None,
+    model_axis_size: int = 1,
+    rho_beta: jnp.ndarray | None = None,
+    rho_theta: jnp.ndarray | None = None,
+    state_beta: AdmmState | None = None,
+    state_theta: AdmmState | None = None,
+    collect_info: bool = False,
+) -> tuple[jnp.ndarray, WorkerSolves]:
+    """T-round refined aggregate, from inside shard_map over the mesh.
+
+    Runs :func:`~repro.core.pipeline.worker_solves` ONCE (suff stats,
+    one eigh, direction + CLIME ADMM -- warm-startable via the
+    ``rho_*`` / ``state_*`` carries of a previous invocation's
+    :class:`WorkerSolves`), then ``rounds`` closed-form refinement
+    rounds, each closed by one (d, K) ``pmean`` over ``data_axes``.
+    ``rounds=1`` reproduces the one-shot worker + single averaging
+    round of Algorithm 1 exactly.
+
+    Returns ``(beta_bar, solves)``: the replicated (d, K) aggregate
+    (un-thresholded -- the master's hard threshold is the caller's
+    O(dK) postlude) and the worker's solves for reuse/warm re-entry.
+    """
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    ws = pipeline.worker_solves(
+        head, *data, lam=lam, lam_prime=lam_prime, cfg=cfg,
+        model_axis=model_axis, model_axis_size=model_axis_size,
+        rho_beta=rho_beta, rho_theta=rho_theta,
+        state_beta=state_beta, state_theta=state_theta,
+        full=collect_info,
+    )
+    anchor = ws.beta_hat
+    for _ in range(rounds):  # static T: the jaxpr shows T pmeans
+        beta_tilde = refine_step(ws, anchor, model_axis)
+        for ax in data_axes:
+            beta_tilde = jax.lax.pmean(beta_tilde, ax)
+        anchor = beta_tilde  # replicated: next round anchors here
+    return anchor, ws
+
+
+def simulate_multi_round(
+    head: DiscriminantHead,
+    data: Sequence[jnp.ndarray],
+    *,
+    lam,
+    lam_prime,
+    rounds: int = 1,
+    cfg: DantzigConfig = DantzigConfig(),
+    rho_beta: jnp.ndarray | None = None,
+    rho_theta: jnp.ndarray | None = None,
+    state_beta: AdmmState | None = None,
+    state_theta: AdmmState | None = None,
+    collect_info: bool = False,
+    return_all_rounds: bool = False,
+) -> tuple[jnp.ndarray, WorkerSolves]:
+    """Single-device twin of :func:`worker_rounds`: machines are vmapped.
+
+    ``data`` holds the head's samples stacked over a leading machine
+    axis (``(xs, ys)`` with (m, n, d) leaves for the binary head).
+    Identical math to the mesh path: per-machine solves under ``vmap``,
+    then T rounds of ``mean`` over the machine axis where the mesh does
+    its ``pmean``.  Warm carries are the (m, ...)-stacked fields of a
+    previous invocation's returned :class:`WorkerSolves`.
+
+    Returns ``(beta_bar, solves)`` with ``beta_bar`` (d, K), or
+    (rounds, d, K) -- the whole per-round trajectory -- when
+    ``return_all_rounds`` (the error-vs-T benchmark reads every T from
+    ONE set of solves).
+    """
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    # None carries are empty pytrees: vmap maps only the provided ones
+    warms = dict(rho_beta=rho_beta, rho_theta=rho_theta,
+                 state_beta=state_beta, state_theta=state_theta)
+
+    def one_machine(args, warm):
+        return pipeline.worker_solves(
+            head, *args, lam=lam, lam_prime=lam_prime, cfg=cfg,
+            full=collect_info, **warm)
+
+    ws = jax.vmap(one_machine)(tuple(data), warms)
+    anchor = ws.beta_hat  # (m, d, K)
+    bars = []
+    for _ in range(rounds):
+        beta_tilde = jax.vmap(refine_step)(ws, anchor)  # (m, d, K)
+        bar = jnp.mean(beta_tilde, axis=0)  # the round's one pmean
+        bars.append(bar)
+        anchor = jnp.broadcast_to(bar[None], beta_tilde.shape)
+    if return_all_rounds:
+        return jnp.stack(bars), ws
+    return bars[-1], ws

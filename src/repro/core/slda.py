@@ -25,10 +25,13 @@ operating point by held-out misclassification.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import classifier, path, pipeline
+from repro.core import rounds as _rounds
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import BinaryHead, SuffStats, suff_stats  # noqa: F401
 from repro.core.solver_dispatch import solve_dantzig
@@ -40,6 +43,7 @@ __all__ = [
     "debias",
     "debiased_local_estimator",
     "debiased_local_estimator_path",
+    "multi_round_slda",
     "tune_lambda_validation",
     "hard_threshold",
     "aggregate",
@@ -69,13 +73,45 @@ def debiased_local_estimator(
     lam: float,
     lam_prime: float | None = None,
     cfg: DantzigConfig = DantzigConfig(),
+    symmetrize: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Full worker-side pipeline: returns (beta_tilde, beta_hat)."""
+    """Full worker-side pipeline: returns (beta_tilde, beta_hat).
+
+    ``symmetrize`` debiases with the eq.-3.3-symmetrized Theta_hat
+    (unsharded full-CLIME path only; default False keeps the
+    historical raw-column debias bit-for-bit -- the golden pins).
+    """
     beta_tilde, beta_hat, _ = pipeline.worker_debiased(
         BinaryHead(), x, y,
         lam=lam, lam_prime=lam if lam_prime is None else lam_prime, cfg=cfg,
+        symmetrize=symmetrize,
     )
     return beta_tilde[:, 0], beta_hat[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "cfg"))
+def multi_round_slda(
+    xs: jnp.ndarray,
+    ys: jnp.ndarray,
+    lam: float,
+    lam_prime: float,
+    t: float,
+    rounds: int = 3,
+    cfg: DantzigConfig = DantzigConfig(),
+) -> jnp.ndarray:
+    """T-round refined distributed estimator on stacked machine draws.
+
+    The large-m face (DESIGN.md §8): xs (m, n1, d) / ys (m, n2, d) ->
+    beta_bar (d,) after ``rounds`` O(d) communication rounds, all
+    sharing one set of per-machine solves (``rounds=1`` is the paper's
+    one-shot aggregate).  Mesh twin:
+    :func:`repro.core.distributed.distributed_slda_shardmap` with the
+    same ``rounds=``.
+    """
+    beta_bar, _ = _rounds.simulate_multi_round(
+        BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
+        rounds=rounds, cfg=cfg)
+    return hard_threshold(beta_bar[:, 0], t)
 
 
 def debiased_local_estimator_path(
@@ -86,6 +122,7 @@ def debiased_local_estimator_path(
     cfg: DantzigConfig = DantzigConfig(),
     rho_beta: jnp.ndarray | None = None,
     state_beta: "path.AdmmState | None" = None,
+    symmetrize: bool = False,
 ) -> path.WorkerPathResult:
     """The worker pipeline at EVERY lambda in ``lams``, in one launch.
 
@@ -105,7 +142,7 @@ def debiased_local_estimator_path(
         lam_prime = lams[lams.shape[0] // 2]
     return path.worker_debiased_path(
         BinaryHead(), x, y, lams=lams, lam_prime=lam_prime, cfg=cfg,
-        rho_beta=rho_beta, state_beta=state_beta,
+        rho_beta=rho_beta, state_beta=state_beta, symmetrize=symmetrize,
     )
 
 

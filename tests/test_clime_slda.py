@@ -97,3 +97,82 @@ def test_f1_score_extremes():
     beta_star = jnp.asarray([1.0, 0, 0, 2.0, 0])
     assert float(classifier.f1_score(beta_star, beta_star)) == 1.0
     assert float(classifier.f1_score(jnp.zeros(5), beta_star)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# eq. 3.3 symmetrization wiring (PR 5 bugfix: exported but never applied)
+# ---------------------------------------------------------------------------
+
+
+def test_symmetrize_flag_applies_eq33_to_the_debias(problem):
+    """The estimator-path flag debiases with EXACTLY symmetrize_min of
+    the raw column solves (eq. 3.3), and the default keeps the raw
+    Theta bit-for-bit (the golden-pin mode)."""
+    from repro.core import pipeline
+    from repro.core.pipeline import BinaryHead
+
+    x, y = synthetic.sample_two_class(jax.random.PRNGKey(7), problem, 300, 300)
+    cfg = DantzigConfig(max_iters=400)
+    lam, lam_p = 0.2, 0.25
+    ws_raw = pipeline.worker_solves(
+        BinaryHead(), x, y, lam=lam, lam_prime=lam_p, cfg=cfg)
+    ws_sym = pipeline.worker_solves(
+        BinaryHead(), x, y, lam=lam, lam_prime=lam_p, cfg=cfg,
+        symmetrize=True)
+    # the flag changes Theta exactly as eq. 3.3 specifies
+    np.testing.assert_array_equal(
+        np.asarray(ws_sym.theta), np.asarray(symmetrize_min(ws_raw.theta)))
+    assert float(jnp.max(jnp.abs(ws_sym.theta - ws_raw.theta))) > 0
+    # symmetrized Theta is symmetric; the raw solve is not
+    np.testing.assert_array_equal(
+        np.asarray(ws_sym.theta), np.asarray(ws_sym.theta.T))
+    # and it propagates into the debiased estimate through the faces
+    bt_raw, bh = slda.debiased_local_estimator(x, y, lam, lam_p, cfg)
+    bt_sym, bh2 = slda.debiased_local_estimator(
+        x, y, lam, lam_p, cfg, symmetrize=True)
+    np.testing.assert_array_equal(np.asarray(bh), np.asarray(bh2))
+    expected = slda.debias(
+        slda.suff_stats(x, y), bh, symmetrize_min(ws_raw.theta))
+    np.testing.assert_allclose(np.asarray(bt_sym), np.asarray(expected),
+                               atol=1e-5)
+    assert float(jnp.max(jnp.abs(bt_sym - bt_raw))) > 0
+
+
+def test_symmetrize_flag_on_lambda_path_face(problem):
+    """The folded sweep debiases every grid point with the symmetrized
+    Theta when asked; default unchanged."""
+    x, y = synthetic.sample_two_class(jax.random.PRNGKey(8), problem, 200, 200)
+    cfg = DantzigConfig(max_iters=200, adapt_rho=False, fused=True)
+    lams = jnp.linspace(0.1, 0.4, 3)
+    res_raw = slda.debiased_local_estimator_path(x, y, lams, 0.2, cfg)
+    res_sym = slda.debiased_local_estimator_path(
+        x, y, lams, 0.2, cfg, symmetrize=True)
+    # biased estimates identical, debiased ones move at every lambda
+    np.testing.assert_array_equal(
+        np.asarray(res_raw.beta_hat), np.asarray(res_sym.beta_hat))
+    for i in range(3):
+        assert float(jnp.max(jnp.abs(
+            res_sym.beta_tilde[i] - res_raw.beta_tilde[i]))) > 0
+
+
+def test_symmetrize_rejected_on_sharded_path(problem):
+    """The model-axis-sharded path cannot symmetrize without an extra
+    (d, d) gather -- the flag raises instead of silently skipping."""
+    from repro.core import pipeline
+    from repro.core.pipeline import BinaryHead
+
+    x, y = synthetic.sample_two_class(jax.random.PRNGKey(9), problem, 50, 50)
+    with pytest.raises(ValueError, match="model_axis=None"):
+        pipeline.worker_solves(
+            BinaryHead(), x, y, lam=0.2, lam_prime=0.2,
+            model_axis="model", model_axis_size=2, symmetrize=True)
+
+
+def test_solve_clime_symmetrize_param(problem):
+    x, y = synthetic.sample_two_class(jax.random.PRNGKey(10), problem, 400, 400)
+    stats = slda.suff_stats(x, y)
+    cfg = DantzigConfig(max_iters=300)
+    raw = solve_clime(stats.sigma, 0.1, cfg)
+    sym = solve_clime(stats.sigma, 0.1, cfg, symmetrize=True)
+    np.testing.assert_array_equal(np.asarray(sym),
+                                  np.asarray(symmetrize_min(raw)))

@@ -1,0 +1,163 @@
+"""Warm-carry shape disambiguation in the lambda-path fold (PR 5 bugfix).
+
+``path._fold_state`` used to misread a (d, k) single-solve state as an
+(L, d) vector-sweep state whenever ``k == d == L``, and a 1-D ``rho``
+silently resolved the ``L == k`` collision as per-lambda by fiat.  Both
+are now explicit: ambiguous shapes raise, ``state_layout=`` /
+2-D ``rho`` disambiguate, and (L, d, 1) is the always-unambiguous
+vector-sweep layout.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import path as rpath
+from repro.core.dantzig import AdmmState, DantzigConfig
+from repro.stats.synthetic import ar1_covariance
+
+CFG = DantzigConfig(max_iters=150, adapt_rho=False)
+
+
+def _problem(d, k, seed=0):
+    a = jnp.asarray(ar1_covariance(d, 0.5), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(seed), (d, k)) * 0.4
+    return a, b
+
+
+def _state(shape):
+    return AdmmState(*(jnp.zeros(shape, jnp.float32) for _ in range(4)))
+
+
+# ---------------------------------------------------------------------------
+# the ambiguous square: L == d == k
+# ---------------------------------------------------------------------------
+
+
+def test_ambiguous_square_state_raises_and_layouts_disambiguate():
+    d = L = k = 6
+    a, b = _problem(d, k)
+    lams = jnp.linspace(0.1, 0.4, L)
+    ref = rpath.solve_dantzig_path(a, b, lams, CFG)
+
+    with pytest.raises(ValueError, match="ambiguous"):
+        rpath.solve_dantzig_path(a, b, lams, CFG, state=_state((d, k)))
+
+    # zero states under either explicit layout == the cold solve
+    for layout in ("single", "grid"):
+        res = rpath.solve_dantzig_path(
+            a, b, lams, CFG, state=_state((d, k)), state_layout=layout)
+        np.testing.assert_allclose(
+            np.asarray(res.beta), np.asarray(ref.beta), atol=1e-6)
+
+
+def test_single_layout_folds_like_the_unambiguous_shape():
+    """At L == d == k a real (d, k) single-solve carry must fold exactly
+    as it does at an unambiguous geometry: warm-start the square sweep
+    under state_layout='single' and compare against re-solving each
+    grid point from the same single-solve state directly."""
+    from repro.core.solver_dispatch import solve_dantzig_full
+
+    d = L = k = 6
+    a, b = _problem(d, k, seed=1)
+    lams = jnp.linspace(0.1, 0.4, L)
+    short = DantzigConfig(max_iters=40, adapt_rho=False)
+    seed_state = solve_dantzig_full(a, b, 0.25, short).state
+
+    warm = rpath.solve_dantzig_path(
+        a, b, lams, short, state=seed_state, state_layout="single")
+    for i in range(L):
+        seq = solve_dantzig_full(
+            a, b, float(lams[i]), short, state=seed_state)
+        np.testing.assert_allclose(
+            np.asarray(warm.beta[i]), np.asarray(seq.beta), atol=1e-5,
+            err_msg=f"lambda[{i}]")
+
+
+def test_grid_layout_folds_vector_sweep_carry():
+    """(L, d) vector-sweep carry at L == d: state_layout='grid' reads it
+    per-lambda; parity against the (L, d, 1) unambiguous layout."""
+    d = L = 8
+    a = jnp.asarray(ar1_covariance(d, 0.5), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (d,)) * 0.4
+    lams = jnp.linspace(0.1, 0.5, L)
+    short = DantzigConfig(max_iters=40, adapt_rho=False)
+    prev = rpath.solve_dantzig_path(a, b, lams, short)
+    assert prev.state.z.shape == (L, d)
+
+    via_kwarg = rpath.solve_dantzig_path(
+        a, b, lams, short, state=prev.state, state_layout="grid")
+    via_3d = rpath.solve_dantzig_path(
+        a, b, lams, short,
+        state=AdmmState(*(leaf[:, :, None] for leaf in prev.state)))
+    np.testing.assert_allclose(
+        np.asarray(via_kwarg.beta), np.asarray(via_3d.beta), atol=1e-6)
+
+
+def test_unambiguous_shapes_still_infer():
+    """Back-compat: when only one reading fits, auto inference holds."""
+    d, k, L = 10, 3, 5
+    a, b = _problem(d, k, seed=3)
+    lams = jnp.linspace(0.1, 0.4, L)
+    ref = rpath.solve_dantzig_path(a, b, lams, CFG)
+    # (d, k) single solve and (L, d, k) grid carry both infer
+    r1 = rpath.solve_dantzig_path(a, b, lams, CFG, state=_state((d, k)))
+    r2 = rpath.solve_dantzig_path(a, b, lams, CFG, state=_state((L, d, k)))
+    np.testing.assert_allclose(np.asarray(r1.beta), np.asarray(ref.beta),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r2.beta), np.asarray(ref.beta),
+                               atol=1e-6)
+
+
+def test_mismatched_state_shapes_raise():
+    d, k, L = 10, 3, 5
+    a, b = _problem(d, k, seed=4)
+    lams = jnp.linspace(0.1, 0.4, L)
+    for bad in ((d + 1,), (d, k + 2), (L + 1, d, k), (d, k, L, 1)):
+        with pytest.raises(ValueError):
+            rpath.solve_dantzig_path(a, b, lams, CFG, state=_state(bad))
+    with pytest.raises(ValueError, match="state_layout"):
+        rpath.solve_dantzig_path(a, b, lams, CFG, state=_state((d, k)),
+                                 state_layout="wide")
+
+
+# ---------------------------------------------------------------------------
+# the 1-D rho collision at L == k
+# ---------------------------------------------------------------------------
+
+
+def test_rho_collision_raises_and_2d_broadcasts_agree():
+    d, L = 12, 4
+    k = L
+    a, b = _problem(d, k, seed=5)
+    lams = jnp.linspace(0.1, 0.4, L)
+    rho = jnp.linspace(0.5, 2.0, L)
+
+    with pytest.raises(ValueError, match="ambiguous"):
+        rpath.solve_dantzig_path(a, b, lams, CFG, rho=rho)
+
+    # the two explicit readings are both accepted and genuinely differ
+    per_lam = rpath.solve_dantzig_path(a, b, lams, CFG, rho=rho[:, None])
+    per_col = rpath.solve_dantzig_path(a, b, lams, CFG, rho=rho[None, :])
+    assert per_lam.beta.shape == per_col.beta.shape == (L, d, k)
+    # rho changes the (finite-iteration) ADMM trajectory
+    assert float(jnp.max(jnp.abs(per_lam.beta - per_col.beta))) > 0
+
+
+def test_rho_1d_still_infers_when_unambiguous():
+    d, k, L = 12, 2, 4
+    a, b = _problem(d, k, seed=6)
+    lams = jnp.linspace(0.1, 0.4, L)
+    per_lam = rpath.solve_dantzig_path(a, b, lams, CFG,
+                                       rho=jnp.linspace(0.5, 2.0, L))
+    explicit = rpath.solve_dantzig_path(
+        a, b, lams, CFG,
+        rho=jnp.broadcast_to(jnp.linspace(0.5, 2.0, L)[:, None], (L, k)))
+    np.testing.assert_allclose(np.asarray(per_lam.beta),
+                               np.asarray(explicit.beta), atol=1e-6)
+    per_col = rpath.solve_dantzig_path(a, b, lams, CFG,
+                                       rho=jnp.asarray([0.8, 1.3]))
+    assert per_col.beta.shape == (L, d, k)
+    with pytest.raises(ValueError, match="matches neither"):
+        rpath.solve_dantzig_path(a, b, lams, CFG, rho=jnp.ones(3))

@@ -118,14 +118,22 @@ def _read(name: str) -> str:
 
 
 def test_single_pipeline_implementation():
-    """slda, distributed and multiclass all call into core/pipeline.py."""
+    """slda, distributed and multiclass all call into core/pipeline.py --
+    directly (worker_debiased / debias) or through the rounds core
+    (worker_rounds / simulate_multi_round, themselves thin over
+    pipeline.worker_solves + pipeline.apply_correction)."""
     for name in ("slda.py", "distributed.py", "multiclass.py"):
         src = _read(name)
         assert re.search(r"from repro\.core import .*pipeline|"
                          r"from repro\.core\.pipeline import", src), name
-        assert "pipeline.worker_debiased" in src or "pipeline.debias" in src, name
+        assert re.search(r"pipeline\.worker_debiased|pipeline\.debias|"
+                         r"\bworker_rounds\(|simulate_multi_round\(", src), name
+    # the rounds core routes through the one pipeline implementation
+    rounds_src = _read("rounds.py")
+    assert "pipeline.worker_solves" in rounds_src
+    assert "pipeline.apply_correction" in rounds_src
     # the sharded-CLIME gather logic lives only in the pipeline
-    for name in ("slda.py", "distributed.py", "multiclass.py"):
+    for name in ("slda.py", "distributed.py", "multiclass.py", "rounds.py"):
         assert "lax.all_gather(" not in _read(name), name
     assert "lax.all_gather(" in _read("pipeline.py")
 
