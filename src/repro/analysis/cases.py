@@ -1,0 +1,275 @@
+"""Representative trace shapes for every contracted entry point.
+
+Each case builds ``(fn, args)`` for :func:`jax.make_jaxpr` plus the
+params dict that resolves the entry's :class:`~repro.analysis.contracts.
+Param` placeholders.  Tracing never executes the solver, so even the
+d=70 remainder sweep is cheap -- but mesh cases DO need the devices
+their mesh asks for (``min_devices``); the lint CLI forces an 8-device
+host, in-process callers skip what the host cannot mesh.
+
+Importing this module imports the core entry points, which is what
+populates the contract registry.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import path as rpath
+from repro.core import pipeline, rounds
+from repro.core.dantzig import DantzigConfig
+from repro.core.distributed import (
+    _shard_map,
+    distributed_mc_slda_shardmap,
+    distributed_slda_shardmap,
+)
+from repro.core.solver_dispatch import solve_dantzig_full
+from repro.kernels.spectral import spectral_factor
+
+
+class Case(NamedTuple):
+    entry: str
+    name: str
+    params: dict
+    build: Callable[[], Tuple[Callable, tuple]]
+    min_devices: int = 1
+
+
+_CASES: Dict[str, List[Case]] = {}
+
+
+def case(entry: str, name: str, params: dict, *, min_devices: int = 1):
+    def register(build):
+        _CASES.setdefault(entry, []).append(
+            Case(entry, name, dict(params), build, min_devices))
+        return build
+    return register
+
+
+def cases_for(entry: str) -> List[Case]:
+    return list(_CASES.get(entry, []))
+
+
+def all_cases() -> Dict[str, List[Case]]:
+    return {k: list(v) for k, v in _CASES.items()}
+
+
+def _normal(seed: int, shape) -> jnp.ndarray:
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def _spd(d: int, seed: int = 0) -> jnp.ndarray:
+    g = _normal(seed, (2 * d, d))
+    return g.T @ g / (2 * d) + 0.5 * jnp.eye(d)
+
+
+SCAN = DantzigConfig(max_iters=40, adapt_rho=False)
+FUSED = DantzigConfig(max_iters=40, adapt_rho=False, fused=True)
+FUSED_TOL = DantzigConfig(max_iters=40, adapt_rho=False, fused=True,
+                          tol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# pipeline.worker_debiased
+# ---------------------------------------------------------------------------
+
+def _worker_debiased_case(cfg):
+    def build():
+        x, y = _normal(0, (40, 12)), _normal(1, (44, 12))
+
+        def fn(x, y):
+            return pipeline.worker_debiased(
+                pipeline.BinaryHead(), x, y, lam=0.1, lam_prime=0.1,
+                cfg=cfg)
+        return fn, (x, y)
+    return build
+
+
+case("pipeline.worker_debiased", "binary-scan-d12",
+     {"pallas_calls": 0})(_worker_debiased_case(SCAN))
+case("pipeline.worker_debiased", "binary-fused-d12",
+     {"pallas_calls": 2})(_worker_debiased_case(FUSED))
+case("pipeline.worker_debiased", "binary-fused-tol-d12",
+     {"pallas_calls": 2})(_worker_debiased_case(FUSED_TOL))
+
+
+@case("pipeline.worker_debiased", "multiclass-fused-d10-K3",
+      {"pallas_calls": 2})
+def _worker_debiased_mc():
+    x = _normal(2, (60, 10))
+    labels = jax.random.randint(jax.random.PRNGKey(3), (60,), 0, 3)
+
+    def fn(x, labels):
+        return pipeline.worker_debiased(
+            pipeline.MulticlassHead(3), x, labels, lam=0.1,
+            lam_prime=0.1, cfg=FUSED)
+    return fn, (x, labels)
+
+
+# ---------------------------------------------------------------------------
+# rounds.worker_rounds (inside a minimal shard_map shell)
+# ---------------------------------------------------------------------------
+
+@case("rounds.worker_rounds", "rounds3-mesh1x1-d12",
+      {"rounds": 3, "psum_payload": (12, 1), "pallas_calls": 0})
+def _worker_rounds_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x, y = _normal(4, (30, 12)), _normal(5, (30, 12))
+
+    def shard_fn(xs, ys):
+        beta, _ = rounds.worker_rounds(
+            pipeline.BinaryHead(), xs, ys, lam=0.2, lam_prime=0.2,
+            rounds=3, cfg=SCAN, model_axis="model", model_axis_size=1)
+        return beta
+
+    spec = P("data", None)
+    fn = _shard_map(shard_fn, mesh, (spec, spec), P())
+    return fn, (x, y)
+
+
+# ---------------------------------------------------------------------------
+# distributed faces
+# ---------------------------------------------------------------------------
+
+def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30):
+    def build():
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+        n = n_per * mesh_shape[0]
+        x, y = _normal(6, (n, d)), _normal(7, (n, d))
+
+        def fn(x, y):
+            return distributed_slda_shardmap(
+                mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=t_rounds)
+        return fn, (x, y)
+    return build
+
+
+for _t in (1, 3):
+    case("distributed.slda_shardmap", f"scan-rounds{_t}-mesh1x1-d12",
+         {"rounds": _t, "psum_payload": (12, 1), "pallas_calls": 0})(
+        _slda_face_case(SCAN, _t, 12, (1, 1)))
+case("distributed.slda_shardmap", "fused-rounds2-mesh1x1-d12",
+     {"rounds": 2, "psum_payload": (12, 1), "pallas_calls": 2})(
+    _slda_face_case(FUSED, 2, 12, (1, 1)))
+# the PR-1 regression shape: d % model_axis != 0 (70 over 4 -> pad 72)
+case("distributed.slda_shardmap", "fused-rounds3-mesh2x4-d70-remainder",
+     {"rounds": 3, "psum_payload": (70, 1), "pallas_calls": 2},
+     min_devices=8)(
+    _slda_face_case(FUSED, 3, 70, (2, 4)))
+
+
+def _mc_face_case(cfg, t_rounds, d=10, num_classes=3):
+    def build():
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        x = _normal(8, (60, d))
+        labels = jax.random.randint(jax.random.PRNGKey(9), (60,), 0,
+                                    num_classes)
+
+        def fn(x, labels):
+            return distributed_mc_slda_shardmap(
+                mesh, x, labels, num_classes, 0.2, 0.2, 0.05, cfg,
+                rounds=t_rounds)
+        return fn, (x, labels)
+    return build
+
+
+for _t in (1, 3):
+    case("distributed.mc_slda_shardmap", f"scan-rounds{_t}-mesh1x1-d10-K3",
+         {"rounds": _t, "direction_payload": (10, 3),
+          "means_payload": (3, 10), "total_psums": _t + 1,
+          "pallas_calls": 0})(
+        _mc_face_case(SCAN, _t))
+
+
+# ---------------------------------------------------------------------------
+# path.solve_dantzig_path / path.worker_debiased_path
+# ---------------------------------------------------------------------------
+
+@case("path.solve_dantzig_path", "fused-factor-fed-d16-k3-L4",
+      {"eighs": 0, "pallas_calls": 1})
+def _path_factor_fed():
+    a = _spd(16, seed=10)
+    factor = spectral_factor(a)
+    b = _normal(11, (16, 3))
+    lams = jnp.linspace(0.05, 0.4, 4)
+
+    def fn(factor, b):
+        return rpath.solve_dantzig_path(factor, b, lams, FUSED)
+    return fn, (factor, b)
+
+
+@case("path.solve_dantzig_path", "scan-raw-d16-k2-L4",
+      {"eighs": 1, "pallas_calls": 0})
+def _path_raw_scan():
+    a = _spd(16, seed=12)
+    b = _normal(13, (16, 2))
+    lams = jnp.linspace(0.05, 0.4, 4)
+
+    def fn(a, b):
+        return rpath.solve_dantzig_path(a, b, lams, SCAN)
+    return fn, (a, b)
+
+
+@case("path.solve_dantzig_path", "fused-tol-raw-d16-k2-L4",
+      {"eighs": 1, "pallas_calls": 1})
+def _path_raw_fused_tol():
+    a = _spd(16, seed=14)
+    b = _normal(15, (16, 2))
+    lams = jnp.linspace(0.05, 0.4, 4)
+
+    def fn(a, b):
+        return rpath.solve_dantzig_path(a, b, lams, FUSED_TOL)
+    return fn, (a, b)
+
+
+def _worker_path_case(cfg):
+    def build():
+        x, y = _normal(16, (40, 12)), _normal(17, (44, 12))
+        lams = jnp.linspace(0.05, 0.4, 6)
+
+        def fn(x, y):
+            return rpath.worker_debiased_path(
+                pipeline.BinaryHead(), x, y, lams=lams, lam_prime=0.1,
+                cfg=cfg)
+        return fn, (x, y)
+    return build
+
+
+case("path.worker_debiased_path", "scan-d12-L6",
+     {"pallas_calls": 0})(_worker_path_case(SCAN))
+case("path.worker_debiased_path", "fused-tol-d12-L6",
+     {"pallas_calls": 2})(_worker_path_case(FUSED_TOL))
+
+
+# ---------------------------------------------------------------------------
+# solver_dispatch.solve_dantzig_full
+# ---------------------------------------------------------------------------
+
+@case("solver_dispatch.solve_dantzig_full", "fused-factor-fed-d16-k4",
+      {"eighs": 0, "pallas_calls": 1})
+def _full_factor_fed():
+    a = _spd(16, seed=18)
+    factor = spectral_factor(a)
+    b = _normal(19, (16, 4))
+
+    def fn(factor, b):
+        return solve_dantzig_full(factor, b, 0.1, FUSED)
+    return fn, (factor, b)
+
+
+@case("solver_dispatch.solve_dantzig_full", "scan-raw-d16-k4",
+      {"eighs": 1, "pallas_calls": 0})
+def _full_raw_scan():
+    a = _spd(16, seed=20)
+    b = _normal(21, (16, 4))
+
+    def fn(a, b):
+        return solve_dantzig_full(a, b, 0.1, SCAN)
+    return fn, (a, b)
+
+
+__all__ = ["Case", "all_cases", "case", "cases_for"]

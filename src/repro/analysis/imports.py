@@ -1,0 +1,244 @@
+"""AST-based import-graph rules: the structural pins, grep-proofed.
+
+The old pins in ``tests/test_pipeline_parity.py`` regex-scanned source
+text, so a comment mentioning ``lax.all_gather(`` or a renamed alias
+could flip them either way.  These rules walk the parsed AST instead:
+imports are resolved through their aliases and calls through attribute
+chains, so only real code can satisfy or violate a rule.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.contracts import Violation
+
+# .../src/repro/analysis/imports.py -> .../src
+SRC_ROOT = Path(__file__).resolve().parents[2]
+
+
+def iter_modules(src_root: Optional[Path] = None) -> Iterator[Tuple[str, Path]]:
+    """Yield (dotted module name, path) for every .py file under src."""
+    root = Path(src_root) if src_root is not None else SRC_ROOT
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = Path(dirpath) / fname
+            rel = path.relative_to(root).with_suffix("")
+            parts = list(rel.parts)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            yield ".".join(parts), path
+
+
+def _parse(path: Path) -> ast.Module:
+    return ast.parse(path.read_text(), filename=str(path))
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """``repro.core.dantzig.solve_dantzig`` -> that dotted string."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _module_aliases(tree: ast.Module, module: str) -> Dict[str, str]:
+    """Local names bound to ``module`` (e.g. ``dantzig``, ``dz``)."""
+    aliases: Dict[str, str] = {}
+    parent, _, leaf = module.rpartition(".")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == module:
+                    # `import repro.core.dantzig` binds `repro`; the full
+                    # dotted chain is matched separately in _name_uses.
+                    if a.asname:
+                        aliases[a.asname] = module
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == parent:
+                for a in node.names:
+                    if a.name == leaf:
+                        aliases[a.asname or a.name] = module
+    return aliases
+
+
+def _site(path: Path, node: ast.AST) -> Tuple[str, ...]:
+    lineno = getattr(node, "lineno", "?")
+    return (f"{path}:{lineno}",)
+
+
+def banned_import_violations(
+    src_root: Optional[Path] = None,
+    *,
+    from_module: str = "repro.core.dantzig",
+    name_prefix: str = "solve_dantzig",
+    allowed: Tuple[str, ...] = ("repro.core.solver_dispatch",
+                               "repro.core.dantzig"),
+) -> List[Violation]:
+    """Only the dispatch layer may reach ``from_module``'s solver entries.
+
+    Flags ``from repro.core.dantzig import solve_dantzig*`` and any
+    attribute use ``<alias>.solve_dantzig*`` where the alias (or the full
+    dotted chain) resolves to the banned module.
+    """
+    rule = f"imports[{from_module}.{name_prefix}* only via {allowed}]"
+    violations: List[Violation] = []
+    for mod, path in iter_modules(src_root):
+        if mod in allowed or not mod:
+            continue
+        tree = _parse(path)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == from_module:
+                for a in node.names:
+                    if a.name.startswith(name_prefix):
+                        violations.append(Violation(
+                            rule,
+                            f"{mod} imports {a.name} from {from_module}, "
+                            f"bypassing the dispatch layer",
+                            _site(path, node),
+                        ))
+        aliases = _module_aliases(tree, from_module)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            if not node.attr.startswith(name_prefix):
+                continue
+            base = _attr_chain(node.value)
+            if base in aliases or base == from_module:
+                violations.append(Violation(
+                    rule,
+                    f"{mod} calls {base}.{node.attr}, bypassing the "
+                    f"dispatch layer",
+                    _site(path, node),
+                ))
+    return violations
+
+
+def exclusive_call_violations(
+    src_root: Optional[Path] = None,
+    *,
+    func_name: str = "all_gather",
+    allowed: Tuple[str, ...] = ("repro.core.pipeline",),
+) -> List[Violation]:
+    """A function may only be *called* from the allowed modules.
+
+    Matches both ``all_gather(...)`` and any attribute call ending in
+    ``.all_gather(...)`` (``jax.lax.all_gather``, ``lax.all_gather``).
+    """
+    rule = f"imports[{func_name}() only in {allowed}]"
+    violations: List[Violation] = []
+    for mod, path in iter_modules(src_root):
+        if mod in allowed or not mod:
+            continue
+        for node in ast.walk(_parse(path)):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            hit = (isinstance(fn, ast.Name) and fn.id == func_name) or (
+                isinstance(fn, ast.Attribute) and fn.attr == func_name)
+            if hit:
+                violations.append(Violation(
+                    rule,
+                    f"{mod} calls {func_name}(); the sharded gather "
+                    f"logic lives only in {', '.join(allowed)}",
+                    _site(path, node),
+                ))
+    return violations
+
+
+def _imports_module(tree: ast.Module, module: str) -> bool:
+    parent, _, leaf = module.rpartition(".")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == module or a.name.startswith(module + ".")
+                   for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == module:
+                return True
+            if node.module == parent and any(a.name == leaf
+                                             for a in node.names):
+                return True
+    return False
+
+
+def _referenced_names(tree: ast.Module) -> set:
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.add(node.attr)
+            chain = _attr_chain(node)
+            if chain:
+                names.add(chain)
+    return names
+
+
+def pipeline_unification_violations(
+    src_root: Optional[Path] = None,
+) -> List[Violation]:
+    """slda, distributed and multiclass all route through core/pipeline --
+    directly (worker_debiased / debias) or via the rounds core
+    (worker_rounds / simulate_multi_round), which itself is thin over
+    pipeline.worker_solves + pipeline.apply_correction."""
+    rule = "imports[single pipeline implementation]"
+    root = Path(src_root) if src_root is not None else SRC_ROOT
+    violations: List[Violation] = []
+    entry_names = {"worker_debiased", "debias", "worker_rounds",
+                   "simulate_multi_round"}
+    for leaf in ("slda", "distributed", "multiclass"):
+        mod = f"repro.core.{leaf}"
+        path = root / "repro" / "core" / f"{leaf}.py"
+        tree = _parse(path)
+        if not (_imports_module(tree, "repro.core.pipeline")
+                or _imports_module(tree, "repro.core.rounds")):
+            violations.append(Violation(
+                rule, f"{mod} does not import the pipeline/rounds core",
+                (str(path),),
+            ))
+        if not (entry_names & _referenced_names(tree)):
+            violations.append(Violation(
+                rule,
+                f"{mod} never calls a pipeline entry point "
+                f"({sorted(entry_names)})",
+                (str(path),),
+            ))
+    rounds_path = root / "repro" / "core" / "rounds.py"
+    rounds_names = _referenced_names(_parse(rounds_path))
+    for needed in ("pipeline.worker_solves", "pipeline.apply_correction"):
+        if needed not in rounds_names:
+            violations.append(Violation(
+                rule,
+                f"repro.core.rounds no longer routes through {needed}",
+                (str(rounds_path),),
+            ))
+    return violations
+
+
+def structural_violations(src_root: Optional[Path] = None) -> List[Violation]:
+    """All repo import-graph rules (the former grep pins)."""
+    return (
+        banned_import_violations(src_root)
+        + exclusive_call_violations(src_root)
+        + pipeline_unification_violations(src_root)
+    )
+
+
+__all__ = [
+    "SRC_ROOT",
+    "banned_import_violations",
+    "exclusive_call_violations",
+    "iter_modules",
+    "pipeline_unification_violations",
+    "structural_violations",
+]

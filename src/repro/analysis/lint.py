@@ -1,0 +1,124 @@
+"""``python -m repro.analysis.lint`` -- sweep the contract registry.
+
+Runs two rule families and exits nonzero on any violation:
+
+1. import-graph rules (:mod:`repro.analysis.imports`) -- the structural
+   pins, checked on the AST;
+2. trace contracts -- every registered entry point traced at its
+   representative shapes (:mod:`repro.analysis.cases`, including the
+   d % model_axis != 0 remainder meshes) and checked against its
+   declared contracts, reporting the offending eqn path on failure.
+
+Heavy imports happen inside :func:`main` so the CLI can force an
+8-device host platform *before* jax initializes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_devices(n: int = 8) -> None:
+    """Force an n-device CPU host; must run before jax is imported."""
+    if "jax" in sys.modules:
+        return  # too late to change platform flags
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _DEVICE_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_DEVICE_FLAG}={n}".strip()
+
+
+def run(entries=None, *, include_imports: bool = True, out=None) -> int:
+    """Sweep the registry; return the number of failures (0 == clean)."""
+    import jax
+
+    from repro.analysis import cases as cases_mod
+    from repro.analysis import contracts as C
+    from repro.analysis import imports as imports_mod
+    from repro.analysis import registry
+
+    out = out or sys.stdout
+    failures = 0
+    n_devices = len(jax.devices())
+
+    if include_imports:
+        violations = imports_mod.structural_violations()
+        status = "FAIL" if violations else "ok"
+        print(f"[{status}] import-graph rules "
+              f"({imports_mod.SRC_ROOT / 'repro'})", file=out)
+        if violations:
+            failures += 1
+            print(C.render_report(violations), file=out)
+
+    specs = registry.registered()
+    names = sorted(entries) if entries else sorted(specs)
+    for name in names:
+        if name not in specs:
+            failures += 1
+            print(f"[FAIL] {name}: not in the contract registry", file=out)
+            continue
+        spec = specs[name]
+        entry_cases = cases_mod.cases_for(name)
+        if not entry_cases:
+            failures += 1
+            print(f"[FAIL] {name}: no representative cases registered",
+                  file=out)
+            continue
+        print(f"{name} ({len(spec.contracts)} contracts)", file=out)
+        for case in entry_cases:
+            if case.min_devices > n_devices:
+                print(f"  [skip] {case.name}: needs {case.min_devices} "
+                      f"devices, host has {n_devices}", file=out)
+                continue
+            fn, args = case.build()
+            jaxpr = jax.make_jaxpr(fn)(*args)
+            violations = C.run_contracts(spec.contracts, jaxpr, case.params)
+            if violations:
+                failures += 1
+                print(f"  [FAIL] {case.name}", file=out)
+                print(C.render_report(violations, indent="    "), file=out)
+            else:
+                print(f"  [ok] {case.name}", file=out)
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="trace-contract lint over the entry-point registry",
+    )
+    parser.add_argument("--entry", action="append", default=None,
+                        help="lint only this entry (repeatable)")
+    parser.add_argument("--no-imports", action="store_true",
+                        help="skip the import-graph rules")
+    parser.add_argument("--list", action="store_true",
+                        help="list registered entries and cases, then exit")
+    parser.add_argument("--devices", type=int, default=8,
+                        help="host platform device count to force "
+                             "(before jax import; default 8)")
+    args = parser.parse_args(argv)
+
+    ensure_host_devices(args.devices)
+
+    if args.list:
+        from repro.analysis import cases as cases_mod
+        from repro.analysis import registry
+        for name, spec in sorted(registry.registered().items()):
+            print(f"{name} ({len(spec.contracts)} contracts)")
+            for case in cases_mod.cases_for(name):
+                print(f"  {case.name}")
+        return 0
+
+    failures = run(args.entry, include_imports=not args.no_imports)
+    if failures:
+        print(f"\nrepro.analysis.lint: {failures} FAILURE(S)")
+        return 1
+    print("\nrepro.analysis.lint: all contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,6 +46,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import (
+    CollectiveContract,
+    DtypePolicy,
+    Param,
+    PrimitiveBudget,
+    VmemConformance,
+    trace_contract,
+)
 from repro.core import rounds as rounds_core, slda
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import BinaryHead, MulticlassHead
@@ -62,6 +70,22 @@ def _shard_map(f, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
+@trace_contract(
+    "distributed.slda_shardmap",
+    contracts=(
+        PrimitiveBudget("eigh", exact=1),
+        # Algorithm 1's uplink: T psums of the (d, 1) direction, nothing
+        # else crosses the data axis
+        CollectiveContract("psum", count=Param("rounds"), axis="data",
+                           shape=Param("psum_payload"), dtype="float32"),
+        PrimitiveBudget("psum", exact=Param("rounds")),
+        CollectiveContract("all_gather", count=Param("rounds"),
+                           axis="model"),
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
 def distributed_slda_shardmap(
     mesh: jax.sharding.Mesh,
     x: jnp.ndarray,
@@ -104,6 +128,25 @@ def distributed_slda_shardmap(
     return fn(x, y)
 
 
+@trace_contract(
+    "distributed.mc_slda_shardmap",
+    contracts=(
+        PrimitiveBudget("eigh", exact=1),
+        # T psums of the (d, K) direction block over the data axis ...
+        CollectiveContract("psum", count=Param("rounds"), axis="data",
+                           shape=Param("direction_payload"),
+                           dtype="float32"),
+        # ... plus exactly one (K, d) class-means psum, and nothing else
+        CollectiveContract("psum", count=1, axis="data",
+                           shape=Param("means_payload"), dtype="float32"),
+        PrimitiveBudget("psum", exact=Param("total_psums")),
+        CollectiveContract("all_gather", count=Param("rounds"),
+                           axis="model"),
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
 def distributed_mc_slda_shardmap(
     mesh: jax.sharding.Mesh,
     x: jnp.ndarray,

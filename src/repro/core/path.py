@@ -48,10 +48,17 @@ iteration savings (``PathResult.iters``).
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from repro.analysis import (
+    DtypePolicy,
+    Param,
+    PrimitiveBudget,
+    VmemConformance,
+    trace_contract,
+)
 from repro.core.clime import solve_clime_columns, symmetrize_min
 from repro.core.dantzig import AdmmState, DantzigConfig, kkt_violation
 from repro.core.pipeline import DiscriminantHead, HeadStats
@@ -173,6 +180,20 @@ def seed_path_state(
     return AdmmState(*(jnp.take(leaf, nearest, axis=0) for leaf in state))
 
 
+@trace_contract(
+    "path.solve_dantzig_path",
+    contracts=(
+        # a raw Sigma is factorized once for the WHOLE sweep; a
+        # SpectralFactor input must trace zero eighs
+        PrimitiveBudget("eigh", exact=Param("eighs")),
+        # the lambda grid folds into the column batch: one fused launch
+        # covers all L grid points (scan cfg: none)
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        PrimitiveBudget("psum", exact=0),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
 def solve_dantzig_path(
     a: jnp.ndarray | SpectralFactor,
     b: jnp.ndarray,
@@ -286,6 +307,17 @@ class WorkerPathResult(NamedTuple):
     iters: jnp.ndarray  # (L, K) executed direction-solve iterations
 
 
+@trace_contract(
+    "path.worker_debiased_path",
+    contracts=(
+        # one eigh funds the direction sweep AND the CLIME block
+        PrimitiveBudget("eigh", exact=1),
+        # fused cfg: folded direction sweep + CLIME = 2 launches
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
 def worker_debiased_path(
     head: DiscriminantHead,
     *data: jnp.ndarray,

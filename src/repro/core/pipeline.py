@@ -62,6 +62,13 @@ from repro.core.clime import (
     solve_clime_columns_full,
     symmetrize_min,
 )
+from repro.analysis import (
+    DtypePolicy,
+    Param,
+    PrimitiveBudget,
+    VmemConformance,
+    trace_contract,
+)
 from repro.core.dantzig import AdmmState, DantzigConfig
 from repro.core.solver_dispatch import solve_dantzig, solve_dantzig_full
 from repro.kernels import ops as kops
@@ -338,6 +345,22 @@ def apply_correction(
     return gathered[: resid.shape[0]]
 
 
+@trace_contract(
+    "pipeline.worker_debiased",
+    contracts=(
+        # one SpectralFactor per worker: refinement and the lambda path
+        # both reuse it, so a second eigh is always a regression
+        PrimitiveBudget("eigh", exact=1),
+        # fused cfg: direction solve + CLIME block = exactly 2 launches;
+        # scan cfg: none (a third launch means the factor stopped folding)
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        # the unsharded worker communicates nothing
+        PrimitiveBudget("psum", exact=0),
+        PrimitiveBudget("all_gather", exact=0),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
 def worker_debiased(
     head: DiscriminantHead,
     *data: jnp.ndarray,

@@ -60,6 +60,14 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import (
+    CollectiveContract,
+    DtypePolicy,
+    Param,
+    PrimitiveBudget,
+    VmemConformance,
+    trace_contract,
+)
 from repro.core import pipeline
 from repro.core.dantzig import AdmmState, DantzigConfig
 from repro.core.pipeline import DiscriminantHead, WorkerSolves
@@ -87,6 +95,24 @@ def refine_step(ws: WorkerSolves, anchor: jnp.ndarray,
         ws.theta, ws.valid, resid, model_axis)
 
 
+@trace_contract(
+    "rounds.worker_rounds",
+    contracts=(
+        # refinement rounds reuse the round-one SpectralFactor
+        PrimitiveBudget("eigh", exact=1),
+        # the paper's uplink: T rounds = T psums of the (d, K) direction
+        # block over the data axis, f32 -- count AND payload are pinned
+        CollectiveContract("psum", count=Param("rounds"), axis="data",
+                           shape=Param("psum_payload"), dtype="float32"),
+        PrimitiveBudget("psum", exact=Param("rounds")),
+        # intra-machine CLIME reassembly: one model-axis gather per round
+        CollectiveContract("all_gather", count=Param("rounds"),
+                           axis="model"),
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
 def worker_rounds(
     head: DiscriminantHead,
     *data: jnp.ndarray,

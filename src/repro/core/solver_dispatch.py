@@ -59,6 +59,13 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from repro.analysis import (
+    DtypePolicy,
+    Param,
+    PrimitiveBudget,
+    VmemConformance,
+    trace_contract,
+)
 from repro.core import dantzig as _dantzig
 from repro.kernels import ops as kops
 from repro.kernels.dantzig_fused import (
@@ -220,6 +227,16 @@ def solve_dantzig_with_rho(
     return out, rho_final
 
 
+@trace_contract(
+    "solver_dispatch.solve_dantzig_full",
+    contracts=(
+        # factor-fed solves must not re-factorize; raw input costs one
+        PrimitiveBudget("eigh", exact=Param("eighs")),
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
 def solve_dantzig_full(
     a: "jnp.ndarray | SpectralFactor",
     b: jnp.ndarray,

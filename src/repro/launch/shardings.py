@@ -10,8 +10,6 @@ system consistently -- that is the §Perf iteration knob.
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.checkpoint import save_checkpoint

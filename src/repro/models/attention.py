@@ -198,7 +198,6 @@ def attention_decode(p, x, cache, pos, cfg: ArchConfig):
     Returns (out (b,1,d), updated cache).  With sliding_window the
     cache length is the window and writes rotate.
     """
-    b = x.shape[0]
     q, k_new, v_new = _project_qkv(p, x, cfg)
     cos, sin = common.rope_freqs(pos[None], cfg.resolved_head_dim, cfg.rope_theta)
     q = common.apply_rope(q, cos[None], sin[None])

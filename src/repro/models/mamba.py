@@ -130,7 +130,6 @@ def init_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
 
 def mamba_decode(p, x_in, state: MambaState, cfg: ArchConfig):
     """One-token step.  x_in: (b, 1, d) -> (out (b, 1, d), new state)."""
-    b = x_in.shape[0]
     di, ds = d_inner(cfg), cfg.ssm_state
     xz = jnp.einsum("bsd,de->bse", x_in, p["in_proj"])
     x, z = xz[..., :di], xz[..., di:]

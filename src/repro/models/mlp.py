@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
-from repro.models.common import ArchConfig
 from repro.sharding import constrain
 
 

@@ -221,3 +221,41 @@ def test_fused_per_column_rho_operand():
     dantzig_fused_pallas(a, q, inv, b, 0.1, rhos * 1.5, iters=120,
                          block_k=4, interpret=True)
     assert dantzig_fused_pallas._cache_size() == n_compiled
+
+
+# ---------------------------------------------------------------------------
+# trace pins via repro.analysis: launch count + VMEM conformance
+# ---------------------------------------------------------------------------
+
+from repro.analysis import VmemConformance, count_eqns  # noqa: E402
+
+
+def test_fused_blocked_trace_conforms_to_vmem_model():
+    """The traced BlockMappings of a tiled launch satisfy the analytic
+    footprint model -- and a deliberately tiny budget trips the contract
+    with the offending launch located in the report."""
+    d, k = 48, 10
+    a = jnp.asarray(ar1_covariance(d, 0.7), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(9), (d, k))
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: ops.dantzig_fused(a, b, 0.1, iters=50, block_k=4))(a, b)
+    assert count_eqns(jaxpr, "pallas_call") == 1
+    assert VmemConformance().check(jaxpr) == []
+    violations = VmemConformance(budget=1024).check(jaxpr)
+    assert violations, "1 KiB budget must trip the conformance contract"
+    assert any("pallas_call" in site for v in violations for site in v.sites)
+
+
+def test_tol_mode_state_kernel_trace_conforms_to_vmem_model():
+    """tol-mode launches the state-I/O kernel (10 operands): the checker
+    must pick up state_io=True and still conform."""
+    d, k = 32, 6
+    a = jnp.asarray(ar1_covariance(d, 0.5), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(10), (d, k))
+    cfg = DantzigConfig(max_iters=60, adapt_rho=False, fused=True, tol=1e-3)
+    from repro.core.solver_dispatch import solve_dantzig_full
+
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: solve_dantzig_full(a, b, 0.1, cfg))(a, b)
+    assert count_eqns(jaxpr, "pallas_call") == 1
+    assert VmemConformance().check(jaxpr) == []

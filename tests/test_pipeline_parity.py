@@ -14,7 +14,6 @@ Two kinds of pins:
 """
 
 import os
-import re
 
 import jax
 import numpy as np
@@ -22,6 +21,7 @@ import pytest
 
 from conftest import run_in_subprocess
 
+from repro.analysis import imports as import_rules
 from repro.core import slda
 from repro.core.dantzig import DantzigConfig
 from repro.core.distributed import (
@@ -106,60 +106,34 @@ def test_shardmap_remainder_matches_prerefactor():
 
 
 # ---------------------------------------------------------------------------
-# Structural pins
+# Structural pins -- AST-based import-graph rules from repro.analysis
+# (a comment, docstring, or alias rename can no longer flip these)
 # ---------------------------------------------------------------------------
-
-CORE = os.path.join(REPO, "src", "repro", "core")
-
-
-def _read(name: str) -> str:
-    with open(os.path.join(CORE, name)) as f:
-        return f.read()
 
 
 def test_single_pipeline_implementation():
     """slda, distributed and multiclass all call into core/pipeline.py --
     directly (worker_debiased / debias) or through the rounds core
     (worker_rounds / simulate_multi_round, themselves thin over
-    pipeline.worker_solves + pipeline.apply_correction)."""
-    for name in ("slda.py", "distributed.py", "multiclass.py"):
-        src = _read(name)
-        assert re.search(r"from repro\.core import .*pipeline|"
-                         r"from repro\.core\.pipeline import", src), name
-        assert re.search(r"pipeline\.worker_debiased|pipeline\.debias|"
-                         r"\bworker_rounds\(|simulate_multi_round\(", src), name
-    # the rounds core routes through the one pipeline implementation
-    rounds_src = _read("rounds.py")
-    assert "pipeline.worker_solves" in rounds_src
-    assert "pipeline.apply_correction" in rounds_src
-    # the sharded-CLIME gather logic lives only in the pipeline
-    for name in ("slda.py", "distributed.py", "multiclass.py", "rounds.py"):
-        assert "lax.all_gather(" not in _read(name), name
-    assert "lax.all_gather(" in _read("pipeline.py")
+    pipeline.worker_solves + pipeline.apply_correction) -- and the
+    sharded-CLIME gather logic lives only in the pipeline."""
+    violations = import_rules.pipeline_unification_violations()
+    assert violations == [], [v.render() for v in violations]
+    violations = import_rules.exclusive_call_violations()
+    assert violations == [], [v.render() for v in violations]
+    # the positive half of the gather rule: pipeline really does gather
+    pipeline_path = import_rules.SRC_ROOT / "repro" / "core" / "pipeline.py"
+    import ast
+
+    calls = [n for n in ast.walk(ast.parse(pipeline_path.read_text()))
+             if isinstance(n, ast.Call)
+             and isinstance(n.func, ast.Attribute)
+             and n.func.attr == "all_gather"]
+    assert calls, "pipeline.py lost its all_gather call site"
 
 
 def test_only_dispatch_layer_imports_dantzig_solver():
     """No module but core/solver_dispatch.py reaches around the dispatch
     layer to core.dantzig's solver entry points."""
-    offenders = []
-    for root, _, files in os.walk(os.path.join(REPO, "src")):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(root, fname)
-            rel = os.path.relpath(path, REPO)
-            if rel.endswith(os.path.join("core", "solver_dispatch.py")):
-                continue  # the dispatch layer itself
-            if rel.endswith(os.path.join("core", "dantzig.py")):
-                continue  # the implementation module
-            with open(path) as f:
-                src = f.read()
-            for m in re.finditer(
-                r"from repro\.core\.dantzig import ([^\n(]*(?:\([^)]*\))?)", src
-            ):
-                if "solve_dantzig" in m.group(1):
-                    offenders.append(rel)
-            if re.search(r"dantzig\.solve_dantzig(?:_scan)?\(", src) and \
-                    "solver_dispatch" not in rel:
-                offenders.append(rel)
-    assert not offenders, offenders
+    violations = import_rules.banned_import_violations()
+    assert violations == [], [v.render() for v in violations]

@@ -26,6 +26,7 @@ import numpy as np
 
 from conftest import run_in_subprocess
 
+from repro.analysis import check_entry, count_eqns
 from repro.core import pipeline, rounds as rounds_core
 from repro.core.dantzig import DantzigConfig
 from repro.core.distributed import (
@@ -40,24 +41,8 @@ from repro.stats import synthetic
 
 # ---------------------------------------------------------------------------
 # jaxpr pins: T pmeans of a (d, K) block, one eigh per worker
+# (counter and contracts both come from repro.analysis)
 # ---------------------------------------------------------------------------
-
-
-def _count_eqns(jaxpr, prim_name: str, out_shape=None) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == prim_name and (
-            out_shape is None
-            or any(getattr(v.aval, "shape", None) == out_shape
-                   for v in eqn.outvars)
-        ):
-            n += 1
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):
-                n += _count_eqns(v.jaxpr, prim_name, out_shape)
-            elif hasattr(v, "eqns"):
-                n += _count_eqns(v, prim_name, out_shape)
-    return n
 
 
 def test_rounds_trace_T_pmeans_and_one_eigh():
@@ -76,11 +61,16 @@ def test_rounds_trace_T_pmeans_and_one_eigh():
                 mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=t_rounds)
 
         jaxpr = jax.make_jaxpr(fn)(xs.reshape(-1, d), ys.reshape(-1, d))
-        assert _count_eqns(jaxpr.jaxpr, "psum", (d, 1)) == t_rounds
-        assert _count_eqns(jaxpr.jaxpr, "psum") == t_rounds
-        assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+        assert count_eqns(jaxpr, "psum", (d, 1)) == t_rounds
+        assert count_eqns(jaxpr, "psum") == t_rounds
+        assert count_eqns(jaxpr, "eigh") == 1
         # one intra-machine correction gather per round
-        assert _count_eqns(jaxpr.jaxpr, "all_gather") == t_rounds
+        assert count_eqns(jaxpr, "all_gather") == t_rounds
+        # and the face's full declared contract set holds on this trace
+        violations = check_entry(
+            "distributed.slda_shardmap", jaxpr,
+            {"rounds": t_rounds, "psum_payload": (d, 1), "pallas_calls": 0})
+        assert violations == [], violations
 
 
 def test_mc_rounds_trace_T_direction_pmeans_one_means_pmean():
@@ -101,9 +91,15 @@ def test_mc_rounds_trace_T_direction_pmeans_one_means_pmean():
 
         jaxpr = jax.make_jaxpr(fn)(
             xs.reshape(-1, d), labels.reshape(-1))
-        assert _count_eqns(jaxpr.jaxpr, "psum", (d, K)) == t_rounds
-        assert _count_eqns(jaxpr.jaxpr, "psum", (K, d)) == 1
-        assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+        assert count_eqns(jaxpr, "psum", (d, K)) == t_rounds
+        assert count_eqns(jaxpr, "psum", (K, d)) == 1
+        assert count_eqns(jaxpr, "eigh") == 1
+        violations = check_entry(
+            "distributed.mc_slda_shardmap", jaxpr,
+            {"rounds": t_rounds, "direction_payload": (d, K),
+             "means_payload": (K, d), "total_psums": t_rounds + 1,
+             "pallas_calls": 0})
+        assert violations == [], violations
 
 
 # ---------------------------------------------------------------------------

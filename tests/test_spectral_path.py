@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import check_entry, count_eqns
 from repro.core import path as rpath
 from repro.core import pipeline, slda
 from repro.core.clime import solve_clime, solve_clime_columns
@@ -29,20 +30,6 @@ from repro.core.pipeline import BinaryHead, MulticlassHead
 from repro.core.solver_dispatch import solve_dantzig
 from repro.kernels import ops as kops
 from repro.stats.synthetic import ar1_covariance
-
-
-def _count_eqns(jaxpr, prim_name: str) -> int:
-    """Count primitive occurrences, descending into nested jaxprs."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == prim_name:
-            n += 1
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):  # ClosedJaxpr
-                n += _count_eqns(v.jaxpr, prim_name)
-            elif hasattr(v, "eqns"):  # raw Jaxpr
-                n += _count_eqns(v, prim_name)
-    return n
 
 
 def _ar1(d, rho=0.6):
@@ -66,7 +53,7 @@ def test_worker_debiased_traces_exactly_one_eigh(fused):
             BinaryHead(), x, y, lam=0.1, lam_prime=0.1, cfg=cfg)
 
     jaxpr = jax.make_jaxpr(worker)(x, y)
-    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+    assert count_eqns(jaxpr, "eigh") == 1
 
 
 def test_multiclass_worker_traces_exactly_one_eigh():
@@ -79,7 +66,7 @@ def test_multiclass_worker_traces_exactly_one_eigh():
             MulticlassHead(3), x, labels, lam=0.1, lam_prime=0.1, cfg=cfg)
 
     jaxpr = jax.make_jaxpr(worker)(x, labels)
-    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+    assert count_eqns(jaxpr, "eigh") == 1
 
 
 @pytest.mark.parametrize("fused", [False, True])
@@ -95,7 +82,7 @@ def test_lambda_path_sweep_traces_exactly_one_eigh(fused):
             BinaryHead(), x, y, lams=lams, lam_prime=0.1, cfg=cfg)
 
     jaxpr = jax.make_jaxpr(sweep)(x, y)
-    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+    assert count_eqns(jaxpr, "eigh") == 1
 
 
 def test_solve_with_factor_traces_zero_eigh():
@@ -107,7 +94,7 @@ def test_solve_with_factor_traces_zero_eigh():
         cfg = DantzigConfig(max_iters=20, adapt_rho=False, fused=fused)
         jaxpr = jax.make_jaxpr(
             lambda f, b: solve_dantzig(f, b, 0.1, cfg))(factor, b)
-        assert _count_eqns(jaxpr.jaxpr, "eigh") == 0, f"fused={fused}"
+        assert count_eqns(jaxpr, "eigh") == 0, f"fused={fused}"
 
 
 def test_adaptive_worker_traces_one_eigh():
@@ -121,7 +108,7 @@ def test_adaptive_worker_traces_one_eigh():
             BinaryHead(), x, y, lam=0.1, lam_prime=0.1, cfg=cfg)
 
     jaxpr = jax.make_jaxpr(worker)(x, y)
-    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
+    assert count_eqns(jaxpr, "eigh") == 1
 
 
 def test_adaptive_sweep_traces_one_eigh_and_one_launch_per_solve():
@@ -139,8 +126,12 @@ def test_adaptive_sweep_traces_one_eigh_and_one_launch_per_solve():
             BinaryHead(), x, y, lams=lams, lam_prime=0.1, cfg=cfg)
 
     jaxpr = jax.make_jaxpr(sweep)(x, y)
-    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
-    assert _count_eqns(jaxpr.jaxpr, "pallas_call") == 2
+    assert count_eqns(jaxpr, "eigh") == 1
+    assert count_eqns(jaxpr, "pallas_call") == 2
+    # the registered contract set agrees (incl. dtype + VMEM conformance)
+    violations = check_entry("path.worker_debiased_path", jaxpr,
+                             {"pallas_calls": 2})
+    assert violations == [], violations
 
     # warm re-sweep: threading rho AND full state changes neither count
     res = sweep(x, y)
@@ -151,8 +142,8 @@ def test_adaptive_sweep_traces_one_eigh_and_one_launch_per_solve():
             rho_beta=rho, state_beta=state)
 
     jaxpr = jax.make_jaxpr(resweep)(x, y, res.rho_beta, res.state_beta)
-    assert _count_eqns(jaxpr.jaxpr, "eigh") == 1
-    assert _count_eqns(jaxpr.jaxpr, "pallas_call") == 2
+    assert count_eqns(jaxpr, "eigh") == 1
+    assert count_eqns(jaxpr, "pallas_call") == 2
 
 
 # ---------------------------------------------------------------------------

@@ -266,3 +266,45 @@ def test_zero1_specs_shard_moments_over_data():
     # at least the large 2D+ weights gained a "data" dim
     has_data = sum(1 for s in leaves if any(p == "data" or (isinstance(p, tuple) and "data" in p) for p in s if p))
     assert has_data > 0
+
+
+# ---------------------------------------------------------------------------
+# trace-contract lint: the full registry sweep is a system-level gate
+# ---------------------------------------------------------------------------
+
+from repro.analysis import count_eqns  # noqa: E402
+
+
+def test_lint_cli_full_registry_passes():
+    """`python -m repro.analysis.lint` sweeps every registered entry
+    point at representative shapes (incl. the d=70 / model-axis-4
+    remainder mesh) and must exit clean."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint"],
+        capture_output=True, text=True, timeout=420,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "all contracts hold" in proc.stdout
+    assert "fused-rounds3-mesh2x4-d70-remainder" in proc.stdout
+    assert "[skip]" not in proc.stdout  # every case must actually run
+
+
+def test_system_trace_pin_one_uplink_per_round():
+    """System-level jaxpr pin through the analysis counter: the (1, 1)
+    mesh face traces exactly one (d, 1) psum for the one-shot schedule."""
+    from repro.core.dantzig import DantzigConfig
+    from repro.core.distributed import distributed_slda_shardmap
+
+    d = 12
+    cfg = DantzigConfig(max_iters=30, adapt_rho=False)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = jax.random.normal(jax.random.PRNGKey(0), (30, d))
+    y = jax.random.normal(jax.random.PRNGKey(1), (30, d))
+    jaxpr = jax.make_jaxpr(
+        lambda x, y: distributed_slda_shardmap(
+            mesh, x, y, 0.2, 0.2, 0.05, cfg))(x, y)
+    assert count_eqns(jaxpr, "psum", (d, 1)) == 1
+    assert count_eqns(jaxpr, "eigh") == 1
