@@ -20,6 +20,14 @@ and exits nonzero when
   * multi-round refinement stops recovering: T=3 support-recovery F1
     at the largest machine count must stay within ``RECOVERY_GAP`` of
     the centralized baseline (``multi_round``'s ``recovery`` payload);
+  * the compressed uplink regresses (``compressed_rounds``'s
+    ``compression`` payload): the gated codec must fit its bit budget
+    and stay within the declared slacks of the dense rounds, and --
+    against the COMMITTED baseline at an unchanged operating point --
+    must move EXACTLY the committed bits (wire-format pin) with F1
+    within ``COMPRESSION_F1_DRIFT``.  Run-volatile payload fields
+    (``generated_unix``, ``host``) are stripped by :func:`comparable`
+    before any cross-run diff;
   * wall-clock regresses more than ``WALLCLOCK_TOL`` against the
     COMMITTED root ``BENCH_*.json`` baselines for the fused-solver and
     lambda-path suites, summed over the (d, k, L) shapes both runs
@@ -46,12 +54,16 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import REPO_DIR, bench_json_path
+from benchmarks.common import REPO_DIR, VOLATILE_KEYS, bench_json_path
 
 PARITY_BUDGET = 1e-5
 ADAPTIVE_PARITY_BUDGET = 1e-4  # early-exit solution vs fixed-500
 RECOVERY_GAP = 0.05  # T=3 F1 within 5% of the centralized baseline
 WALLCLOCK_TOL = 0.20  # fail when >20% slower than the committed baseline
+# compressed_rounds cross-PR drift: fresh F1 may trail the committed
+# baseline by at most this much (same synthetic seeds, so real drift
+# means the codec or the rounds changed behavior)
+COMPRESSION_F1_DRIFT = 0.01
 
 # name -> column holding the gated max-abs parity
 GATED = {
@@ -59,7 +71,21 @@ GATED = {
     "lambda_path": ("max_abs_diff", PARITY_BUDGET),
     "admm_convergence": ("max_abs_diff", ADAPTIVE_PARITY_BUDGET),
     "multi_round": (None, None),  # warm_vs_cold + recovery gates only
+    "compressed_rounds": (None, None),  # compression-payload gates only
 }
+
+
+def comparable(payload: dict) -> dict:
+    """A BENCH payload with run-volatile provenance stripped.
+
+    ``generated_unix`` and ``host`` change on every regeneration even
+    when the measured numbers are identical; any cross-run comparison
+    (baseline diffs here, ``benchmarks/trajectory.py``) must go through
+    this so provenance churn never reads as a regression.  Internal
+    ``_``-prefixed bookkeeping (``_baseline_ref``) is stripped too.
+    """
+    return {k: v for k, v in payload.items()
+            if k not in VOLATILE_KEYS and not k.startswith("_")}
 
 # name -> wall-clock column summed across rows and compared against the
 # committed baseline (the cross-PR perf trajectory, PR 4's root mirrors)
@@ -159,6 +185,74 @@ def _gate_wallclock(name: str, payload: dict, failures: list[str]) -> int:
     return 1
 
 
+def _gate_compression(payload: dict, failures: list[str]) -> int:
+    """The compressed-uplink gates (``benchmarks/compressed_rounds.py``).
+
+    Fresh-run gates mirror the benchmark's own asserts: the gated codec
+    must fit the bit budget and stay within the declared slacks of the
+    dense rounds' F1 and excess-l2 recovery.  The cross-PR gate then
+    compares against the COMMITTED baseline mirror (volatile fields
+    stripped via :func:`comparable`): at an unchanged operating point
+    the wire format must not silently grow -- bits compared EXACTLY,
+    the accounting is deterministic -- and F1 must not drift below the
+    committed number by more than ``COMPRESSION_F1_DRIFT``.
+    """
+    gate = payload["compression"]
+    cfg = gate.get("config", "?")
+    ratio = float(gate["bits_ratio"])
+    budget = float(gate["bits_budget"])
+    if ratio > budget:
+        failures.append(
+            f"compressed_rounds {cfg}: bits_ratio {ratio:.3f} over the "
+            f"{budget:.2f} budget")
+    f1_slack = float(gate.get("f1_slack", COMPRESSION_F1_DRIFT))
+    if float(gate["f1_comp"]) < float(gate["f1_dense"]) - f1_slack:
+        failures.append(
+            f"compressed_rounds {cfg}: F1 {gate['f1_comp']:.3f} trails "
+            f"dense rounds {gate['f1_dense']:.3f} by more than {f1_slack}")
+    rec_slack = float(gate.get("rec_slack", COMPRESSION_F1_DRIFT))
+    if float(gate["rec_comp"]) < float(gate["rec_dense"]) - rec_slack:
+        failures.append(
+            f"compressed_rounds {cfg}: recovery {gate['rec_comp']:.3f} "
+            f"trails dense rounds {gate['rec_dense']:.3f} by more than "
+            f"{rec_slack}")
+    else:
+        print(f"[ci_gate] compressed_rounds {cfg}: "
+              f"{gate['bits_per_round']}/{gate['dense_bits_per_round']} "
+              f"bits/round ({ratio:.0%}), F1 {gate['f1_comp']:.3f} vs "
+              f"dense {gate['f1_dense']:.3f}, recovery "
+              f"{gate['rec_comp']:.3f} vs {gate['rec_dense']:.3f} OK")
+
+    base = _committed_baseline("compressed_rounds")
+    if base is None or "compression" not in comparable(base):
+        print("[ci_gate] compressed_rounds: no committed baseline payload "
+              "-- cross-PR gate skipped")
+        return 1
+    bgate = comparable(base)["compression"]
+    point = ("config", "k_top", "quantize", "d", "m")
+    if any(gate.get(k) != bgate.get(k) for k in point):
+        print("[ci_gate] compressed_rounds: gated operating point changed "
+              "vs baseline -- cross-PR gate skipped")
+        return 1
+    ref = base.get("_baseline_ref", "HEAD")
+    for key in ("bits_per_round", "dense_bits_per_round"):
+        if int(gate[key]) != int(bgate[key]):
+            failures.append(
+                f"compressed_rounds {cfg}: {key} {gate[key]} != committed "
+                f"{bgate[key]} at {ref} -- the wire format changed under "
+                "an unchanged operating point")
+    drift = float(bgate["f1_comp"]) - float(gate["f1_comp"])
+    if drift > COMPRESSION_F1_DRIFT:
+        failures.append(
+            f"compressed_rounds {cfg}: F1 {gate['f1_comp']:.3f} drifted "
+            f"{drift:.3f} below the committed baseline "
+            f"{bgate['f1_comp']:.3f} at {ref}")
+    else:
+        print(f"[ci_gate] compressed_rounds {cfg}: bits exact and F1 "
+              f"within {COMPRESSION_F1_DRIFT} of baseline at {ref} OK")
+    return 1
+
+
 def main() -> int:
     failures = []
     checked = 0
@@ -220,6 +314,8 @@ def main() -> int:
                 print(f"[ci_gate] multi_round m={rec['m']}: T=3 F1 "
                       f"{rec['f1_t3']:.3f} within {gap:.3f} of centralized "
                       f"{rec['f1_cent']:.3f} OK")
+        if name == "compressed_rounds" and "compression" in payload:
+            checked += _gate_compression(payload, failures)
         if name in WALLCLOCK_GATED:
             checked += _gate_wallclock(name, payload, failures)
     if failures:

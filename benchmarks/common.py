@@ -12,6 +12,15 @@ from typing import Iterable, Sequence
 REPO_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_DIR = os.path.join(REPO_DIR, "experiments", "bench")
 
+# BENCH_*.json schema version: bump on any structural change to the
+# payload layout so the cross-PR trajectory tooling (ci_gate baselines,
+# benchmarks/trajectory.py) can refuse to diff incompatible shapes
+# instead of misreading them
+SCHEMA_VERSION = 1
+# run-volatile payload fields: present for provenance, excluded from
+# any cross-run comparison (see ci_gate.comparable)
+VOLATILE_KEYS = ("generated_unix", "host")
+
 
 def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]) -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -32,10 +41,14 @@ def write_bench_json(name: str, header: Sequence[str],
                      rows: Iterable[Sequence], **extra) -> str:
     """Machine-readable twin of :func:`write_csv`: BENCH_<name>.json.
 
-    Schema: ``{"name", "generated_unix", "backend", "host", "rows":
+    Schema (``schema_version`` = :data:`SCHEMA_VERSION`): ``{"name",
+    "schema_version", "generated_unix", "backend", "host", "rows":
     [{col: value, ...}, ...], **extra}``.  Rows mirror the CSV so the
     perf trajectory (timings + HBM model per shape) can be diffed
-    across PRs and gated in CI (see ``benchmarks/ci_gate.py``).
+    across PRs and gated in CI (see ``benchmarks/ci_gate.py``).  Keys
+    are SORTED so committed mirrors diff cleanly across regenerations
+    -- the only churn in a no-change rerun is the :data:`VOLATILE_KEYS`
+    provenance fields, which the comparison tooling strips.
 
     Every file is MIRRORED to the repo root (``BENCH_<name>.json``):
     the cross-PR perf-trajectory tooling reads the root-level files,
@@ -47,13 +60,15 @@ def write_bench_json(name: str, header: Sequence[str],
     os.makedirs(OUT_DIR, exist_ok=True)
     payload = {
         "name": name,
+        "schema_version": SCHEMA_VERSION,
         "generated_unix": time.time(),
         "backend": jax.default_backend(),
         "host": platform.node(),
         "rows": [dict(zip(header, r)) for r in rows],
     }
     payload.update(extra)
-    blob = json.dumps(payload, indent=2, default=float) + "\n"
+    blob = json.dumps(payload, indent=2, default=float,
+                      sort_keys=True) + "\n"
     path = bench_json_path(name)
     with open(path, "w") as f:
         f.write(blob)

@@ -1,0 +1,218 @@
+"""Accuracy vs bits moved: top-k error-feedback uplinks (DESIGN.md §10).
+
+The refinement rounds of ``benchmarks/multi_round.py`` recover the
+centralized rate past the one-shot m-barrier, but each round moves a
+dense (d, K) float32 block per machine.  This benchmark prices that
+recovery in BITS: the same per-machine solves (ONE set per repeat,
+via :func:`repro.core.rounds.simulate_round_loop`) drive the round
+schedule under every :class:`~repro.core.compression.Compression`
+config, so the accuracy-vs-bits curves differ only in the uplink.
+
+Per config and round count T it reports tuned support-recovery F1 and
+l2 error next to the per-round and total uplink bits of
+:func:`repro.core.compression.uplink_bits` -- the SAME numbers the
+``AxisPayloadBits`` trace contract pins on the mesh path's jaxpr, so
+a row's bits column is an asserted property of the lowered program.
+
+Gates (also enforced by ``benchmarks/ci_gate.py``):
+
+  * the gated config (top-20% + int8 delta quantization + int16
+    indices) moves <= 25% of the dense per-round bits -- by exact
+    accounting, not estimate;
+  * at the largest-m operating point and T=3 rounds it stays within
+    1% of the DENSE rounds' F1 and of their excess-l2 recovery
+    ``(l2_t1_dense - l2_t3) / (l2_t1_dense - l2_cent)`` -- the error
+    feedback is what makes this hold: dropped coordinates are delayed
+    into later rounds, never lost, so the refinement fixed point is
+    unchanged;
+  * the identity codec (k_top = d, no quantization) reproduces the
+    dense trajectory BIT-EXACTLY (set-semantics decode), asserted on
+    every repeat.
+
+Quick mode (default, CI-sized): the multi_round quick operating point
+at its largest machine count -- d=100, N=6000, m=60, 2 repeats, the
+same draws (same seed fold) as the m-barrier benchmark.  ``--paper``
+scales to d=200, N=10000, m=80, rho=0.8, 6 repeats.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    print_table,
+    tuned_metrics,
+    write_bench_json,
+    write_csv,
+)
+from repro.core import compression as compression_core
+from repro.core import rounds as rounds_core
+from repro.core.compression import Compression
+from repro.core.dantzig import DantzigConfig
+from repro.core.pipeline import BinaryHead
+from repro.core.slda import centralized_slda
+from repro.stats import synthetic
+
+T_GRID = np.geomspace(0.005, 2.0, 25)
+ROUNDS = 4  # trajectory length; the gate reads T = T_GATE
+T_GATE = 3
+# the headline budget: the gated config must move at most this fraction
+# of the dense per-round uplink bits ...
+BITS_BUDGET = 0.25
+# ... while staying within 1% of the dense rounds' F1 and recovery
+F1_SLACK = 0.01
+REC_SLACK = 0.01
+GATED_CONFIG = "top20pct-int8"
+
+
+def configs(d: int) -> list[tuple[str, Compression | None]]:
+    """The swept codecs, k_top scaled as a fraction of d.
+
+    ``dense`` is the uncompressed baseline; ``top20pct-int8`` is the
+    gated operating point (16% of dense bits at d=100); ``top33pct-f32``
+    is the high-fidelity reference (over budget, recorded ungated) that
+    separates selection error from quantization error.
+    """
+    return [
+        ("dense", None),
+        (GATED_CONFIG, Compression(max(1, d // 5), "int8")),
+        ("top20pct-bf16", Compression(max(1, d // 5), "bf16")),
+        ("top12pct-f32", Compression(max(1, (12 * d) // 100))),
+        ("top33pct-f32", Compression(max(1, d // 3))),
+    ]
+
+
+def accuracy_vs_bits(paper: bool, seed: int = 0):
+    if paper:
+        d, n_total, m, repeats = 200, 10_000, 80, 6
+        rho, iters = 0.8, 600
+    else:
+        # the multi_round quick operating point at its largest m: the
+        # regime where refinement rounds matter most is where their
+        # communication bill is highest
+        d, n_total, m, repeats = 100, 6_000, 60, 2
+        rho, iters = 0.6, 400
+    cfg = DantzigConfig(max_iters=iters)
+    problem = synthetic.make_problem(d=d, n_signal=10, rho=rho)
+    b1 = float(jnp.sum(jnp.abs(problem.beta_star)))
+    n = n_total // m
+    n1 = n2 = n // 2
+    lam = 0.30 * math.sqrt(math.log(d) / n) * b1
+    lam_c = 0.30 * math.sqrt(math.log(d) / n_total) * b1
+    swept = configs(d)
+    dense_bits = compression_core.dense_uplink_bits(d, 1)
+
+    acc: dict[tuple, list] = {}
+    for rep in range(repeats):
+        # the SAME draws as multi_round's error_vs_m at this m
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), m * 1000 + rep)
+        xs, ys = synthetic.sample_machines(key, problem, m, n1, n2)
+        cent = centralized_slda(xs.reshape(-1, d), ys.reshape(-1, d),
+                                lam_c, cfg)
+        acc.setdefault("l2_cent", []).append(
+            tuned_metrics(cent, problem.beta_star, T_GRID)["l2"])
+        # ONE set of per-machine solves serves every codec and every T
+        _, ws = rounds_core.simulate_multi_round(
+            BinaryHead(), (xs, ys), lam=lam, lam_prime=lam,
+            rounds=1, cfg=cfg)
+        dense_traj = None
+        for name, comp in swept:
+            bars = rounds_core.simulate_round_loop(
+                ws, rounds=ROUNDS, compression=comp, return_all_rounds=True)
+            if name == "dense":
+                dense_traj = np.asarray(bars)
+            for t_rounds in range(1, ROUNDS + 1):
+                mt = tuned_metrics(bars[t_rounds - 1][:, 0],
+                                   problem.beta_star, T_GRID)
+                acc.setdefault((name, t_rounds, "f1"), []).append(mt["f1"])
+                acc.setdefault((name, t_rounds, "l2"), []).append(mt["l2"])
+        # identity-codec premise: k_top = d, unquantized reproduces the
+        # dense trajectory bit for bit (the EF stream is exactly zero)
+        ident = rounds_core.simulate_round_loop(
+            ws, rounds=ROUNDS, compression=Compression(d),
+            return_all_rounds=True)
+        np.testing.assert_array_equal(np.asarray(ident), dense_traj)
+
+    def mean(k):
+        return sum(acc[k]) / len(acc[k])
+
+    header = ["config", "quantize", "k_top", "bits_round", "bits_ratio",
+              "T", "F1", "l2"]
+    rows = []
+    for name, comp in swept:
+        if comp is None:
+            quant, k_top, bits = "f32", d, dense_bits
+        else:
+            quant = comp.quantize or "f32"
+            k_top = comp.k_top
+            bits = compression_core.uplink_bits(comp, d, 1)
+        for t_rounds in range(1, ROUNDS + 1):
+            rows.append([name, quant, k_top, bits, bits / dense_bits,
+                         t_rounds, mean((name, t_rounds, "f1")),
+                         mean((name, t_rounds, "l2"))])
+
+    # the headline gate: dense-level recovery at <= 25% of the bits.
+    # recovery normalizes by the SAME denominators for every codec (the
+    # dense T=1 start and the centralized floor), so it compares what
+    # the rounds themselves achieve under each uplink.
+    l2_cent = mean("l2_cent")
+    l2_t1_dense = mean(("dense", 1, "l2"))
+
+    def recovery(name):
+        l2_t = mean((name, T_GATE, "l2"))
+        return (l2_t1_dense - l2_t) / max(l2_t1_dense - l2_cent, 1e-12)
+
+    gated = dict(swept)[GATED_CONFIG]
+    gate = {
+        "m": m, "d": d, "t_rounds": T_GATE, "config": GATED_CONFIG,
+        "k_top": gated.k_top, "quantize": gated.quantize,
+        "bits_per_round": compression_core.uplink_bits(gated, d, 1),
+        "dense_bits_per_round": dense_bits,
+        "bits_ratio": compression_core.compression_ratio(gated, d, 1),
+        "bits_budget": BITS_BUDGET,
+        "f1_dense": mean(("dense", T_GATE, "f1")),
+        "f1_comp": mean((GATED_CONFIG, T_GATE, "f1")),
+        "f1_slack": F1_SLACK,
+        "rec_dense": recovery("dense"),
+        "rec_comp": recovery(GATED_CONFIG),
+        "rec_slack": REC_SLACK,
+        "l2_cent": l2_cent, "l2_t1_dense": l2_t1_dense,
+        "l2_t3_dense": mean(("dense", T_GATE, "l2")),
+        "l2_t3_comp": mean((GATED_CONFIG, T_GATE, "l2")),
+    }
+    return header, rows, gate
+
+
+def main(paper: bool = False) -> None:
+    header, rows, gate = accuracy_vs_bits(paper)
+    print_table("compressed refinement uplinks: accuracy vs bits moved "
+                "(one solve set per repeat)", header, rows)
+
+    write_csv("compressed_rounds.csv", header, rows)
+    jpath = write_bench_json("compressed_rounds", header, rows,
+                             compression=gate)
+    print(f"[compressed_rounds] wrote {jpath}")
+    print(f"[compressed_rounds] gate at m={gate['m']}, T={gate['t_rounds']}: "
+          f"{gate['config']} moves {gate['bits_per_round']} of "
+          f"{gate['dense_bits_per_round']} bits/round "
+          f"({gate['bits_ratio']:.0%}); "
+          f"F1 {gate['f1_comp']:.3f} vs dense {gate['f1_dense']:.3f}; "
+          f"recovery {gate['rec_comp']:.3f} vs dense {gate['rec_dense']:.3f}")
+
+    assert gate["bits_ratio"] <= gate["bits_budget"], (
+        "gated config over the bit budget", gate)
+    assert gate["f1_comp"] >= gate["f1_dense"] - gate["f1_slack"], (
+        "compressed rounds lost more than 1% F1 vs dense rounds", gate)
+    assert gate["rec_comp"] >= gate["rec_dense"] - gate["rec_slack"], (
+        "compressed rounds recover more than 1% less excess l2 than "
+        "dense rounds", gate)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(paper="--paper" in sys.argv)

@@ -15,6 +15,7 @@ import traceback
 
 from benchmarks import (
     admm_convergence,
+    compressed_rounds,
     corollary48_threshold,
     fig1_machines,
     fig2_fixed_n,
@@ -42,6 +43,8 @@ BENCHES = [
      admm_convergence.main),
     ("multi_round (refinement rounds past the one-shot m-barrier)",
      multi_round.main),
+    ("compressed_rounds (top-k EF uplinks: accuracy vs bits moved)",
+     compressed_rounds.main),
     ("roofline (dry-run aggregation)", roofline.main),
 ]
 

@@ -1,0 +1,85 @@
+"""Consolidate the root BENCH_*.json mirrors into one trajectory artifact.
+
+Every benchmark mirrors its machine-readable output to the repo root
+(``BENCH_<name>.json``, see :func:`benchmarks.common.write_bench_json`);
+the committed mirrors are the cross-PR perf/accuracy trajectory that
+``benchmarks/ci_gate.py`` gates against.  This module rolls the
+CURRENT set of mirrors into ONE ``TRAJECTORY.json`` under
+``experiments/bench/`` so CI can upload a single artifact per run --
+one file to download and diff across workflow runs instead of a
+scatter of per-benchmark blobs.
+
+Run-volatile provenance (``generated_unix``, ``host``) is stripped via
+:func:`benchmarks.ci_gate.comparable`, so two trajectory files from
+runs of the same code are textually identical -- any diff is a real
+change in measured numbers or schema.  Payloads written before
+``schema_version`` existed are recorded at version 0.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.trajectory``
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.ci_gate import comparable
+from benchmarks.common import OUT_DIR, REPO_DIR, SCHEMA_VERSION
+
+TRAJECTORY_PATH = os.path.join(OUT_DIR, "TRAJECTORY.json")
+
+
+def collect() -> tuple[dict, list[str]]:
+    """Read every root BENCH_*.json mirror; returns (trajectory, skipped).
+
+    Unparseable mirrors are skipped with a notice rather than failing
+    the run -- a corrupt artifact should surface as a missing entry in
+    the uploaded trajectory, not mask the good ones.
+    """
+    benchmarks = {}
+    skipped = []
+    for path in sorted(glob.glob(os.path.join(REPO_DIR, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            skipped.append(os.path.basename(path))
+            continue
+        name = payload.get("name") or os.path.basename(path)[len("BENCH_"):-len(".json")]
+        payload.setdefault("schema_version", 0)
+        benchmarks[name] = comparable(payload)
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "benchmarks": benchmarks,
+    }, skipped
+
+
+def main() -> int:
+    trajectory, skipped = collect()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(TRAJECTORY_PATH, "w") as f:
+        f.write(json.dumps(trajectory, indent=2, sort_keys=True,
+                           default=float) + "\n")
+    for name in skipped:
+        print(f"[trajectory] skipped unreadable mirror {name}",
+              file=sys.stderr)
+    for name, payload in sorted(trajectory["benchmarks"].items()):
+        extras = sorted(k for k in payload
+                        if k not in ("name", "schema_version", "backend",
+                                     "rows"))
+        print(f"[trajectory] {name}: {len(payload.get('rows', []))} rows, "
+              f"schema v{payload['schema_version']}"
+              + (f", extras: {', '.join(extras)}" if extras else ""))
+    print(f"[trajectory] wrote {TRAJECTORY_PATH} "
+          f"({len(trajectory['benchmarks'])} benchmarks)")
+    if not trajectory["benchmarks"]:
+        print("[trajectory] no root BENCH_*.json mirrors found",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

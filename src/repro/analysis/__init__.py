@@ -21,6 +21,7 @@ This package turns those invariants into machine-checked *contracts*:
 """
 
 from repro.analysis.contracts import (  # noqa: F401
+    AxisPayloadBits,
     CollectiveContract,
     DtypePolicy,
     Param,
@@ -44,6 +45,7 @@ from repro.analysis.walker import (  # noqa: F401
 )
 
 __all__ = [
+    "AxisPayloadBits",
     "CollectiveContract",
     "DtypePolicy",
     "EqnSite",

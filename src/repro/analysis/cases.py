@@ -19,8 +19,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compression as compression_core
 from repro.core import path as rpath
 from repro.core import pipeline, rounds
+from repro.core.compression import Compression
 from repro.core.dantzig import DantzigConfig
 from repro.core.distributed import (
     _shard_map,
@@ -114,28 +116,62 @@ def _worker_debiased_mc():
 # rounds.worker_rounds (inside a minimal shard_map shell)
 # ---------------------------------------------------------------------------
 
-@case("rounds.worker_rounds", "rounds3-mesh1x1-d12",
-      {"rounds": 3, "psum_payload": (12, 1), "pallas_calls": 0})
-def _worker_rounds_mesh():
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-    x, y = _normal(4, (30, 12)), _normal(5, (30, 12))
+def _round_params(t_rounds, d, num_cols, comp=None, extra_bits=0):
+    """Params shared by every rounds-bearing entry: collective counts and
+    the exact per-link data-axis bit budget for T rounds, dense or
+    compressed (``extra_bits`` covers one-off payloads like the mc
+    class-means pmean)."""
+    if comp is None:
+        per_round = compression_core.dense_uplink_bits(d, num_cols)
+        gathers_per_round = 0
+        dense_psums = t_rounds
+    else:
+        per_round = compression_core.uplink_bits(comp, d, num_cols)
+        gathers_per_round = 3 if comp.quantize == "int8" else 2
+        dense_psums = 0
+    return {
+        "rounds": t_rounds,
+        "dense_psums": dense_psums,
+        "data_gathers": t_rounds * gathers_per_round,
+        "data_uplink_bits": t_rounds * per_round + extra_bits,
+    }
 
-    def shard_fn(xs, ys):
-        beta, _ = rounds.worker_rounds(
-            pipeline.BinaryHead(), xs, ys, lam=0.2, lam_prime=0.2,
-            rounds=3, cfg=SCAN, model_axis="model", model_axis_size=1)
-        return beta
 
-    spec = P("data", None)
-    fn = _shard_map(shard_fn, mesh, (spec, spec), P())
-    return fn, (x, y)
+def _worker_rounds_case(cfg, t_rounds, comp=None):
+    def build():
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        x, y = _normal(4, (30, 12)), _normal(5, (30, 12))
+
+        def shard_fn(xs, ys):
+            beta, _ = rounds.worker_rounds(
+                pipeline.BinaryHead(), xs, ys, lam=0.2, lam_prime=0.2,
+                rounds=t_rounds, cfg=cfg, model_axis="model",
+                model_axis_size=1, compression=comp)
+            return beta
+
+        spec = P("data", None)
+        fn = _shard_map(shard_fn, mesh, (spec, spec), P())
+        return fn, (x, y)
+    return build
+
+
+case("rounds.worker_rounds", "rounds3-mesh1x1-d12",
+     {**_round_params(3, 12, 1), "psum_payload": (12, 1),
+      "pallas_calls": 0})(_worker_rounds_case(SCAN, 3))
+case("rounds.worker_rounds", "rounds3-mesh1x1-d12-top5",
+     {**_round_params(3, 12, 1, Compression(5)), "psum_payload": (12, 1),
+      "pallas_calls": 0})(_worker_rounds_case(SCAN, 3, Compression(5)))
+case("rounds.worker_rounds", "rounds2-mesh1x1-d12-top4-int8",
+     {**_round_params(2, 12, 1, Compression(4, "int8")),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _worker_rounds_case(SCAN, 2, Compression(4, "int8")))
 
 
 # ---------------------------------------------------------------------------
 # distributed faces
 # ---------------------------------------------------------------------------
 
-def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30):
+def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30, comp=None):
     def build():
         mesh = jax.make_mesh(mesh_shape, ("data", "model"))
         n = n_per * mesh_shape[0]
@@ -143,26 +179,47 @@ def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30):
 
         def fn(x, y):
             return distributed_slda_shardmap(
-                mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=t_rounds)
+                mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=t_rounds,
+                compression=comp)
         return fn, (x, y)
     return build
 
 
 for _t in (1, 3):
     case("distributed.slda_shardmap", f"scan-rounds{_t}-mesh1x1-d12",
-         {"rounds": _t, "psum_payload": (12, 1), "pallas_calls": 0})(
+         {**_round_params(_t, 12, 1), "psum_payload": (12, 1),
+          "pallas_calls": 0})(
         _slda_face_case(SCAN, _t, 12, (1, 1)))
 case("distributed.slda_shardmap", "fused-rounds2-mesh1x1-d12",
-     {"rounds": 2, "psum_payload": (12, 1), "pallas_calls": 2})(
+     {**_round_params(2, 12, 1), "psum_payload": (12, 1),
+      "pallas_calls": 2})(
     _slda_face_case(FUSED, 2, 12, (1, 1)))
 # the PR-1 regression shape: d % model_axis != 0 (70 over 4 -> pad 72)
 case("distributed.slda_shardmap", "fused-rounds3-mesh2x4-d70-remainder",
-     {"rounds": 3, "psum_payload": (70, 1), "pallas_calls": 2},
+     {**_round_params(3, 70, 1), "psum_payload": (70, 1),
+      "pallas_calls": 2},
      min_devices=8)(
     _slda_face_case(FUSED, 3, 70, (2, 4)))
+# compressed uplinks: the jaxpr moves the (k_top, 1) payload, no dense
+# psum, and exactly the declared bits -- one f32 and one int8 config,
+# plus the 8-device remainder shape under compression
+case("distributed.slda_shardmap", "scan-rounds3-mesh1x1-d12-top5",
+     {**_round_params(3, 12, 1, Compression(5)), "psum_payload": (12, 1),
+      "pallas_calls": 0})(
+    _slda_face_case(SCAN, 3, 12, (1, 1), comp=Compression(5)))
+case("distributed.slda_shardmap", "scan-rounds2-mesh1x1-d12-top4-int8",
+     {**_round_params(2, 12, 1, Compression(4, "int8")),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _slda_face_case(SCAN, 2, 12, (1, 1), comp=Compression(4, "int8")))
+case("distributed.slda_shardmap",
+     "fused-rounds3-mesh2x4-d70-remainder-top16-bf16",
+     {**_round_params(3, 70, 1, Compression(16, "bf16")),
+      "psum_payload": (70, 1), "pallas_calls": 2},
+     min_devices=8)(
+    _slda_face_case(FUSED, 3, 70, (2, 4), comp=Compression(16, "bf16")))
 
 
-def _mc_face_case(cfg, t_rounds, d=10, num_classes=3):
+def _mc_face_case(cfg, t_rounds, d=10, num_classes=3, comp=None):
     def build():
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         x = _normal(8, (60, d))
@@ -172,17 +229,28 @@ def _mc_face_case(cfg, t_rounds, d=10, num_classes=3):
         def fn(x, labels):
             return distributed_mc_slda_shardmap(
                 mesh, x, labels, num_classes, 0.2, 0.2, 0.05, cfg,
-                rounds=t_rounds)
+                rounds=t_rounds, compression=comp)
         return fn, (x, labels)
     return build
 
 
+def _mc_params(t_rounds, d=10, num_classes=3, comp=None):
+    # the (K, d) class means ride one dense f32 pmean regardless of the
+    # direction compression
+    means_bits = num_classes * d * 32
+    p = _round_params(t_rounds, d, num_classes, comp,
+                      extra_bits=means_bits)
+    return {**p, "total_psums": p["dense_psums"] + 1,
+            "direction_payload": (d, num_classes),
+            "means_payload": (num_classes, d), "pallas_calls": 0}
+
+
 for _t in (1, 3):
     case("distributed.mc_slda_shardmap", f"scan-rounds{_t}-mesh1x1-d10-K3",
-         {"rounds": _t, "direction_payload": (10, 3),
-          "means_payload": (3, 10), "total_psums": _t + 1,
-          "pallas_calls": 0})(
-        _mc_face_case(SCAN, _t))
+         _mc_params(_t))(_mc_face_case(SCAN, _t))
+case("distributed.mc_slda_shardmap", "scan-rounds2-mesh1x1-d10-K3-top3",
+     _mc_params(2, comp=Compression(3)))(
+    _mc_face_case(SCAN, 2, comp=Compression(3)))
 
 
 # ---------------------------------------------------------------------------

@@ -147,25 +147,23 @@ class CollectiveContract(NamedTuple):
     def check(self, jaxpr, params=None) -> list:
         shape = resolve(self.shape, params)
         sites = walker.find_eqns(jaxpr, self.prim, shape)
+        if self.axis is not None:
+            # count only the axis's own collectives: a trace may hold
+            # BOTH data-axis and model-axis gathers under separate
+            # contracts (the compressed rounds path does)
+            sites = [s for s in sites if self.axis in _eqn_axes(s.eqn)]
         count = resolve(self.count, params)
         violations = []
         if len(sites) != count:
             payload = f" with payload {tuple(shape)}" if shape is not None else ""
+            axis = f" on axis '{self.axis}'" if self.axis is not None else ""
             violations.append(Violation(
                 self.describe(),
-                f"found {len(sites)} `{self.prim}` eqns{payload}, "
+                f"found {len(sites)} `{self.prim}` eqns{payload}{axis}, "
                 f"expected exactly {count}",
                 _fmt(sites),
             ))
         for site in sites:
-            axes = _eqn_axes(site.eqn)
-            if self.axis is not None and self.axis not in axes:
-                violations.append(Violation(
-                    self.describe(),
-                    f"`{self.prim}` runs over axes {axes}, "
-                    f"contract requires '{self.axis}'",
-                    _fmt([site]),
-                ))
             if self.dtype is not None:
                 want = np.dtype(self.dtype)
                 bad = [v for v in site.eqn.outvars
@@ -178,6 +176,76 @@ class CollectiveContract(NamedTuple):
                         f"contract requires {want}",
                         _fmt([site]),
                     ))
+        return violations
+
+
+class AxisPayloadBits(NamedTuple):
+    """Pin the total per-link bits all collectives move over one mesh axis.
+
+    Sums, over every collective eqn (``prims``) whose named axes include
+    ``axis``, the bits of its INPUT operands -- what one device puts on
+    the wire: an ``all_gather``'s invar is the per-device shard, a
+    ``psum``'s operand is the block each device contributes (``pmean``
+    lowers to psum + div, so it is counted at the psum).  ``exact_bits``
+    makes the declared uplink budget an asserted property of the lowered
+    program: a hidden dense block riding the axis -- whatever primitive
+    carries it -- blows the budget and names the eqn.
+    """
+
+    axis: str
+    exact_bits: Optional[IntOrParam] = None
+    max_bits: Optional[IntOrParam] = None
+    prims: Tuple[str, ...] = ("psum", "all_gather", "all_to_all",
+                              "ppermute")
+
+    def describe(self) -> str:
+        parts = []
+        if self.exact_bits is not None:
+            parts.append(f"=={self.exact_bits}")
+        if self.max_bits is not None:
+            parts.append(f"<={self.max_bits}")
+        return (f"payload_bits[axis={self.axis} "
+                f"{' '.join(parts) or 'any'}]")
+
+    @staticmethod
+    def _eqn_bits(eqn) -> int:
+        bits = 0
+        for v in eqn.invars:
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", None)
+            dtype = getattr(aval, "dtype", None)
+            if shape is None or dtype is None:
+                continue
+            bits += int(np.prod(shape, dtype=np.int64)) * (
+                np.dtype(dtype).itemsize * 8)
+        return bits
+
+    def check(self, jaxpr, params=None) -> list:
+        sites = []
+        total = 0
+        for site in walker.iter_eqns(jaxpr):
+            if site.eqn.primitive.name not in self.prims:
+                continue
+            if self.axis not in _eqn_axes(site.eqn):
+                continue
+            sites.append(site)
+            total += self._eqn_bits(site.eqn)
+        violations = []
+
+        def fail(expected: str):
+            violations.append(Violation(
+                self.describe(),
+                f"collectives over axis '{self.axis}' move {total} bits "
+                f"per link, expected {expected}",
+                _fmt(sites),
+            ))
+
+        exact = resolve(self.exact_bits, params)
+        if exact is not None and total != exact:
+            fail(f"exactly {exact}")
+        max_bits = resolve(self.max_bits, params)
+        if max_bits is not None and total > max_bits:
+            fail(f"at most {max_bits}")
         return violations
 
 
@@ -297,7 +365,7 @@ class DtypePolicy(NamedTuple):
 
 
 ContractType = Union[PrimitiveBudget, CollectiveContract,
-                     VmemConformance, DtypePolicy]
+                     AxisPayloadBits, VmemConformance, DtypePolicy]
 
 
 def run_contracts(contracts, jaxpr, params: Optional[dict] = None) -> list:
@@ -324,6 +392,7 @@ def render_report(violations, indent: str = "  ") -> str:
 
 
 __all__ = [
+    "AxisPayloadBits",
     "CollectiveContract",
     "ContractType",
     "DtypePolicy",

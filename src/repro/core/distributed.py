@@ -47,6 +47,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis import (
+    AxisPayloadBits,
     CollectiveContract,
     DtypePolicy,
     Param,
@@ -55,6 +56,7 @@ from repro.analysis import (
     trace_contract,
 )
 from repro.core import rounds as rounds_core, slda
+from repro.core.compression import Compression
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import BinaryHead, MulticlassHead
 
@@ -74,13 +76,17 @@ def _shard_map(f, mesh, in_specs, out_specs):
     "distributed.slda_shardmap",
     contracts=(
         PrimitiveBudget("eigh", exact=1),
-        # Algorithm 1's uplink: T psums of the (d, 1) direction, nothing
-        # else crosses the data axis
-        CollectiveContract("psum", count=Param("rounds"), axis="data",
+        # Algorithm 1's dense uplink: one (d, 1) psum per dense round --
+        # nothing else crosses the data axis (0 psums when compressed)
+        CollectiveContract("psum", count=Param("dense_psums"), axis="data",
                            shape=Param("psum_payload"), dtype="float32"),
-        PrimitiveBudget("psum", exact=Param("rounds")),
+        PrimitiveBudget("psum", exact=Param("dense_psums")),
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
+        # compressed uplink: the payload gathers, and their exact bits
+        CollectiveContract("all_gather", count=Param("data_gathers"),
+                           axis="data"),
+        AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
         VmemConformance(),
@@ -97,6 +103,7 @@ def distributed_slda_shardmap(
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = "model",
     rounds: int = 1,
+    compression: Compression | None = None,
 ) -> jnp.ndarray:
     """Distributed sparse LDA over a mesh (one-shot, or T-round refined).
 
@@ -108,6 +115,11 @@ def distributed_slda_shardmap(
         around the aggregate (DESIGN.md §8) -- each an O(d) ``pmean``
         reusing the round-one solves, no extra eigendecompositions --
         recovering the centralized rate past the one-shot m-barrier.
+      compression: None (default) moves each round's dense (d, 1)
+        float32 block; a :class:`~repro.core.compression.Compression`
+        moves the top-k error-feedback payload instead (DESIGN.md §10)
+        -- ``uplink_bits`` instead of ``dense_uplink_bits`` per link
+        per round, with the fixed point preserved.
     Returns:
       beta_bar: (d,) aggregated sparse discriminant vector (replicated).
     """
@@ -121,6 +133,7 @@ def distributed_slda_shardmap(
             BinaryHead(), xs, ys, lam=lam, lam_prime=lam_prime,
             rounds=rounds, cfg=cfg, data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
+            compression=compression,
         )
         return slda.hard_threshold(beta_bar[:, 0], t)
 
@@ -132,8 +145,9 @@ def distributed_slda_shardmap(
     "distributed.mc_slda_shardmap",
     contracts=(
         PrimitiveBudget("eigh", exact=1),
-        # T psums of the (d, K) direction block over the data axis ...
-        CollectiveContract("psum", count=Param("rounds"), axis="data",
+        # one (d, K) direction psum per DENSE round over the data axis
+        # (0 when compressed) ...
+        CollectiveContract("psum", count=Param("dense_psums"), axis="data",
                            shape=Param("direction_payload"),
                            dtype="float32"),
         # ... plus exactly one (K, d) class-means psum, and nothing else
@@ -142,6 +156,11 @@ def distributed_slda_shardmap(
         PrimitiveBudget("psum", exact=Param("total_psums")),
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
+        # compressed uplink: the payload gathers, and the exact bits
+        # everything (gathers + means psum) moves over the data axis
+        CollectiveContract("all_gather", count=Param("data_gathers"),
+                           axis="data"),
+        AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
         VmemConformance(),
@@ -159,6 +178,7 @@ def distributed_mc_slda_shardmap(
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = "model",
     rounds: int = 1,
+    compression: Compression | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Distributed K-class sparse LDA over a mesh (one-shot or T-round).
 
@@ -169,6 +189,8 @@ def distributed_mc_slda_shardmap(
     The (K, d) class means ride one extra ``pmean`` once (they are
     round-independent), and ``rounds`` > 1 refines the direction block
     around the aggregate exactly as in the binary driver (DESIGN.md §8).
+    ``compression`` compresses the per-round direction uplink exactly as
+    in the binary driver (the one-time means pmean stays dense).
 
     Args:
       x: (N, d) samples, shardable over the data axes.
@@ -185,6 +207,7 @@ def distributed_mc_slda_shardmap(
             lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg,
             data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
+            compression=compression,
         )
         means = ws.stats.aux.means
         for ax in data_axes:
@@ -228,7 +251,8 @@ def naive_averaged_slda_shardmap(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "rounds"))
+@functools.partial(jax.jit, static_argnames=("cfg", "rounds",
+                                             "compression"))
 def simulated_debiased_mean(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -236,6 +260,7 @@ def simulated_debiased_mean(
     lam_prime: float,
     cfg: DantzigConfig = DantzigConfig(),
     rounds: int = 1,
+    compression: Compression | None = None,
 ) -> jnp.ndarray:
     """Mean of debiased locals WITHOUT the hard threshold.
 
@@ -243,14 +268,16 @@ def simulated_debiased_mean(
     reports grid-tuned best results); exposing the raw mean makes that
     tuning free (HT is O(d)).  ``rounds`` > 1 applies the extra
     refinement rounds around the aggregate (DESIGN.md §8), sharing the
-    per-machine solves across all rounds."""
+    per-machine solves across all rounds; ``compression`` runs them
+    over the top-k error-feedback uplink (DESIGN.md §10)."""
     beta_bar, _ = rounds_core.simulate_multi_round(
         BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
-        rounds=rounds, cfg=cfg)
+        rounds=rounds, cfg=cfg, compression=compression)
     return beta_bar[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "rounds"))
+@functools.partial(jax.jit, static_argnames=("cfg", "rounds",
+                                             "compression"))
 def simulated_distributed_slda(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -259,10 +286,12 @@ def simulated_distributed_slda(
     t: float,
     cfg: DantzigConfig = DantzigConfig(),
     rounds: int = 1,
+    compression: Compression | None = None,
 ) -> jnp.ndarray:
     """xs: (m, n1, d), ys: (m, n2, d) -> aggregated beta_bar (d,)."""
     return slda.hard_threshold(
-        simulated_debiased_mean(xs, ys, lam, lam_prime, cfg, rounds), t)
+        simulated_debiased_mean(xs, ys, lam, lam_prime, cfg, rounds,
+                                compression), t)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

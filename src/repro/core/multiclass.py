@@ -104,15 +104,19 @@ def mc_multi_round_slda(
     t: float,
     rounds: int = 3,
     cfg: DantzigConfig = DantzigConfig(),
+    compression: "_rounds.Compression | None" = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """T-round refined K-class estimator on stacked machine draws.
 
     The large-m face (DESIGN.md §8): xs (m, n, d) / labels (m, n) ->
     (beta_bar (d, K), means (K, d)) after ``rounds`` O(dK)
     communication rounds sharing one set of per-machine solves.
+    ``compression`` swaps each round's dense direction uplink for the
+    top-k error-feedback payload (DESIGN.md §10).
     """
     return simulated_distributed_mc_slda(
-        xs, labels, num_classes, lam, lam_prime, t, cfg, rounds)
+        xs, labels, num_classes, lam, lam_prime, t, cfg, rounds,
+        compression)
 
 
 def mc_debiased_local_path(
@@ -146,7 +150,8 @@ def mc_debiased_local_path(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes", "cfg", "rounds"))
+@functools.partial(jax.jit, static_argnames=("num_classes", "cfg", "rounds",
+                                             "compression"))
 def simulated_distributed_mc_slda(
     xs: jnp.ndarray,
     labels: jnp.ndarray,
@@ -156,18 +161,22 @@ def simulated_distributed_mc_slda(
     t: float,
     cfg: DantzigConfig = DantzigConfig(),
     rounds: int = 1,
+    compression: "_rounds.Compression | None" = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """xs: (m, n, d), labels: (m, n) -> (beta_bar (d, K), means (K, d)).
 
     The vmap axis is the machine; the master aggregation is one mean of
     (d, K) blocks per round + hard threshold -- the multi-class
     analogue of the paper's schedule (``rounds=1`` one-shot, T > 1
-    refined around the aggregate, DESIGN.md §8).  Mesh-executed twin:
+    refined around the aggregate, DESIGN.md §8; ``compression``
+    compresses the per-round direction uplink, DESIGN.md §10).
+    Mesh-executed twin:
     :func:`repro.core.distributed.distributed_mc_slda_shardmap`.
     """
     beta_bar, ws = _rounds.simulate_multi_round(
         MulticlassHead(num_classes), (xs, labels),
-        lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg)
+        lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg,
+        compression=compression)
     return hard_threshold(beta_bar, t), jnp.mean(ws.stats.aux.means, axis=0)
 
 

@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis import (
+    AxisPayloadBits,
     CollectiveContract,
     DtypePolicy,
     Param,
@@ -68,7 +69,9 @@ from repro.analysis import (
     VmemConformance,
     trace_contract,
 )
+from repro.core import compression as compression_core
 from repro.core import pipeline
+from repro.core.compression import Compression
 from repro.core.dantzig import AdmmState, DantzigConfig
 from repro.core.pipeline import DiscriminantHead, WorkerSolves
 
@@ -76,6 +79,7 @@ __all__ = [
     "refine_step",
     "worker_rounds",
     "simulate_multi_round",
+    "simulate_round_loop",
 ]
 
 
@@ -100,14 +104,22 @@ def refine_step(ws: WorkerSolves, anchor: jnp.ndarray,
     contracts=(
         # refinement rounds reuse the round-one SpectralFactor
         PrimitiveBudget("eigh", exact=1),
-        # the paper's uplink: T rounds = T psums of the (d, K) direction
-        # block over the data axis, f32 -- count AND payload are pinned
-        CollectiveContract("psum", count=Param("rounds"), axis="data",
+        # the DENSE uplink: one (d, K) f32 psum per dense round over the
+        # data axis -- count AND payload are pinned (0 when compressed:
+        # a compressed trace must hold NO dense data-axis psum at all)
+        CollectiveContract("psum", count=Param("dense_psums"), axis="data",
                            shape=Param("psum_payload"), dtype="float32"),
-        PrimitiveBudget("psum", exact=Param("rounds")),
+        PrimitiveBudget("psum", exact=Param("dense_psums")),
         # intra-machine CLIME reassembly: one model-axis gather per round
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
+        # the COMPRESSED uplink: values/indices(/scales) gathers over the
+        # data axis (0 on the dense path) ...
+        CollectiveContract("all_gather", count=Param("data_gathers"),
+                           axis="data"),
+        # ... and the total bits they move per link, exactly: a hidden
+        # dense block anywhere on the data axis blows this budget
+        AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
         VmemConformance(),
@@ -123,25 +135,36 @@ def worker_rounds(
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = None,
     model_axis_size: int = 1,
+    compression: Compression | None = None,
+    ef_residual: jnp.ndarray | None = None,
     rho_beta: jnp.ndarray | None = None,
     rho_theta: jnp.ndarray | None = None,
     state_beta: AdmmState | None = None,
     state_theta: AdmmState | None = None,
     collect_info: bool = False,
-) -> tuple[jnp.ndarray, WorkerSolves]:
+    return_ef_residual: bool = False,
+):
     """T-round refined aggregate, from inside shard_map over the mesh.
 
     Runs :func:`~repro.core.pipeline.worker_solves` ONCE (suff stats,
     one eigh, direction + CLIME ADMM -- warm-startable via the
     ``rho_*`` / ``state_*`` carries of a previous invocation's
     :class:`WorkerSolves`), then ``rounds`` closed-form refinement
-    rounds, each closed by one (d, K) ``pmean`` over ``data_axes``.
-    ``rounds=1`` reproduces the one-shot worker + single averaging
-    round of Algorithm 1 exactly.
+    rounds.  ``compression=None`` (default) closes each round with one
+    dense (d, K) ``pmean`` over ``data_axes`` -- bit-identical to the
+    pre-compression path; a :class:`~repro.core.compression.Compression`
+    instead uplinks each round's top-k error-feedback payload through
+    :func:`~repro.core.compression.sparse_mean_mesh`, carrying the
+    per-machine residual across rounds (seeded by ``ef_residual``, zero
+    by default).  ``rounds=1`` dense reproduces the one-shot worker +
+    single averaging round of Algorithm 1 exactly.
 
     Returns ``(beta_bar, solves)``: the replicated (d, K) aggregate
     (un-thresholded -- the master's hard threshold is the caller's
     O(dK) postlude) and the worker's solves for reuse/warm re-entry.
+    With ``return_ef_residual`` a third element carries the final
+    error-feedback residual (None on the dense path) so a re-entry can
+    resume the compressed stream where it left off.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
@@ -153,12 +176,92 @@ def worker_rounds(
         full=collect_info,
     )
     anchor = ws.beta_hat
-    for _ in range(rounds):  # static T: the jaxpr shows T pmeans
-        beta_tilde = refine_step(ws, anchor, model_axis)
-        for ax in data_axes:
-            beta_tilde = jax.lax.pmean(beta_tilde, ax)
-        anchor = beta_tilde  # replicated: next round anchors here
+    resid = ef_residual
+    if compression is None:
+        for _ in range(rounds):  # static T: the jaxpr shows T pmeans
+            beta_tilde = refine_step(ws, anchor, model_axis)
+            for ax in data_axes:
+                beta_tilde = jax.lax.pmean(beta_tilde, ax)
+            anchor = beta_tilde  # replicated: next round anchors here
+    else:
+        compression.validate(anchor.shape[0])
+        if resid is None:
+            resid = jnp.zeros_like(anchor)
+        # round-1 reference is zeros (the anchor is still per-machine);
+        # afterwards it is the replicated aggregate every machine holds
+        ref = jnp.zeros_like(anchor)
+        for _ in range(rounds):
+            beta_tilde = refine_step(ws, anchor, model_axis)
+            payload, resid = compression_core.ef_step(
+                compression, beta_tilde, resid, ref)
+            anchor = compression_core.sparse_mean_mesh(
+                compression, payload, ref, data_axes)
+            ref = anchor
+    if return_ef_residual:
+        return anchor, ws, resid
     return anchor, ws
+
+
+def simulate_round_loop(
+    ws: WorkerSolves,
+    *,
+    rounds: int,
+    compression: Compression | None = None,
+    ef_residual: jnp.ndarray | None = None,
+    return_all_rounds: bool = False,
+    return_ef_residual: bool = False,
+):
+    """The T refinement rounds alone, on already-computed machine solves.
+
+    ``ws`` is an (m, ...)-stacked :class:`WorkerSolves` (the output of
+    :func:`simulate_multi_round`'s vmap).  Splitting the loop from the
+    solves lets one set of per-machine solves -- the expensive part --
+    drive many round schedules: the compressed-uplink benchmark replays
+    the SAME solves under every :class:`Compression` config, so
+    accuracy-vs-bits curves differ only in the uplink.
+
+    Dense (``compression=None``): T rounds of machine-axis ``mean``
+    where the mesh does its ``pmean``.  Compressed: each machine's
+    round message runs through top-k error feedback
+    (:func:`~repro.core.compression.ef_step`, residual seeded by
+    ``ef_residual`` or zero) and the aggregate is the decoded mean of
+    the m payloads -- the exact math of the mesh path's
+    :func:`~repro.core.compression.sparse_mean_mesh`.
+
+    Returns ``beta_bar`` (d, K), or the (rounds, d, K) trajectory when
+    ``return_all_rounds``; with ``return_ef_residual`` a trailing
+    element adds the final (m, d, K) residual (None on the dense path).
+    """
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    anchor = ws.beta_hat  # (m, d, K)
+    resid = ef_residual
+    ref = None
+    if compression is not None:
+        compression.validate(anchor.shape[1])
+        if resid is None:
+            resid = jnp.zeros_like(anchor)
+        # round-1 reference is zeros (the anchor is still per-machine);
+        # afterwards it is the aggregate every machine holds
+        ref = jnp.zeros(anchor.shape[1:], anchor.dtype)
+    bars = []
+    for _ in range(rounds):
+        beta_tilde = jax.vmap(refine_step)(ws, anchor)  # (m, d, K)
+        if compression is None:
+            bar = jnp.mean(beta_tilde, axis=0)  # the round's one pmean
+        else:
+            payload, resid = jax.vmap(
+                lambda msg, res: compression_core.ef_step(
+                    compression, msg, res, ref)
+            )(beta_tilde, resid)
+            bar = compression_core.decode_mean(compression, payload, ref)
+            ref = bar
+        bars.append(bar)
+        anchor = jnp.broadcast_to(bar[None], beta_tilde.shape)
+    out = jnp.stack(bars) if return_all_rounds else bars[-1]
+    if return_ef_residual:
+        return out, resid
+    return out
 
 
 def simulate_multi_round(
@@ -169,6 +272,8 @@ def simulate_multi_round(
     lam_prime,
     rounds: int = 1,
     cfg: DantzigConfig = DantzigConfig(),
+    compression: Compression | None = None,
+    ef_residual: jnp.ndarray | None = None,
     rho_beta: jnp.ndarray | None = None,
     rho_theta: jnp.ndarray | None = None,
     state_beta: AdmmState | None = None,
@@ -181,9 +286,10 @@ def simulate_multi_round(
     ``data`` holds the head's samples stacked over a leading machine
     axis (``(xs, ys)`` with (m, n, d) leaves for the binary head).
     Identical math to the mesh path: per-machine solves under ``vmap``,
-    then T rounds of ``mean`` over the machine axis where the mesh does
-    its ``pmean``.  Warm carries are the (m, ...)-stacked fields of a
-    previous invocation's returned :class:`WorkerSolves`.
+    then the round loop of :func:`simulate_round_loop` -- a machine-axis
+    ``mean`` per dense round, or the top-k error-feedback payload mean
+    when ``compression`` is set.  Warm carries are the (m, ...)-stacked
+    fields of a previous invocation's returned :class:`WorkerSolves`.
 
     Returns ``(beta_bar, solves)`` with ``beta_bar`` (d, K), or
     (rounds, d, K) -- the whole per-round trajectory -- when
@@ -202,13 +308,7 @@ def simulate_multi_round(
             full=collect_info, **warm)
 
     ws = jax.vmap(one_machine)(tuple(data), warms)
-    anchor = ws.beta_hat  # (m, d, K)
-    bars = []
-    for _ in range(rounds):
-        beta_tilde = jax.vmap(refine_step)(ws, anchor)  # (m, d, K)
-        bar = jnp.mean(beta_tilde, axis=0)  # the round's one pmean
-        bars.append(bar)
-        anchor = jnp.broadcast_to(bar[None], beta_tilde.shape)
-    if return_all_rounds:
-        return jnp.stack(bars), ws
-    return bars[-1], ws
+    out = simulate_round_loop(
+        ws, rounds=rounds, compression=compression,
+        ef_residual=ef_residual, return_all_rounds=return_all_rounds)
+    return out, ws

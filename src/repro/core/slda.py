@@ -89,7 +89,8 @@ def debiased_local_estimator(
     return beta_tilde[:, 0], beta_hat[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("rounds", "cfg"))
+@functools.partial(jax.jit, static_argnames=("rounds", "cfg",
+                                             "compression"))
 def multi_round_slda(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -98,19 +99,21 @@ def multi_round_slda(
     t: float,
     rounds: int = 3,
     cfg: DantzigConfig = DantzigConfig(),
+    compression: "_rounds.Compression | None" = None,
 ) -> jnp.ndarray:
     """T-round refined distributed estimator on stacked machine draws.
 
     The large-m face (DESIGN.md §8): xs (m, n1, d) / ys (m, n2, d) ->
     beta_bar (d,) after ``rounds`` O(d) communication rounds, all
     sharing one set of per-machine solves (``rounds=1`` is the paper's
-    one-shot aggregate).  Mesh twin:
-    :func:`repro.core.distributed.distributed_slda_shardmap` with the
-    same ``rounds=``.
+    one-shot aggregate).  ``compression`` swaps each round's dense
+    uplink for the top-k error-feedback payload (DESIGN.md §10).  Mesh
+    twin: :func:`repro.core.distributed.distributed_slda_shardmap` with
+    the same ``rounds=`` / ``compression=``.
     """
     beta_bar, _ = _rounds.simulate_multi_round(
         BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
-        rounds=rounds, cfg=cfg)
+        rounds=rounds, cfg=cfg, compression=compression)
     return hard_threshold(beta_bar[:, 0], t)
 
 

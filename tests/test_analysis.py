@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis import (
+    AxisPayloadBits,
     CollectiveContract,
     DtypePolicy,
     Param,
@@ -166,6 +167,51 @@ def test_collective_contract_trips_on_payload_dtype():
     violations = CollectiveContract("psum", count=1, shape=(4,),
                                     dtype="float32").check(jaxpr)
     assert violations and "bfloat16" in violations[0].message
+
+
+def test_collective_contract_axis_filter_ignores_other_axes():
+    """An axis-scoped contract counts ONLY its axis's collectives:
+    model-axis traffic neither satisfies nor violates a data-axis pin."""
+    jaxpr = _trace_shard(
+        lambda x: jax.lax.psum(x, "data") + jax.lax.psum(x, "model"),
+        jnp.ones((4,)))
+    assert CollectiveContract("psum", count=1, axis="data", shape=(4,),
+                              dtype="float32").check(jaxpr) == []
+    assert CollectiveContract("psum", count=1, axis="model").check(jaxpr) \
+        == []
+
+
+# ---------------------------------------------------------------------------
+# axis payload bits: total traffic over one mesh axis, at wire dtypes
+# ---------------------------------------------------------------------------
+
+
+def test_axis_payload_bits_exact_max_and_axis_scope():
+    # one f32 psum of (4,) over the data axis = 128 bits per link
+    jaxpr = _trace_shard(lambda x: jax.lax.psum(x, "data"), jnp.ones((4,)))
+    assert AxisPayloadBits("data", exact_bits=128).check(jaxpr) == []
+    assert AxisPayloadBits("data", max_bits=128).check(jaxpr) == []
+    (violation,) = AxisPayloadBits("data", exact_bits=64).check(jaxpr)
+    assert "128" in violation.message and violation.sites
+    (violation,) = AxisPayloadBits("data", max_bits=100).check(jaxpr)
+    assert "128" in violation.message
+    # traffic on OTHER axes does not count toward this axis's total
+    assert AxisPayloadBits("model", exact_bits=0).check(jaxpr) == []
+
+
+def test_axis_payload_bits_sums_wire_dtypes():
+    """Mixed-dtype gathers over one axis sum at their WIRE widths --
+    the contract prices what one link uplinks (the gather operand),
+    not the m-times-larger gathered result."""
+    def body(x):
+        vals = jax.lax.all_gather(x.astype(jnp.bfloat16), "data")
+        idx = jax.lax.all_gather(jnp.arange(4, dtype=jnp.int16), "data")
+        return vals.sum() + idx.sum()
+
+    jaxpr = _trace_shard(body, jnp.ones((4,)))
+    # 4 bf16 values (64 bits) + 4 int16 indices (64 bits)
+    assert AxisPayloadBits("data", exact_bits=128).check(jaxpr) == []
+    assert AxisPayloadBits("data", exact_bits=256).check(jaxpr) != []
 
 
 # ---------------------------------------------------------------------------

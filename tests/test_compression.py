@@ -1,0 +1,348 @@
+"""Top-k error-feedback compressed uplinks (core/compression.py, DESIGN.md §10).
+
+Pin families:
+
+* **Bit accounting** -- :func:`uplink_bits` is exact wire arithmetic
+  (values + adaptively-sized indices + int8 scales), and the SAME
+  number the ``AxisPayloadBits`` trace contract pins on the mesh
+  jaxpr, so a divergence between the analytic and traced bits fails
+  here, not silently in a benchmark table.
+* **Codec semantics** -- set-semantics decode: selected coordinates
+  land at the machine's EXACT float32 value, unselected keep the
+  shared reference; the error-feedback residual is exactly zero at
+  selected coordinates.  The identity codec (``k_top = d``,
+  unquantized) is bit-exact, so ``compression=Compression(d)``
+  reproduces the dense rounds -- and the PR 2 golden -- to the bit.
+* **Mesh parity** -- the shard_map path's gather-of-payloads
+  aggregation matches the vmap simulation, including d % |model| != 0
+  remainder columns under bf16 on an 8-device mesh.
+* **Trace structure** -- a compressed trace holds ZERO dense data-axis
+  psums and exactly the declared per-round gathers/bits; claiming the
+  dense bit budget on a compressed trace is a contract violation.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.analysis import check_entry, count_eqns
+from repro.core import compression as C
+from repro.core import rounds as rounds_core
+from repro.core.compression import Compression
+from repro.core.dantzig import DantzigConfig
+from repro.core.distributed import (
+    distributed_slda_shardmap,
+    simulated_distributed_slda,
+)
+from repro.core.pipeline import BinaryHead
+from repro.stats import synthetic
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO, "tests", "golden", "binary_prerefactor.npz")
+ATOL = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# bit accounting
+# ---------------------------------------------------------------------------
+
+
+def test_uplink_bits_arithmetic():
+    d = 100
+    assert C.dense_uplink_bits(d, 1) == d * 32 == 3200
+    # int8: 8-bit values + 16-bit indices + one f32 scale per column
+    assert C.uplink_bits(Compression(20, "int8"), d, 1) == \
+        20 * (8 + 16) + 32 == 512
+    assert C.uplink_bits(Compression(20, "bf16"), d, 1) == 20 * (16 + 16)
+    assert C.uplink_bits(Compression(12), d, 1) == 12 * (32 + 16)
+    assert C.compression_ratio(Compression(20, "int8"), d, 1) == 512 / 3200
+    # K columns scale linearly; int8 ships one scale PER column
+    assert C.uplink_bits(Compression(5, "int8"), 30, 3) == \
+        3 * 5 * (8 + 16) + 3 * 32
+    # the identity codec is never cheaper than dense (indices ride along)
+    assert C.uplink_bits(Compression(d), d, 1) > C.dense_uplink_bits(d, 1)
+
+
+def test_index_width_adapts_to_dimension():
+    """Indices travel int16 while d fits, int32 beyond -- and the
+    accounting counts the same dtype the wire moves."""
+    assert C.wire_index_dtype(100) == jnp.int16
+    assert C.index_bits(100) == 16
+    assert C.wire_index_dtype(32767) == jnp.int16
+    assert C.wire_index_dtype(32768) == jnp.int32
+    assert C.index_bits(40_000) == 32
+    assert C.uplink_bits(Compression(10), 40_000, 1) == 10 * (32 + 32)
+
+
+def test_validate_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        Compression(0).validate(10)
+    with pytest.raises(ValueError):
+        Compression(11).validate(10)
+    with pytest.raises(ValueError):
+        Compression(2, "fp4").validate(10)
+    with pytest.raises(ValueError):
+        C.uplink_bits(Compression(0), 10, 1)
+
+
+def test_payload_wire_dtypes():
+    u = jax.random.normal(jax.random.PRNGKey(0), (40, 2))
+    ref = jnp.zeros_like(u)
+    for quant, dt in ((None, jnp.float32), ("bf16", jnp.bfloat16),
+                      ("int8", jnp.int8)):
+        p = C.encode(Compression(7, quant), u, ref)
+        assert p.values.shape == p.indices.shape == (7, 2)
+        assert p.values.dtype == dt
+        assert p.indices.dtype == jnp.int16
+        if quant == "int8":
+            assert p.scales.shape == (2,)
+            assert p.scales.dtype == jnp.float32
+        else:
+            assert p.scales is None
+
+
+# ---------------------------------------------------------------------------
+# codec semantics
+# ---------------------------------------------------------------------------
+
+
+def test_identity_codec_roundtrip_exact():
+    key1, key2 = jax.random.split(jax.random.PRNGKey(1))
+    u = jax.random.normal(key1, (30, 2))
+    ref = jax.random.normal(key2, (30, 2))
+    comp = Compression(30)
+    out = C.decode(comp, C.encode(comp, u, ref), ref)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(u))
+    # and the EF residual is exactly zero
+    _, resid = C.ef_step(comp, u, jnp.zeros_like(u), ref)
+    assert not np.asarray(resid).any()
+
+
+def test_topk_selection_and_residual_split():
+    """Selected coords: exact value through, residual exactly zero.
+    Unselected coords: reference through, full delta into the residual."""
+    ref = jnp.full((6, 1), 10.0)
+    msg = ref + jnp.asarray([[0.0], [5.0], [-3.0], [0.1], [0.0], [0.0]])
+    comp = Compression(2)
+    payload, resid = C.ef_step(comp, msg, jnp.zeros_like(msg), ref)
+    decoded = C.decode(comp, payload, ref)
+    decoded, resid = np.asarray(decoded), np.asarray(resid)
+    msg, ref = np.asarray(msg), np.asarray(ref)
+    sel = np.asarray(jnp.sort(payload.indices[:, 0])).tolist()
+    assert sel == [1, 2]  # the two largest |msg - ref|
+    np.testing.assert_array_equal(decoded[[1, 2]], msg[[1, 2]])
+    np.testing.assert_array_equal(decoded[[0, 3, 4, 5]], ref[[0, 3, 4, 5]])
+    np.testing.assert_array_equal(resid[[1, 2]], 0.0)
+    np.testing.assert_array_equal(resid[[0, 3, 4, 5]],
+                                  (msg - ref)[[0, 3, 4, 5]])
+
+
+def test_int8_quantizes_deltas_per_column():
+    key1, key2 = jax.random.split(jax.random.PRNGKey(2))
+    u = jax.random.normal(key1, (50, 3))
+    ref = jax.random.normal(key2, (50, 3))
+    comp = Compression(50, "int8")
+    payload = C.encode(comp, u, ref)
+    decoded = C.decode(comp, payload, ref)
+    # symmetric quantization: error at most half a step of the
+    # per-column scale, everywhere (k_top = d selects all rows)
+    step = np.asarray(payload.scales)[None, :]
+    assert np.all(np.abs(np.asarray(decoded - u)) <= 0.5 * step + 1e-7)
+    # an all-zero delta column hits the amax==0 guard: scale 1, exact
+    same = C.encode(comp, ref, ref)
+    np.testing.assert_array_equal(np.asarray(same.values), 0)
+    np.testing.assert_array_equal(np.asarray(same.scales), 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(C.decode(comp, same, ref)), np.asarray(ref))
+
+
+def test_decode_mean_matches_manual_mean():
+    keys = jax.random.split(jax.random.PRNGKey(3), 5)
+    msgs = jnp.stack([jax.random.normal(k, (20, 1)) for k in keys])
+    ref = jnp.zeros((20, 1))
+    comp = Compression(4)
+    payloads, _ = jax.vmap(
+        lambda m: C.ef_step(comp, m, jnp.zeros_like(m), ref))(msgs)
+    manual = jnp.mean(jnp.stack([
+        C.decode(comp, jax.tree.map(lambda leaf: leaf[i], payloads), ref)
+        for i in range(5)]), axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(C.decode_mean(comp, payloads, ref)), np.asarray(manual))
+
+
+# ---------------------------------------------------------------------------
+# identity codec == dense rounds, bit for bit (the PR 5 fixed point)
+# ---------------------------------------------------------------------------
+
+
+def test_k_top_d_matches_dense_rounds_bitwise_and_zero_residual():
+    d = 30
+    cfg = DantzigConfig(max_iters=200)
+    p = synthetic.make_problem(d=d, n_signal=4, rho=0.5)
+    xs, ys = synthetic.sample_machines(jax.random.PRNGKey(4), p, 4, 50, 50)
+    _, ws = rounds_core.simulate_multi_round(
+        BinaryHead(), (xs, ys), lam=0.2, lam_prime=0.2, rounds=1, cfg=cfg)
+    for r in (1, 2, 3):
+        dense = rounds_core.simulate_round_loop(ws, rounds=r)
+        comp_out, resid = rounds_core.simulate_round_loop(
+            ws, rounds=r, compression=Compression(d),
+            return_ef_residual=True)
+        np.testing.assert_array_equal(np.asarray(comp_out),
+                                      np.asarray(dense))
+        # the error-feedback stream never accumulates anything: the
+        # identity codec's residual is EXACTLY zero after every round
+        assert not np.asarray(resid).any()
+
+
+def test_k_top_d_compression_matches_golden():
+    """compression=Compression(d) reproduces the PRE-refactor golden:
+    the compressed code path is provably dormant at the identity codec."""
+    golden = np.load(GOLDEN)
+    cfg = DantzigConfig(max_iters=300)
+    p30 = synthetic.make_problem(d=30, n_signal=4)
+    xs, ys = synthetic.sample_machines(
+        jax.random.PRNGKey(11), p30, 3, 100, 100)
+    dense = simulated_distributed_slda(xs, ys, 0.2, 0.2, 0.05, cfg)
+    ident = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, cfg, compression=Compression(30))
+    np.testing.assert_array_equal(np.asarray(ident), np.asarray(dense))
+    np.testing.assert_allclose(np.asarray(ident), golden["sim_dist"],
+                               atol=ATOL)
+
+
+def test_residual_replays_dropped_coordinates_exactly():
+    """The EF invariant, end to end: a coordinate dropped in round 1 is
+    DELAYED, not lost -- the carried residual re-enters round 2's
+    message, gets selected, and lands at its exact float32 value, after
+    which the residual drains to zero."""
+    comp = Compression(1)
+    ref = jnp.zeros((4, 1))
+    msg1 = jnp.asarray([[4.0], [3.0], [0.0], [0.0]])
+    p1, r1 = C.ef_step(comp, msg1, jnp.zeros_like(msg1), ref)
+    bar1 = C.decode(comp, p1, ref)
+    # k_top=1 transmits only row 0; row 1 parks in the residual
+    np.testing.assert_array_equal(np.asarray(bar1),
+                                  [[4.0], [0.0], [0.0], [0.0]])
+    np.testing.assert_array_equal(np.asarray(r1),
+                                  [[0.0], [3.0], [0.0], [0.0]])
+    # round 2: the fresh message agrees with the aggregate, so the only
+    # delta left IS the carried residual
+    p2, r2 = C.ef_step(comp, bar1, r1, bar1)
+    bar2 = C.decode(comp, p2, bar1)
+    np.testing.assert_array_equal(np.asarray(bar2),
+                                  [[4.0], [3.0], [0.0], [0.0]])
+    assert not np.asarray(r2).any()
+
+
+# ---------------------------------------------------------------------------
+# mesh parity
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_mesh_1x1_matches_simulation():
+    d = 16
+    cfg = DantzigConfig(max_iters=150)
+    p = synthetic.make_problem(d=d, n_signal=4, rho=0.5)
+    xs, ys = synthetic.sample_machines(jax.random.PRNGKey(6), p, 1, 40, 40)
+    comp = Compression(5, "int8")
+    sim = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, cfg, rounds=2, compression=comp)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    out = distributed_slda_shardmap(
+        mesh, xs.reshape(-1, d), ys.reshape(-1, d), 0.2, 0.2, 0.05, cfg,
+        rounds=2, compression=comp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(sim), atol=ATOL)
+
+
+def test_compressed_mesh_8dev_remainder_matches_simulation():
+    """(data=2, model=4) mesh, d=70 (70 % 4 != 0), rounds=3, top-16
+    bf16: the gather-of-payloads aggregation matches the vmap
+    simulation -- the encode runs on the REASSEMBLED (replicated)
+    correction, so sharded CLIME blocks see the same top-k selection
+    the simulation does."""
+    out = run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np, math
+        from repro.core.compression import Compression
+        from repro.core.dantzig import DantzigConfig
+        from repro.core.distributed import (
+            distributed_slda_shardmap, simulated_distributed_slda)
+        from repro.stats import synthetic
+
+        cfg = DantzigConfig(max_iters=300)
+        m, d = 2, 70
+        comp = Compression(16, "bf16")
+        p = synthetic.make_problem(d=d, n_signal=6, rho=0.6)
+        xs, ys = synthetic.sample_machines(jax.random.PRNGKey(0), p, m, 100, 100)
+        lam = 0.3 * math.sqrt(math.log(d) / 200) * 4
+        t = 0.25 * lam
+        sim = simulated_distributed_slda(
+            xs, ys, lam, lam, t, cfg, rounds=3, compression=comp)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        out = distributed_slda_shardmap(
+            mesh, xs.reshape(-1, d), ys.reshape(-1, d), lam, lam, t, cfg,
+            rounds=3, compression=comp)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(sim), atol=1e-5)
+        print("COMPRESSED_MESH8_OK")
+        """
+    )
+    assert "COMPRESSED_MESH8_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# trace structure: the compressed uplink is an asserted property
+# ---------------------------------------------------------------------------
+
+
+def _compressed_trace(d, t_rounds, comp):
+    cfg = DantzigConfig(max_iters=40, adapt_rho=False)
+    p = synthetic.make_problem(d=d, n_signal=4, rho=0.5)
+    xs, ys = synthetic.sample_machines(jax.random.PRNGKey(7), p, 1, 30, 30)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def fn(x, y):
+        return distributed_slda_shardmap(
+            mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=t_rounds,
+            compression=comp)
+
+    return jax.make_jaxpr(fn)(xs.reshape(-1, d), ys.reshape(-1, d))
+
+
+def test_compressed_trace_no_dense_psum_pinned_bits():
+    d, t_rounds = 12, 2
+    comp = Compression(5)
+    jaxpr = _compressed_trace(d, t_rounds, comp)
+    # the dense uplink is GONE from the lowered program, not just unused
+    assert count_eqns(jaxpr, "psum") == 0
+    # per round: one model-axis correction gather + two data-axis
+    # payload gathers (values, indices; f32 mode has no scales)
+    assert count_eqns(jaxpr, "all_gather") == t_rounds * 3
+    violations = check_entry(
+        "distributed.slda_shardmap", jaxpr,
+        {"rounds": t_rounds, "dense_psums": 0,
+         "data_gathers": 2 * t_rounds,
+         "data_uplink_bits": t_rounds * C.uplink_bits(comp, d, 1),
+         "psum_payload": (d, 1), "pallas_calls": 0})
+    assert violations == [], violations
+
+
+def test_compressed_trace_rejects_dense_bit_budget():
+    """Claiming the dense bit budget against a compressed trace -- or
+    the compressed budget against a dense trace -- trips the
+    AxisPayloadBits contract: the bits column in the benchmark is
+    backed by the lowered program."""
+    d, t_rounds = 12, 2
+    comp = Compression(5)
+    jaxpr = _compressed_trace(d, t_rounds, comp)
+    violations = check_entry(
+        "distributed.slda_shardmap", jaxpr,
+        {"rounds": t_rounds, "dense_psums": 0,
+         "data_gathers": 2 * t_rounds,
+         "data_uplink_bits": t_rounds * C.dense_uplink_bits(d, 1),
+         "psum_payload": (d, 1), "pallas_calls": 0})
+    assert any("bits" in v.message for v in violations), violations

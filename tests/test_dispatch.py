@@ -104,6 +104,56 @@ def test_backend_budgets_drive_selection():
     assert backend_vmem_budget("wasm") == DEFAULT_VMEM_BUDGET
 
 
+def test_backend_budget_exact_values():
+    """The budget constants are part of the dispatch contract.
+
+    TPU and CPU share the 12 MiB VMEM model (interpreter-validated
+    shapes must pick the path they will pick on TPU); GPU gets a
+    shared-memory-sized 192 KiB.  A change here silently reroutes
+    every shape's scan/fused/fused_blocked decision, so the exact
+    numbers are pinned, not just their ordering.
+    """
+    assert backend_vmem_budget("tpu") == 12 * 2**20
+    assert backend_vmem_budget("cpu") == 12 * 2**20
+    assert backend_vmem_budget("gpu") == 192 * 2**10
+
+
+def test_gpu_scan_fallback_boundary():
+    """GPU fuses small d, tiles mid d, and bails exactly where A+Q bust 192 KiB."""
+    cfg = DantzigConfig(fused=True)
+    # d=64: A + Q = 32 KiB, well inside the 192 KiB budget
+    choice = select_solver(cfg, 64, 8, backend="gpu")
+    assert choice == SolverChoice("fused", 8)
+    assert fused_block_vmem_bytes(64, 8) <= backend_vmem_budget("gpu")
+    # d=128: A + Q = 128 KiB leave room for a few columns -> tiled,
+    # rounded down to the f32 sublane granularity
+    assert select_solver(cfg, 128, 64, backend="gpu") == \
+        SolverChoice("fused_blocked", 8)
+    # d=160: A + Q alone exceed the budget -- not even one column fits,
+    # and the fallback ignores any explicit block_k override
+    assert select_solver(cfg, 160, 1, backend="gpu").kind == "scan"
+    assert select_solver(DantzigConfig(fused=True, block_k=1),
+                         160, 1, backend="gpu").kind == "scan"
+
+
+def test_state_io_footprint_drives_gpu_selection():
+    """The adaptive kernel's larger footprint shrinks the GPU block.
+
+    ``cfg.tol`` routes to the adaptive kernel, whose streamed-in/out
+    ADMM state costs 14 (d, block_k) arrays instead of 9 -- on the
+    tight GPU budget that is visible as a smaller block for the SAME
+    shape.  An explicit ``state_io`` overrides the cfg derivation.
+    """
+    d, k = 144, 16
+    fixed = select_solver(DantzigConfig(fused=True), d, k, backend="gpu")
+    adaptive = select_solver(DantzigConfig(fused=True, tol=1e-4), d, k,
+                             backend="gpu")
+    assert fixed.kind == adaptive.kind == "fused_blocked"
+    assert adaptive.block_k < fixed.block_k
+    assert select_solver(DantzigConfig(fused=True), d, k, backend="gpu",
+                         state_io=True) == adaptive
+
+
 def test_cfg_vmem_budget_overrides_backend():
     """DantzigConfig.vmem_budget wins over any backend derivation."""
     # a budget too small for even one column at d=256 forces scan on

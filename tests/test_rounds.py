@@ -27,6 +27,7 @@ import numpy as np
 from conftest import run_in_subprocess
 
 from repro.analysis import check_entry, count_eqns
+from repro.core import compression as compression_core
 from repro.core import pipeline, rounds as rounds_core
 from repro.core.dantzig import DantzigConfig
 from repro.core.distributed import (
@@ -67,9 +68,15 @@ def test_rounds_trace_T_pmeans_and_one_eigh():
         # one intra-machine correction gather per round
         assert count_eqns(jaxpr, "all_gather") == t_rounds
         # and the face's full declared contract set holds on this trace
+        # (dense path: every round is one dense psum, no data-axis
+        # gathers, and the per-link bits are T dense (d, 1) blocks)
         violations = check_entry(
             "distributed.slda_shardmap", jaxpr,
-            {"rounds": t_rounds, "psum_payload": (d, 1), "pallas_calls": 0})
+            {"rounds": t_rounds, "dense_psums": t_rounds,
+             "data_gathers": 0,
+             "data_uplink_bits":
+                 t_rounds * compression_core.dense_uplink_bits(d, 1),
+             "psum_payload": (d, 1), "pallas_calls": 0})
         assert violations == [], violations
 
 
@@ -96,7 +103,12 @@ def test_mc_rounds_trace_T_direction_pmeans_one_means_pmean():
         assert count_eqns(jaxpr, "eigh") == 1
         violations = check_entry(
             "distributed.mc_slda_shardmap", jaxpr,
-            {"rounds": t_rounds, "direction_payload": (d, K),
+            {"rounds": t_rounds, "dense_psums": t_rounds,
+             "data_gathers": 0,
+             "data_uplink_bits":
+                 t_rounds * compression_core.dense_uplink_bits(d, K)
+                 + K * d * 32,  # + the one (K, d) f32 means psum
+             "direction_payload": (d, K),
              "means_payload": (K, d), "total_psums": t_rounds + 1,
              "pallas_calls": 0})
         assert violations == [], violations
