@@ -17,6 +17,7 @@ from benchmarks import (
     admm_convergence,
     compressed_rounds,
     corollary48_threshold,
+    fault_rounds,
     fig1_machines,
     fig2_fixed_n,
     fig_multiclass,
@@ -45,6 +46,8 @@ BENCHES = [
      multi_round.main),
     ("compressed_rounds (top-k EF uplinks: accuracy vs bits moved)",
      compressed_rounds.main),
+    ("fault_rounds (liveness-masked aggregation under faults)",
+     fault_rounds.main),
     ("roofline (dry-run aggregation)", roofline.main),
 ]
 

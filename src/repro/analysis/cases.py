@@ -29,6 +29,7 @@ from repro.core.distributed import (
     distributed_mc_slda_shardmap,
     distributed_slda_shardmap,
 )
+from repro.core.faults import Aggregation, FaultPlan, FaultSchedule
 from repro.core.solver_dispatch import solve_dantzig_full
 from repro.kernels.spectral import spectral_factor
 
@@ -120,38 +121,97 @@ def _round_params(t_rounds, d, num_cols, comp=None, extra_bits=0):
     """Params shared by every rounds-bearing entry: collective counts and
     the exact per-link data-axis bit budget for T rounds, dense or
     compressed (``extra_bits`` covers one-off payloads like the mc
-    class-means pmean)."""
+    class-means pmean).  Legacy (fault-free, unmasked) path: no
+    liveness psum; the compressed path's 2 is_finite per round are the
+    ef_step decode + the aggregate decode, both sanitized by default.
+    """
     if comp is None:
         per_round = compression_core.dense_uplink_bits(d, num_cols)
         gathers_per_round = 0
         dense_psums = t_rounds
+        screen_ops = 0
     else:
         per_round = compression_core.uplink_bits(comp, d, num_cols)
         gathers_per_round = 3 if comp.quantize == "int8" else 2
         dense_psums = 0
+        screen_ops = 2 * t_rounds
     return {
         "rounds": t_rounds,
         "dense_psums": dense_psums,
+        "live_psums": 0,
+        "total_psums": dense_psums,
+        "screen_ops": screen_ops,
         "data_gathers": t_rounds * gathers_per_round,
         "data_uplink_bits": t_rounds * per_round + extra_bits,
     }
 
 
-def _worker_rounds_case(cfg, t_rounds, comp=None):
+def _masked_round_params(t_rounds, d, num_cols, comp=None, *,
+                         faulted=False, trim=False, extra_bits=0):
+    """The DESIGN §11 masked-aggregation counterparts.
+
+    Masked dense rounds close with a (d, K) psum + the scalar liveness
+    psum (trimmed mode gathers per-machine blocks + weights instead);
+    masked compressed rounds gather the payload as before plus, when a
+    fault plan rides along, the per-machine liveness scalar.  Screening
+    is one is_finite per round on the dense wire, or (compressed) one
+    on the ef_step decode + one on the raw decoded stack."""
+    base = _round_params(t_rounds, d, num_cols, comp,
+                         extra_bits=extra_bits)
+    scalar_bits = 32  # one f32 liveness scalar per round on the wire
+    if comp is None:
+        if trim:
+            # all_gather of the (d, K) block + the weight scalar; the
+            # trimmed reduction itself is replicated local math
+            base.update({
+                "dense_psums": 0, "live_psums": 0, "total_psums": 0,
+                "data_gathers": 2 * t_rounds,
+                "screen_ops": t_rounds,
+                "data_uplink_bits": t_rounds * (
+                    compression_core.dense_uplink_bits(d, num_cols)
+                    + scalar_bits) + extra_bits,
+            })
+        else:
+            base.update({
+                "live_psums": t_rounds,
+                "total_psums": base["dense_psums"] + t_rounds,
+                "screen_ops": t_rounds,
+                "data_uplink_bits":
+                    base["data_uplink_bits"] + t_rounds * scalar_bits,
+            })
+    else:
+        extra_gathers = t_rounds if faulted else 0
+        base.update({
+            "data_gathers": base["data_gathers"] + extra_gathers,
+            "data_uplink_bits":
+                base["data_uplink_bits"] + extra_gathers * scalar_bits,
+        })
+    return base
+
+
+def _worker_rounds_case(cfg, t_rounds, comp=None, agg=None, faults=False,
+                        staleness=0):
     def build():
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         x, y = _normal(4, (30, 12)), _normal(5, (30, 12))
+        plan = (FaultSchedule(dropout=0.3, seed=0).plan(
+            1, t_rounds, max(staleness, 1)) if faults else None)
+        plan_args = tuple(plan) if plan is not None else ()
+        plan_specs = tuple(P("data", None) for _ in plan_args)
 
-        def shard_fn(xs, ys):
+        def shard_fn(xs, ys, *plan_leaves):
+            row = (FaultPlan(*(leaf[0] for leaf in plan_leaves))
+                   if plan_leaves else None)
             beta, _ = rounds.worker_rounds(
                 pipeline.BinaryHead(), xs, ys, lam=0.2, lam_prime=0.2,
                 rounds=t_rounds, cfg=cfg, model_axis="model",
-                model_axis_size=1, compression=comp)
+                model_axis_size=1, compression=comp, faults=row,
+                staleness=staleness, aggregation=agg)
             return beta
 
         spec = P("data", None)
-        fn = _shard_map(shard_fn, mesh, (spec, spec), P())
-        return fn, (x, y)
+        fn = _shard_map(shard_fn, mesh, (spec, spec) + plan_specs, P())
+        return fn, (x, y) + plan_args
     return build
 
 
@@ -165,13 +225,37 @@ case("rounds.worker_rounds", "rounds2-mesh1x1-d12-top4-int8",
      {**_round_params(2, 12, 1, Compression(4, "int8")),
       "psum_payload": (12, 1), "pallas_calls": 0})(
     _worker_rounds_case(SCAN, 2, Compression(4, "int8")))
+# DESIGN §11 masked aggregation: the liveness scalar psum + one
+# screening is_finite per round join the budget
+case("rounds.worker_rounds", "rounds3-mesh1x1-d12-masked",
+     {**_masked_round_params(3, 12, 1), "psum_payload": (12, 1),
+      "pallas_calls": 0})(
+    _worker_rounds_case(SCAN, 3, agg=Aggregation()))
+case("rounds.worker_rounds", "rounds2-mesh1x1-d12-masked-faulted-stale",
+     {**_masked_round_params(2, 12, 1), "psum_payload": (12, 1),
+      "pallas_calls": 0})(
+    _worker_rounds_case(SCAN, 2, agg=Aggregation(), faults=True,
+                        staleness=1))
+# trimmed mode trades the psums for per-machine block + weight gathers
+case("rounds.worker_rounds", "rounds2-mesh1x1-d12-trimmed",
+     {**_masked_round_params(2, 12, 1, trim=True),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _worker_rounds_case(SCAN, 2, agg=Aggregation(trim=0.1)))
+# masked compressed + faults: payload gathers + the liveness gather
+case("rounds.worker_rounds", "rounds2-mesh1x1-d12-top4-int8-masked-faulted",
+     {**_masked_round_params(2, 12, 1, Compression(4, "int8"),
+                             faulted=True),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _worker_rounds_case(SCAN, 2, Compression(4, "int8"),
+                        agg=Aggregation(envelope=1e6), faults=True))
 
 
 # ---------------------------------------------------------------------------
 # distributed faces
 # ---------------------------------------------------------------------------
 
-def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30, comp=None):
+def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30, comp=None,
+                    faults=None, staleness=0, agg=None):
     def build():
         mesh = jax.make_mesh(mesh_shape, ("data", "model"))
         n = n_per * mesh_shape[0]
@@ -180,7 +264,8 @@ def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30, comp=None):
         def fn(x, y):
             return distributed_slda_shardmap(
                 mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=t_rounds,
-                compression=comp)
+                compression=comp, faults=faults, staleness=staleness,
+                aggregation=agg)
         return fn, (x, y)
     return build
 
@@ -217,9 +302,33 @@ case("distributed.slda_shardmap",
       "psum_payload": (70, 1), "pallas_calls": 2},
      min_devices=8)(
     _slda_face_case(FUSED, 3, 70, (2, 4), comp=Compression(16, "bf16")))
+# the fault-tolerant face (DESIGN §11): masked aggregation with a
+# sharded FaultPlan liveness operand, dense and on the 8-device mesh
+case("distributed.slda_shardmap", "scan-rounds3-mesh1x1-d12-masked-faulted",
+     {**_masked_round_params(3, 12, 1), "psum_payload": (12, 1),
+      "pallas_calls": 0})(
+    _slda_face_case(SCAN, 3, 12, (1, 1),
+                    faults=FaultSchedule(dropout=0.2, seed=1),
+                    staleness=1, agg=Aggregation()))
+case("distributed.slda_shardmap", "scan-rounds2-mesh1x1-d12-trimmed",
+     {**_masked_round_params(2, 12, 1, trim=True),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _slda_face_case(SCAN, 2, 12, (1, 1),
+                    faults=FaultSchedule(corrupt=0.2, seed=2),
+                    agg=Aggregation(trim=0.25)))
+case("distributed.slda_shardmap", "fused-rounds3-mesh2x4-d70-masked-faulted",
+     {**_masked_round_params(3, 70, 1), "psum_payload": (70, 1),
+      "pallas_calls": 2},
+     min_devices=8)(
+    _slda_face_case(FUSED, 3, 70, (2, 4),
+                    faults=FaultSchedule(dropout=0.3, straggle=0.2,
+                                         corrupt=0.1, corrupt_mode="mix",
+                                         seed=3),
+                    staleness=2, agg=Aggregation(envelope=1e6)))
 
 
-def _mc_face_case(cfg, t_rounds, d=10, num_classes=3, comp=None):
+def _mc_face_case(cfg, t_rounds, d=10, num_classes=3, comp=None,
+                  faults=None, staleness=0, agg=None):
     def build():
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         x = _normal(8, (60, d))
@@ -229,18 +338,21 @@ def _mc_face_case(cfg, t_rounds, d=10, num_classes=3, comp=None):
         def fn(x, labels):
             return distributed_mc_slda_shardmap(
                 mesh, x, labels, num_classes, 0.2, 0.2, 0.05, cfg,
-                rounds=t_rounds, compression=comp)
+                rounds=t_rounds, compression=comp, faults=faults,
+                staleness=staleness, aggregation=agg)
         return fn, (x, labels)
     return build
 
 
-def _mc_params(t_rounds, d=10, num_classes=3, comp=None):
+def _mc_params(t_rounds, d=10, num_classes=3, comp=None, masked=False,
+               faulted=False):
     # the (K, d) class means ride one dense f32 pmean regardless of the
-    # direction compression
+    # direction compression (and outside the fault mask)
     means_bits = num_classes * d * 32
-    p = _round_params(t_rounds, d, num_classes, comp,
-                      extra_bits=means_bits)
-    return {**p, "total_psums": p["dense_psums"] + 1,
+    maker = (_masked_round_params if masked else _round_params)
+    kw = {"faulted": faulted} if masked else {}
+    p = maker(t_rounds, d, num_classes, comp, extra_bits=means_bits, **kw)
+    return {**p, "total_psums": p["total_psums"] + 1,
             "direction_payload": (d, num_classes),
             "means_payload": (num_classes, d), "pallas_calls": 0}
 
@@ -251,6 +363,11 @@ for _t in (1, 3):
 case("distributed.mc_slda_shardmap", "scan-rounds2-mesh1x1-d10-K3-top3",
      _mc_params(2, comp=Compression(3)))(
     _mc_face_case(SCAN, 2, comp=Compression(3)))
+case("distributed.mc_slda_shardmap",
+     "scan-rounds2-mesh1x1-d10-K3-masked-faulted",
+     _mc_params(2, masked=True, faulted=True))(
+    _mc_face_case(SCAN, 2, faults=FaultSchedule(dropout=0.2, seed=4),
+                  staleness=1, agg=Aggregation()))
 
 
 # ---------------------------------------------------------------------------

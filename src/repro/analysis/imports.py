@@ -128,16 +128,18 @@ def exclusive_call_violations(
     *,
     func_name: str = "all_gather",
     allowed: Tuple[str, ...] = ("repro.core.pipeline",
-                                "repro.core.compression"),
+                                "repro.core.compression",
+                                "repro.core.faults"),
 ) -> List[Violation]:
     """A function may only be *called* from the allowed modules.
 
     Matches both ``all_gather(...)`` and any attribute call ending in
     ``.all_gather(...)`` (``jax.lax.all_gather``, ``lax.all_gather``).
-    The two allowed sites are the pipeline's intra-machine sharded-CLIME
-    gather and the compressed-uplink sparse aggregation of
-    :mod:`repro.core.compression` -- every other module must route
-    through one of them.
+    The three allowed sites are the pipeline's intra-machine
+    sharded-CLIME gather, the compressed-uplink sparse aggregation of
+    :mod:`repro.core.compression`, and the fault layer's machine-stack
+    gather (:func:`repro.core.faults.gather_machines`, feeding the
+    trimmed mean) -- every other module must route through one of them.
     """
     rule = f"imports[{func_name}() only in {allowed}]"
     violations: List[Violation] = []

@@ -66,9 +66,11 @@ __all__ = [
     "QUANTIZE_MODES",
     "decode",
     "decode_mean",
+    "decode_stack",
     "dense_uplink_bits",
     "ef_step",
     "encode",
+    "gather_payloads",
     "index_bits",
     "sparse_mean_mesh",
     "uplink_bits",
@@ -217,7 +219,7 @@ def encode(comp: Compression, u: jnp.ndarray,
 
 
 def decode(comp: Compression, payload: Payload,
-           ref: jnp.ndarray) -> jnp.ndarray:
+           ref: jnp.ndarray, *, screen_nonfinite: bool = True) -> jnp.ndarray:
     """One machine's dense (d, K) reconstruction against ``ref``.
 
     Selected rows take the transmitted absolute value (set-semantics:
@@ -225,15 +227,29 @@ def decode(comp: Compression, payload: Payload,
     block EXACTLY -- no float add round-trip); unselected rows keep
     the reference.  int8 payloads carry deltas, so they reconstruct by
     add -- quantization already forfeits exactness there.
+
+    ``screen_nonfinite`` (default) replaces non-finite reconstructed
+    coordinates with the reference: a single NaN in one machine's int8
+    scale would otherwise ride the scatter_add into the shared
+    aggregate and poison every later round.  For finite wire values
+    the ``where`` selects the reconstruction bit-for-bit, so the
+    identity-codec and golden pins are unaffected.  The fault-aware
+    aggregation of :mod:`repro.core.rounds` decodes RAW
+    (``screen_nonfinite=False``) instead, so its per-machine screen
+    can zero the whole contribution rather than keep a ref-filled one.
     """
     num_cols = payload.values.shape[1]
     rows = payload.indices.astype(jnp.int32)  # widen off-wire for scatter
     if comp.quantize == "int8":
         deltas = payload.values.astype(jnp.float32) * payload.scales[None, :]
-        return ref + jnp.zeros_like(ref).at[
+        out = ref + jnp.zeros_like(ref).at[
             rows, _cols(num_cols)].add(deltas)
-    vals = payload.values.astype(jnp.float32)
-    return ref.at[rows, _cols(num_cols)].set(vals)
+    else:
+        vals = payload.values.astype(jnp.float32)
+        out = ref.at[rows, _cols(num_cols)].set(vals)
+    if screen_nonfinite:
+        out = jnp.where(jnp.isfinite(out), out, ref)
+    return out
 
 
 def ef_step(
@@ -261,6 +277,27 @@ def ef_step(
 # ---------------------------------------------------------------------------
 
 
+def decode_stack(
+    comp: Compression, payloads: Payload, ref: jnp.ndarray,
+    *, screen_nonfinite: bool = True,
+) -> jnp.ndarray:
+    """Each machine's dense reconstruction: (m, k_top, K) leaves -> (m, d, K).
+
+    Vmapped :func:`decode` against the SHARED reference.  The
+    fault-aware aggregation decodes raw (``screen_nonfinite=False``)
+    so its per-machine screen sees the poisoned values it must reject.
+    """
+    if comp.quantize == "int8":
+        return jax.vmap(
+            lambda v, i, s: decode(comp, Payload(v, i, s), ref,
+                                   screen_nonfinite=screen_nonfinite)
+        )(payloads.values, payloads.indices, payloads.scales)
+    return jax.vmap(
+        lambda v, i: decode(comp, Payload(v, i, None), ref,
+                            screen_nonfinite=screen_nonfinite)
+    )(payloads.values, payloads.indices)
+
+
 def decode_mean(
     comp: Compression, payloads: Payload, ref: jnp.ndarray
 ) -> jnp.ndarray:
@@ -272,15 +309,26 @@ def decode_mean(
     ``jnp.mean``/``pmean`` performs, which is what keeps the
     ``k_top = d`` identity case bit-exact with it.
     """
-    if comp.quantize == "int8":
-        dense = jax.vmap(
-            lambda v, i, s: decode(comp, Payload(v, i, s), ref)
-        )(payloads.values, payloads.indices, payloads.scales)
-    else:
-        dense = jax.vmap(
-            lambda v, i: decode(comp, Payload(v, i, None), ref)
-        )(payloads.values, payloads.indices)
-    return jnp.mean(dense, axis=0)
+    return jnp.mean(decode_stack(comp, payloads, ref), axis=0)
+
+
+def gather_payloads(
+    comp: Compression, payload: Payload, data_axes: Sequence[str]
+) -> Payload:
+    """All-gather one machine's payload leaves over the data axes.
+
+    The ONLY data a compressed round moves across the data axes, at
+    wire dtypes -- exactly what the ``AxisPayloadBits`` trace contract
+    pins.  Returns the (m, ...)-stacked :class:`Payload` every machine
+    then reconstructs identically.
+    """
+    axes = tuple(data_axes)
+    return Payload(
+        jax.lax.all_gather(payload.values, axes),
+        jax.lax.all_gather(payload.indices, axes),
+        jax.lax.all_gather(payload.scales, axes)
+        if comp.quantize == "int8" else None,
+    )
 
 
 def sparse_mean_mesh(
@@ -291,18 +339,9 @@ def sparse_mean_mesh(
 ) -> jnp.ndarray:
     """The compressed round's collective, from inside shard_map.
 
-    Replaces the dense (d, K) ``pmean`` over ``data_axes`` with an
-    ``all_gather`` of the (k_top, K) value/index pairs (plus the (K,)
-    scales in int8 mode) -- the ONLY data that crosses the data axes,
-    at wire dtypes, which is exactly what the ``AxisPayloadBits``
-    trace contract pins -- followed by the local reconstruction + mean
-    of :func:`decode_mean`.  Returns the replicated (d, K) aggregate.
+    Replaces the dense (d, K) ``pmean`` over ``data_axes`` with the
+    payload gather of :func:`gather_payloads` followed by the local
+    reconstruction + mean of :func:`decode_mean`.  Returns the
+    replicated (d, K) aggregate.
     """
-    axes = tuple(data_axes)
-    gathered = Payload(
-        jax.lax.all_gather(payload.values, axes),
-        jax.lax.all_gather(payload.indices, axes),
-        jax.lax.all_gather(payload.scales, axes)
-        if comp.quantize == "int8" else None,
-    )
-    return decode_mean(comp, gathered, ref)
+    return decode_mean(comp, gather_payloads(comp, payload, data_axes), ref)

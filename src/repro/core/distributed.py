@@ -58,6 +58,7 @@ from repro.analysis import (
 from repro.core import rounds as rounds_core, slda
 from repro.core.compression import Compression
 from repro.core.dantzig import DantzigConfig
+from repro.core.faults import Aggregation, FaultPlan, FaultSchedule
 from repro.core.pipeline import BinaryHead, MulticlassHead
 
 
@@ -72,6 +73,29 @@ def _shard_map(f, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
+def _materialize_plan(faults, mesh, data_axes, rounds, staleness):
+    """Resolve ``faults`` to a full (m, rounds) :class:`FaultPlan`.
+
+    The mesh faces accept either a :class:`FaultSchedule` (materialized
+    here against the mesh's machine count) or an already-built plan;
+    the per-machine rows then ride into shard_map as ONE extra sharded
+    operand per plan leaf (the "liveness operand" of DESIGN.md §11) so
+    each machine sees only its own (rounds,) row.
+    """
+    if faults is None:
+        return None
+    m = 1
+    for ax in data_axes:
+        m *= mesh.shape[ax]
+    if isinstance(faults, FaultSchedule):
+        faults = faults.plan(m, rounds, max(staleness, 1))
+    if faults.live.shape != (m, rounds):
+        raise ValueError(
+            f"FaultPlan leaves must be ({m}, {rounds}) for this mesh, "
+            f"got {faults.live.shape}")
+    return faults
+
+
 @trace_contract(
     "distributed.slda_shardmap",
     contracts=(
@@ -80,13 +104,19 @@ def _shard_map(f, mesh, in_specs, out_specs):
         # nothing else crosses the data axis (0 psums when compressed)
         CollectiveContract("psum", count=Param("dense_psums"), axis="data",
                            shape=Param("psum_payload"), dtype="float32"),
-        PrimitiveBudget("psum", exact=Param("dense_psums")),
+        # the DESIGN §11 liveness mask: one scalar f32 psum per masked
+        # dense round (0 on the legacy path), and nothing else -- the
+        # total psum budget closes the loophole
+        CollectiveContract("psum", count=Param("live_psums"), axis="data",
+                           shape=(), dtype="float32"),
+        PrimitiveBudget("psum", exact=Param("total_psums")),
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
         # compressed uplink: the payload gathers, and their exact bits
         CollectiveContract("all_gather", count=Param("data_gathers"),
                            axis="data"),
         AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
+        PrimitiveBudget("is_finite", exact=Param("screen_ops")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
         VmemConformance(),
@@ -104,6 +134,9 @@ def distributed_slda_shardmap(
     model_axis: str | None = "model",
     rounds: int = 1,
     compression: Compression | None = None,
+    faults: FaultPlan | FaultSchedule | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
 ) -> jnp.ndarray:
     """Distributed sparse LDA over a mesh (one-shot, or T-round refined).
 
@@ -120,25 +153,39 @@ def distributed_slda_shardmap(
         moves the top-k error-feedback payload instead (DESIGN.md §10)
         -- ``uplink_bits`` instead of ``dense_uplink_bits`` per link
         per round, with the fixed point preserved.
+      faults: a :class:`~repro.core.faults.FaultSchedule` (materialized
+        against this mesh's machine count) or an (m, rounds)
+        :class:`~repro.core.faults.FaultPlan`; each machine's row rides
+        in as a sharded liveness operand (DESIGN.md §11).
+      staleness: bound s on how many rounds a straggler's anchor lags.
+      aggregation: an :class:`~repro.core.faults.Aggregation` switches
+        the round close to the liveness-masked robust mean; None keeps
+        the legacy bit-exact unweighted pmean.
     Returns:
       beta_bar: (d,) aggregated sparse discriminant vector (replicated).
     """
     data_axes = tuple(data_axes)
     in_spec = P(data_axes, None)
     model_size = mesh.shape[model_axis] if model_axis is not None else 1
+    plan = _materialize_plan(faults, mesh, data_axes, rounds, staleness)
+    plan_args = tuple(plan) if plan is not None else ()
+    plan_specs = tuple(P(data_axes, None) for _ in plan_args)
 
-    def shard_fn(xs, ys):
+    def shard_fn(xs, ys, *plan_leaves):
+        row = (FaultPlan(*(leaf[0] for leaf in plan_leaves))
+               if plan_leaves else None)
         # ---- the T communication rounds of Algorithm 1 / DESIGN §8 ----
         beta_bar, _ = rounds_core.worker_rounds(
             BinaryHead(), xs, ys, lam=lam, lam_prime=lam_prime,
             rounds=rounds, cfg=cfg, data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
-            compression=compression,
+            compression=compression, faults=row, staleness=staleness,
+            aggregation=aggregation,
         )
         return slda.hard_threshold(beta_bar[:, 0], t)
 
-    fn = _shard_map(shard_fn, mesh, (in_spec, in_spec), P())
-    return fn(x, y)
+    fn = _shard_map(shard_fn, mesh, (in_spec, in_spec) + plan_specs, P())
+    return fn(x, y, *plan_args)
 
 
 @trace_contract(
@@ -153,6 +200,9 @@ def distributed_slda_shardmap(
         # ... plus exactly one (K, d) class-means psum, and nothing else
         CollectiveContract("psum", count=1, axis="data",
                            shape=Param("means_payload"), dtype="float32"),
+        # the liveness-mask scalar psum of masked rounds (DESIGN §11)
+        CollectiveContract("psum", count=Param("live_psums"), axis="data",
+                           shape=(), dtype="float32"),
         PrimitiveBudget("psum", exact=Param("total_psums")),
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
@@ -161,6 +211,7 @@ def distributed_slda_shardmap(
         CollectiveContract("all_gather", count=Param("data_gathers"),
                            axis="data"),
         AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
+        PrimitiveBudget("is_finite", exact=Param("screen_ops")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
         VmemConformance(),
@@ -179,6 +230,9 @@ def distributed_mc_slda_shardmap(
     model_axis: str | None = "model",
     rounds: int = 1,
     compression: Compression | None = None,
+    faults: FaultPlan | FaultSchedule | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Distributed K-class sparse LDA over a mesh (one-shot or T-round).
 
@@ -190,7 +244,11 @@ def distributed_mc_slda_shardmap(
     round-independent), and ``rounds`` > 1 refines the direction block
     around the aggregate exactly as in the binary driver (DESIGN.md §8).
     ``compression`` compresses the per-round direction uplink exactly as
-    in the binary driver (the one-time means pmean stays dense).
+    in the binary driver (the one-time means pmean stays dense);
+    ``faults`` / ``staleness`` / ``aggregation`` inject and tolerate
+    per-round machine faults exactly as in the binary driver (DESIGN.md
+    §11 -- the one-time means pmean is NOT fault-masked; it rides the
+    round-1 uplink in the paper's cost model).
 
     Args:
       x: (N, d) samples, shardable over the data axes.
@@ -200,14 +258,20 @@ def distributed_mc_slda_shardmap(
     """
     data_axes = tuple(data_axes)
     model_size = mesh.shape[model_axis] if model_axis is not None else 1
+    plan = _materialize_plan(faults, mesh, data_axes, rounds, staleness)
+    plan_args = tuple(plan) if plan is not None else ()
+    plan_specs = tuple(P(data_axes, None) for _ in plan_args)
 
-    def shard_fn(xs, labs):
+    def shard_fn(xs, labs, *plan_leaves):
+        row = (FaultPlan(*(leaf[0] for leaf in plan_leaves))
+               if plan_leaves else None)
         beta_bar, ws = rounds_core.worker_rounds(
             MulticlassHead(num_classes), xs, labs,
             lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg,
             data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
-            compression=compression,
+            compression=compression, faults=row, staleness=staleness,
+            aggregation=aggregation,
         )
         means = ws.stats.aux.means
         for ax in data_axes:
@@ -215,9 +279,10 @@ def distributed_mc_slda_shardmap(
         return slda.hard_threshold(beta_bar, t), means
 
     fn = _shard_map(
-        shard_fn, mesh, (P(data_axes, None), P(data_axes)), (P(), P())
+        shard_fn, mesh,
+        (P(data_axes, None), P(data_axes)) + plan_specs, (P(), P())
     )
-    return fn(x, labels)
+    return fn(x, labels, *plan_args)
 
 
 def naive_averaged_slda_shardmap(
@@ -252,7 +317,8 @@ def naive_averaged_slda_shardmap(
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rounds",
-                                             "compression"))
+                                             "compression", "faults",
+                                             "staleness", "aggregation"))
 def simulated_debiased_mean(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -261,6 +327,9 @@ def simulated_debiased_mean(
     cfg: DantzigConfig = DantzigConfig(),
     rounds: int = 1,
     compression: Compression | None = None,
+    faults: FaultSchedule | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
 ) -> jnp.ndarray:
     """Mean of debiased locals WITHOUT the hard threshold.
 
@@ -269,15 +338,20 @@ def simulated_debiased_mean(
     tuning free (HT is O(d)).  ``rounds`` > 1 applies the extra
     refinement rounds around the aggregate (DESIGN.md §8), sharing the
     per-machine solves across all rounds; ``compression`` runs them
-    over the top-k error-feedback uplink (DESIGN.md §10)."""
+    over the top-k error-feedback uplink (DESIGN.md §10); ``faults`` (a
+    hashable :class:`~repro.core.faults.FaultSchedule`, materialized
+    inside the jit) / ``staleness`` / ``aggregation`` exercise the
+    fault model of DESIGN.md §11."""
     beta_bar, _ = rounds_core.simulate_multi_round(
         BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
-        rounds=rounds, cfg=cfg, compression=compression)
+        rounds=rounds, cfg=cfg, compression=compression, faults=faults,
+        staleness=staleness, aggregation=aggregation)
     return beta_bar[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rounds",
-                                             "compression"))
+                                             "compression", "faults",
+                                             "staleness", "aggregation"))
 def simulated_distributed_slda(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -287,11 +361,15 @@ def simulated_distributed_slda(
     cfg: DantzigConfig = DantzigConfig(),
     rounds: int = 1,
     compression: Compression | None = None,
+    faults: FaultSchedule | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
 ) -> jnp.ndarray:
     """xs: (m, n1, d), ys: (m, n2, d) -> aggregated beta_bar (d,)."""
     return slda.hard_threshold(
         simulated_debiased_mean(xs, ys, lam, lam_prime, cfg, rounds,
-                                compression), t)
+                                compression, faults, staleness,
+                                aggregation), t)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -1,0 +1,359 @@
+"""Fault-tolerant aggregation for the refinement rounds (DESIGN.md §11).
+
+The paper's premise is m genuinely remote machines, yet every
+aggregation in :mod:`repro.core.rounds` assumed all m contribute a
+finite payload to every round -- one dropped, straggling, or corrupted
+uplink poisoned the round's mean for everyone, and the T-round
+schedule multiplies the exposure by T.  Both one-shot averaging (Lee
+et al.) and EDSL-style rounds (Wang et al.) tolerate a shrunken or
+stale contributor set as long as the aggregation is weighted by who
+actually showed up; this module makes that weighting explicit.
+
+Three pieces, all stateless:
+
+* :class:`FaultSchedule` -- a deterministic, seedable description of
+  per-machine / per-round faults (dropout, straggle-by-s-rounds,
+  payload corruption).  ``schedule.plan(m, rounds, bound)``
+  materializes it into a :class:`FaultPlan` of (m, rounds) arrays that
+  the drivers shard (mesh) or index (vmap twin).  The schedule itself
+  is a hashable NamedTuple of scalars, so it rides as a static
+  argument under ``jax.jit`` exactly like
+  :class:`~repro.core.dantzig.DantzigConfig`.
+* :class:`Aggregation` -- the robust-aggregation policy: screening of
+  non-finite / out-of-envelope payloads (a screened machine
+  contributes NOTHING to the round), liveness-masked mean that divides
+  by the live count instead of m, and an optional per-coordinate
+  trimmed mean dropping the top/bottom ``trim`` fraction.  If every
+  machine of a round is screened the round falls back to the
+  last-good aggregate -- no NaN ever escapes the loop.
+* wire-fault injection (:func:`corrupt_block` /
+  :func:`corrupt_payload`) -- what the receiver sees when an uplink is
+  corrupted: NaN / Inf fills, or finite "garbage" of magnitude
+  :data:`GARBAGE_MAGNITUDE` that only the envelope screen (or the
+  trimmed mean) catches.  int8-compressed uplinks corrupt the per
+  -column float32 scale -- the exact single-NaN-scale failure the
+  decode screen of :mod:`repro.core.compression` also guards.
+
+The mesh liveness mask travels as ONE extra scalar float32 psum on the
+data axis per masked dense round (the live count); the trimmed mean
+and the compressed masked path instead gather the per-machine blocks /
+weights (:func:`gather_machines`), which is why this module is on the
+``all_gather`` allow-list of :mod:`repro.analysis.imports`.  Both are
+budgeted by the ``AxisPayloadBits`` / ``live_psums`` /  ``screen_ops``
+params of the trace contracts in :mod:`repro.core.rounds` and
+:mod:`repro.core.distributed`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compression, Payload
+
+__all__ = [
+    "Aggregation",
+    "CORRUPT_GARBAGE",
+    "CORRUPT_INF",
+    "CORRUPT_NAN",
+    "CORRUPT_NONE",
+    "FaultPlan",
+    "FaultSchedule",
+    "GARBAGE_MAGNITUDE",
+    "LIVENESS_BITS",
+    "corrupt_block",
+    "corrupt_payload",
+    "gather_machines",
+    "masked_mean",
+    "screen_weight",
+    "select_anchor",
+    "trimmed_mean",
+]
+
+# corruption codes carried in FaultPlan.corrupt
+CORRUPT_NONE = 0
+CORRUPT_NAN = 1
+CORRUPT_INF = 2
+CORRUPT_GARBAGE = 3
+
+_CORRUPT_CODES = {"nan": CORRUPT_NAN, "inf": CORRUPT_INF,
+                  "garbage": CORRUPT_GARBAGE}
+CORRUPT_MODES = (*_CORRUPT_CODES, "mix")
+
+# magnitude of garbage corruption: FINITE, so the isfinite screen alone
+# does not catch it -- only the envelope screen or the trimmed mean do
+GARBAGE_MAGNITUDE = 1e12
+
+# wire width of the per-round liveness mask on the dense masked path:
+# one scalar float32 psum (the live count) rides next to the payload
+LIVENESS_BITS = 32
+
+
+class FaultPlan(NamedTuple):
+    """Materialized per-machine, per-round fault outcomes (arrays).
+
+    Leaves are (m, rounds) in driver/face hands, or (rounds,) inside
+    one mesh shard (this machine's row -- the per-machine liveness
+    operand the faces feed through ``shard_map``).
+
+    Attributes:
+      live: float32 1/0 -- 0 means the machine's round-t uplink is
+        dropped entirely (it contributes nothing and its error
+        -feedback residual carry is left untouched).
+      stale: int32 >= 0 -- a straggler's requested staleness: at round
+        t it re-submits its correction against the round-(t - s)
+        anchor.  Clipped to the caller's ``staleness`` bound (and to
+        t - 1) at use; 0 means fresh.
+      corrupt: int32 CORRUPT_* code applied to the machine's uplink ON
+        THE WIRE (the machine itself is honest: its residual carry
+        uses its own uncorrupted payload).
+    """
+
+    live: jnp.ndarray
+    stale: jnp.ndarray
+    corrupt: jnp.ndarray
+
+    @property
+    def rounds(self) -> int:
+        return self.live.shape[-1]
+
+    def row(self, t: int):
+        """Round-``t`` (1-indexed) slice: per-machine (live, stale, code)."""
+        return (self.live[..., t - 1], self.stale[..., t - 1],
+                self.corrupt[..., t - 1])
+
+
+class FaultSchedule(NamedTuple):
+    """Deterministic, seedable per-machine / per-round fault rates.
+
+    Hashable (floats + str + int), so it is a static jit argument.
+    Each (machine, round) cell draws dropout, straggle, and corruption
+    independently from ``PRNGKey(seed)``; :meth:`plan` materializes
+    the outcomes.  ``corrupt_mode`` picks the wire corruption --
+    ``"nan"`` / ``"inf"`` / ``"garbage"`` (finite, magnitude
+    :data:`GARBAGE_MAGNITUDE`) or ``"mix"`` cycling all three.
+    """
+
+    dropout: float = 0.0
+    straggle: float = 0.0
+    corrupt: float = 0.0
+    corrupt_mode: str = "nan"
+    seed: int = 0
+
+    def validate(self) -> None:
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(
+                f"corrupt_mode must be one of {CORRUPT_MODES}, "
+                f"got {self.corrupt_mode!r}")
+        for name, p in (("dropout", self.dropout),
+                        ("straggle", self.straggle),
+                        ("corrupt", self.corrupt)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+
+    def plan(self, m: int, rounds: int, max_staleness: int = 1) -> FaultPlan:
+        """Materialize the (m, rounds) outcome arrays.
+
+        Stragglers draw a staleness uniformly in [1, max_staleness];
+        the bound the round loop actually honors is its ``staleness``
+        kwarg (requests are clipped there), so passing the same bound
+        here just keeps the drawn values meaningful.
+        """
+        self.validate()
+        k_drop, k_strag, k_s, k_corr = jax.random.split(
+            jax.random.PRNGKey(self.seed), 4)
+        shape = (m, rounds)
+        live = (jax.random.uniform(k_drop, shape)
+                >= self.dropout).astype(jnp.float32)
+        strag = jax.random.uniform(k_strag, shape) < self.straggle
+        s = jax.random.randint(k_s, shape, 1, max(max_staleness, 1) + 1)
+        stale = jnp.where(strag, s, 0).astype(jnp.int32)
+        hit = jax.random.uniform(k_corr, shape) < self.corrupt
+        if self.corrupt_mode == "mix":
+            code = 1 + (jnp.arange(m)[:, None]
+                        + jnp.arange(rounds)[None, :]) % 3
+        else:
+            code = _CORRUPT_CODES[self.corrupt_mode]
+        corrupt = jnp.where(hit, code, CORRUPT_NONE).astype(jnp.int32)
+        return FaultPlan(live, stale, corrupt)
+
+
+class Aggregation(NamedTuple):
+    """Robust-aggregation policy for the refinement rounds.
+
+    ``None`` (in the drivers) keeps the legacy unweighted mean --
+    bit-exact with the PR 5 path when no faults are injected, and the
+    deliberately fragile baseline (dropped machines contribute zeros
+    diluted by m, corruption reaches the mean unscreened) when they
+    are.
+
+    Attributes:
+      trim: per-side trimmed fraction q in [0, 0.5).  0 (default) is
+        the liveness-masked mean; q > 0 sorts each coordinate over the
+        live machines and drops the top/bottom floor(q m) before
+        averaging (shrinking the cut so at least one value survives).
+      screen: screen each machine's contribution for non-finite values
+        -- a screened machine gets weight 0 for the round.
+      envelope: optional ceiling on |coordinate|; contributions beyond
+        it are screened like non-finite ones (the only per-machine
+        defense against FINITE garbage when ``trim == 0``).
+    """
+
+    trim: float = 0.0
+    screen: bool = True
+    envelope: float | None = None
+
+    def validate(self) -> None:
+        if not 0.0 <= self.trim < 0.5:
+            raise ValueError(f"trim must be in [0, 0.5), got {self.trim}")
+        if self.envelope is not None and not self.envelope > 0:
+            raise ValueError(
+                f"envelope must be positive, got {self.envelope}")
+
+
+# ---------------------------------------------------------------------------
+# Wire-fault injection (what the receiver sees)
+# ---------------------------------------------------------------------------
+
+
+def _garbage_like(x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic finite garbage: +-GARBAGE_MAGNITUDE by row parity."""
+    rows = jnp.arange(x.shape[0])
+    sign = jnp.where(rows % 2 == 0, 1.0, -1.0).astype(jnp.float32)
+    shape = sign.shape + (1,) * (x.ndim - 1)
+    return (GARBAGE_MAGNITUDE * sign.reshape(shape)
+            * jnp.ones_like(x, jnp.float32)).astype(x.dtype)
+
+
+def corrupt_block(code: jnp.ndarray, block: jnp.ndarray) -> jnp.ndarray:
+    """Apply wire-corruption ``code`` (scalar) to one dense (d, K) block.
+
+    The vmap twin maps this over the machine axis.  ``CORRUPT_NONE``
+    is the identity; the fills are deterministic so the injected
+    failure reproduces bit-for-bit from the schedule seed.
+    """
+    out = jnp.where(code == CORRUPT_NAN,
+                    jnp.asarray(jnp.nan, block.dtype), block)
+    out = jnp.where(code == CORRUPT_INF,
+                    jnp.asarray(jnp.inf, block.dtype), out)
+    return jnp.where(code == CORRUPT_GARBAGE, _garbage_like(block), out)
+
+
+def corrupt_payload(comp: Compression, code: jnp.ndarray,
+                    payload: Payload) -> Payload:
+    """Wire corruption of one machine's compressed uplink.
+
+    int8 mode corrupts the (K,) float32 dequantization scales (the
+    single-NaN-scale failure of DESIGN.md §11; garbage inflates them
+    by :data:`GARBAGE_MAGNITUDE`) -- the int8 values themselves cannot
+    encode a NaN.  Float modes corrupt the transmitted values
+    directly, exactly like :func:`corrupt_block`.
+    """
+    if comp.quantize == "int8":
+        s = payload.scales
+        bad = jnp.where(code == CORRUPT_NAN, jnp.asarray(jnp.nan, s.dtype), s)
+        bad = jnp.where(code == CORRUPT_INF, jnp.asarray(jnp.inf, s.dtype),
+                        bad)
+        bad = jnp.where(code == CORRUPT_GARBAGE, s * GARBAGE_MAGNITUDE, bad)
+        return payload._replace(scales=bad)
+    return payload._replace(values=corrupt_block(code, payload.values))
+
+
+# ---------------------------------------------------------------------------
+# Screening, masked and trimmed aggregation
+# ---------------------------------------------------------------------------
+
+
+def screen_weight(agg: Aggregation, block: jnp.ndarray) -> jnp.ndarray:
+    """Per-machine screening weight in {0., 1.} for one (d, K) block.
+
+    Non-finite anywhere -> 0 (when ``agg.screen``); any |coordinate|
+    over ``agg.envelope`` -> 0.  NaN compares false against the
+    envelope, so either check alone also rejects NaN blocks.  Returns
+    1. when both checks are disabled.
+    """
+    ok = None
+    if agg.screen:
+        ok = jnp.all(jnp.isfinite(block))
+    if agg.envelope is not None:
+        in_env = jnp.all(jnp.abs(block) <= agg.envelope)
+        ok = in_env if ok is None else ok & in_env
+    if ok is None:
+        return jnp.ones((), block.dtype)
+    return ok.astype(block.dtype)
+
+
+def masked_mean(stack: jnp.ndarray, w: jnp.ndarray):
+    """Liveness-masked mean over the machine axis of an (m, d, K) stack.
+
+    Zero-weight machines contribute NOTHING (selected out with
+    ``where``, never multiplied -- 0 * NaN would re-poison the sum)
+    and the divisor is the live count, not m.  Returns ``(mean,
+    count)``; with ``count == 0`` the mean is 0 and the caller falls
+    back to its last-good aggregate.
+    """
+    keep = (w > 0).reshape(w.shape + (1,) * (stack.ndim - 1))
+    den = jnp.sum(w)
+    num = jnp.sum(jnp.where(keep, stack, 0.0), axis=0)
+    return num / jnp.maximum(den, 1.0), den
+
+
+def trimmed_mean(stack: jnp.ndarray, w: jnp.ndarray, trim: float):
+    """Per-coordinate trimmed mean over the machine axis.
+
+    Dead/screened machines sort to the top as +inf and are excluded by
+    the rank mask; the per-side cut floor(trim * m) shrinks to
+    floor((live - 1) / 2) when few machines are live, so at least one
+    value survives whenever any machine is.  Returns ``(mean, count)``
+    with ``count`` the LIVE count (0 -> caller falls back).  NaN
+    contributions must be screened to weight 0 before trimming (sort
+    order against NaN is undefined) -- :class:`Aggregation` defaults
+    ``screen=True`` for exactly this reason.
+    """
+    m = stack.shape[0]
+    keep = (w > 0).reshape(w.shape + (1,) * (stack.ndim - 1))
+    srt = jnp.sort(jnp.where(keep, stack, jnp.inf), axis=0)
+    den = jnp.sum(w)
+    k_eff = jnp.clip(jnp.floor((den - 1.0) / 2.0), 0,
+                     int(trim * m)).astype(jnp.int32)
+    ranks = jnp.arange(m, dtype=jnp.int32)
+    mask = (ranks >= k_eff) & (ranks.astype(jnp.float32)
+                               < den - k_eff.astype(jnp.float32))
+    mask = mask.reshape((m,) + (1,) * (stack.ndim - 1))
+    count = den - 2.0 * k_eff.astype(jnp.float32)
+    num = jnp.sum(jnp.where(mask, srt, 0.0), axis=0)
+    return num / jnp.maximum(count, 1.0), den
+
+
+def select_anchor(history: Sequence[jnp.ndarray], stale: jnp.ndarray,
+                  t: int, bound: int) -> jnp.ndarray:
+    """Per-machine round-``t`` anchor under bounded staleness.
+
+    ``history[j - 1]`` is the round-j anchor (entry 0 the per-machine
+    round-1 anchor).  A straggler with requested staleness s anchors
+    at round t - s_eff, where s_eff clips s into [0, min(t - 1,
+    bound)] -- a machine can never be staler than the bound, nor reach
+    before round 1.  Mesh entries are (d, K) with scalar ``stale``;
+    sim entries are (m, d, K) with (m,) ``stale``.
+    """
+    stacked = jnp.stack(list(history)[:t])
+    idx = (t - 1) - jnp.clip(stale, 0, min(t - 1, bound))
+    if stacked.ndim == 3:  # mesh: one machine's scalar request
+        return jnp.take(stacked, idx, axis=0)
+    return jax.vmap(lambda hist, i: jnp.take(hist, i, axis=0),
+                    in_axes=(1, 0))(stacked, idx)
+
+
+def gather_machines(x: jnp.ndarray, data_axes: Sequence[str]) -> jnp.ndarray:
+    """Machine-stack ``x`` over the data axes: (...) -> (m, ...).
+
+    The mesh twin of the sim path's already-materialized machine axis,
+    used by the trimmed mean (which needs every machine's block) and
+    by the masked compressed path (which gathers the scalar liveness
+    weights next to the payload).  Lives here -- not in rounds.py --
+    because ``all_gather`` calls are allow-listed per module by
+    :func:`repro.analysis.imports.exclusive_call_violations`.
+    """
+    return jax.lax.all_gather(x, tuple(data_axes))

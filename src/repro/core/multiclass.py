@@ -105,6 +105,9 @@ def mc_multi_round_slda(
     rounds: int = 3,
     cfg: DantzigConfig = DantzigConfig(),
     compression: "_rounds.Compression | None" = None,
+    faults: "_rounds.FaultSchedule | None" = None,
+    staleness: int = 0,
+    aggregation: "_rounds.Aggregation | None" = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """T-round refined K-class estimator on stacked machine draws.
 
@@ -112,11 +115,13 @@ def mc_multi_round_slda(
     (beta_bar (d, K), means (K, d)) after ``rounds`` O(dK)
     communication rounds sharing one set of per-machine solves.
     ``compression`` swaps each round's dense direction uplink for the
-    top-k error-feedback payload (DESIGN.md §10).
+    top-k error-feedback payload (DESIGN.md §10); ``faults`` /
+    ``staleness`` / ``aggregation`` inject and tolerate per-round
+    machine faults (DESIGN.md §11).
     """
     return simulated_distributed_mc_slda(
         xs, labels, num_classes, lam, lam_prime, t, cfg, rounds,
-        compression)
+        compression, faults, staleness, aggregation)
 
 
 def mc_debiased_local_path(
@@ -151,7 +156,8 @@ def mc_debiased_local_path(
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "cfg", "rounds",
-                                             "compression"))
+                                             "compression", "faults",
+                                             "staleness", "aggregation"))
 def simulated_distributed_mc_slda(
     xs: jnp.ndarray,
     labels: jnp.ndarray,
@@ -162,6 +168,9 @@ def simulated_distributed_mc_slda(
     cfg: DantzigConfig = DantzigConfig(),
     rounds: int = 1,
     compression: "_rounds.Compression | None" = None,
+    faults: "_rounds.FaultSchedule | None" = None,
+    staleness: int = 0,
+    aggregation: "_rounds.Aggregation | None" = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """xs: (m, n, d), labels: (m, n) -> (beta_bar (d, K), means (K, d)).
 
@@ -169,14 +178,16 @@ def simulated_distributed_mc_slda(
     (d, K) blocks per round + hard threshold -- the multi-class
     analogue of the paper's schedule (``rounds=1`` one-shot, T > 1
     refined around the aggregate, DESIGN.md §8; ``compression``
-    compresses the per-round direction uplink, DESIGN.md §10).
-    Mesh-executed twin:
+    compresses the per-round direction uplink, DESIGN.md §10; the
+    fault knobs follow DESIGN.md §11 with ``faults`` a hashable
+    :class:`~repro.core.faults.FaultSchedule`).  Mesh-executed twin:
     :func:`repro.core.distributed.distributed_mc_slda_shardmap`.
     """
     beta_bar, ws = _rounds.simulate_multi_round(
         MulticlassHead(num_classes), (xs, labels),
         lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg,
-        compression=compression)
+        compression=compression, faults=faults, staleness=staleness,
+        aggregation=aggregation)
     return hard_threshold(beta_bar, t), jnp.mean(ws.stats.aux.means, axis=0)
 
 

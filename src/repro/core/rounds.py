@@ -37,7 +37,10 @@ Cost accounting (the whole point of the design):
   the data axes (T rounds = exactly T times the paper's per-round
   budget), plus the intra-machine model-axis ``all_gather`` of the
   correction slice -- inside a machine in the paper's cost model,
-  exactly as in the one-shot schedule.
+  exactly as in the one-shot schedule.  Masked aggregation
+  (DESIGN.md §11) adds ONE scalar f32 psum per round (the live
+  count); the trimmed mean and the masked compressed path gather
+  per-machine blocks/weights instead.
 * **Warm re-entry.**  ``collect_info=True`` threads both solves
   through the full dispatched result, so the returned
   :class:`~repro.core.pipeline.WorkerSolves` carries the warm
@@ -47,10 +50,14 @@ Cost accounting (the whole point of the design):
   restarting from zero -- with ``cfg.tol`` set, measurably fewer
   iterations (gated by ``benchmarks/multi_round.py``).
 
-The round loop body is a plain carry -> carry map (``lax.fori_loop``-
-able); the drivers unroll the T (static, small) rounds so the jaxpr
-pins in ``tests/test_rounds.py`` can count exactly T (d, K) ``pmean``s
-and ONE ``eigh`` per worker.
+The round-loop body itself lives ONCE in :func:`_refinement_rounds`:
+the mesh driver (:class:`_MeshRound`, collectives) and the vmap twin
+(:class:`_SimRound`, machine-axis reductions) supply only the
+axis-specific operations, so the two paths cannot drift -- the fault
+and staleness logic of :mod:`repro.core.faults` is written once and
+exercised identically by both.  The T (static, small) rounds unroll so
+the jaxpr pins can count exactly T (d, K) ``pmean``s and ONE ``eigh``
+per worker.
 """
 
 from __future__ import annotations
@@ -70,9 +77,11 @@ from repro.analysis import (
     trace_contract,
 )
 from repro.core import compression as compression_core
+from repro.core import faults as faults_core
 from repro.core import pipeline
 from repro.core.compression import Compression
 from repro.core.dantzig import AdmmState, DantzigConfig
+from repro.core.faults import Aggregation, FaultPlan, FaultSchedule
 from repro.core.pipeline import DiscriminantHead, WorkerSolves
 
 __all__ = [
@@ -99,6 +108,247 @@ def refine_step(ws: WorkerSolves, anchor: jnp.ndarray,
         ws.theta, ws.valid, resid, model_axis)
 
 
+class _MeshRound:
+    """One machine's view of a round: collectives aggregate (shard_map)."""
+
+    def __init__(self, ws: WorkerSolves, model_axis: str | None,
+                 data_axes: Sequence[str]):
+        self.ws = ws
+        self.model_axis = model_axis
+        self.data_axes = tuple(data_axes)
+
+    def correction(self, anchor):
+        return refine_step(self.ws, anchor, self.model_axis)
+
+    def mean(self, x):
+        for ax in self.data_axes:
+            x = jax.lax.pmean(x, ax)
+        return x
+
+    def sum(self, x):
+        for ax in self.data_axes:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    def stack(self, x):
+        """Machine-stack a per-machine value: (...) -> (m, ...)."""
+        return faults_core.gather_machines(x, self.data_axes)
+
+    def expand(self, w):
+        return w  # this machine's scalar weight broadcasts against (d, K)
+
+    def corrupt(self, code, block):
+        return faults_core.corrupt_block(code, block)
+
+    def screen(self, agg, block):
+        return faults_core.screen_weight(agg, block)
+
+    def broadcast(self, bar):
+        return bar  # already this machine's replicated copy
+
+    def agg_zeros(self, anchor):
+        return jnp.zeros_like(anchor)
+
+    def ef(self, comp, message, resid, ref):
+        return compression_core.ef_step(comp, message, resid, ref)
+
+    def corrupt_payload(self, comp, code, payload):
+        return faults_core.corrupt_payload(comp, code, payload)
+
+    def sparse_mean(self, comp, payload, ref):
+        return compression_core.sparse_mean_mesh(
+            comp, payload, ref, self.data_axes)
+
+    def stack_payload(self, comp, payload):
+        return compression_core.gather_payloads(
+            comp, payload, self.data_axes)
+
+
+class _SimRound:
+    """The vmap twin: machines are a leading axis, reductions are local."""
+
+    def __init__(self, ws: WorkerSolves):
+        self.ws = ws
+        self.m = ws.beta_hat.shape[0]
+
+    def correction(self, anchor):
+        return jax.vmap(refine_step)(self.ws, anchor)
+
+    def mean(self, x):
+        return jnp.mean(x, axis=0)  # the round's one "pmean"
+
+    def sum(self, x):
+        return jnp.sum(x, axis=0)
+
+    def stack(self, x):
+        return x  # the machine axis is already materialized
+
+    def expand(self, w):
+        return w.reshape(w.shape + (1, 1))
+
+    def corrupt(self, code, block):
+        return jax.vmap(faults_core.corrupt_block)(code, block)
+
+    def screen(self, agg, block):
+        return jax.vmap(lambda b: faults_core.screen_weight(agg, b))(block)
+
+    def broadcast(self, bar):
+        return jnp.broadcast_to(bar[None], (self.m,) + bar.shape)
+
+    def agg_zeros(self, anchor):
+        return jnp.zeros(anchor.shape[1:], anchor.dtype)
+
+    def ef(self, comp, message, resid, ref):
+        return jax.vmap(lambda msg, res: compression_core.ef_step(
+            comp, msg, res, ref))(message, resid)
+
+    def corrupt_payload(self, comp, code, payload):
+        return jax.vmap(lambda c, p: faults_core.corrupt_payload(
+            comp, c, p))(code, payload)
+
+    def sparse_mean(self, comp, payload, ref):
+        return compression_core.decode_mean(comp, payload, ref)
+
+    def stack_payload(self, comp, payload):
+        return payload
+
+
+def _refinement_rounds(
+    drv,
+    *,
+    rounds: int,
+    anchor: jnp.ndarray,
+    compression: Compression | None = None,
+    ef_residual: jnp.ndarray | None = None,
+    plan: FaultPlan | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
+    ref: jnp.ndarray | None = None,
+    return_all_rounds: bool = False,
+):
+    """The ONE T-round body both drivers run (DESIGN.md §8/§10/§11).
+
+    ``drv`` supplies the axis-specific operations (mesh collectives vs
+    machine-axis reductions); everything else -- the anchor/EF-residual
+    /reference iteration, fault injection, screening, masked/trimmed
+    aggregation, bounded staleness, and the last-good fallback -- is
+    written exactly once so the mesh and vmap twins cannot drift.
+
+    With ``plan is None and aggregation is None`` the branches reduce
+    LITERALLY to the pre-fault code path: the legacy jaxpr (and its
+    golden pins) is reproduced bit for bit.  ``ref`` seeds the
+    compressed stream's reference on re-entry (the previous replicated
+    aggregate); None starts at zeros, the round-1 convention.
+
+    Returns ``(bar-or-trajectory, final EF residual | None)``.
+    """
+    masked = aggregation is not None
+    faulted = plan is not None
+    if masked:
+        aggregation.validate()
+        # replicated, so an ALL-dead final round still returns a value
+        # every machine agrees on (zeros before any round succeeded)
+        last_good = drv.agg_zeros(anchor)
+    resid = ef_residual
+    if compression is not None:
+        if resid is None:
+            resid = jnp.zeros_like(anchor)
+        if ref is None:
+            # round-1 reference is zeros (the anchor is still
+            # per-machine); afterwards the replicated aggregate
+            ref = drv.agg_zeros(anchor)
+    history = [anchor]  # entry j-1 = the round-j anchor
+    bars = []
+    for t in range(1, rounds + 1):  # static T: the jaxpr shows T rounds
+        live = code = None
+        if faulted:
+            live, stale, code = plan.row(t)
+        a = history[-1]
+        if faulted and staleness > 0 and t > 1:
+            a = faults_core.select_anchor(history, stale, t, staleness)
+        beta_tilde = drv.correction(a)
+        if compression is None:
+            wire = drv.corrupt(code, beta_tilde) if faulted else beta_tilde
+            if not masked and not faulted:
+                bar = drv.mean(wire)  # the legacy bit-exact round
+            elif not masked:
+                # the fragile baseline under faults: a dropped machine's
+                # slot contributes zeros but the divisor stays m, and
+                # corrupt payloads reach the mean unscreened
+                bar = drv.mean(jnp.where(drv.expand(live) > 0, wire, 0.0))
+            else:
+                w = drv.screen(aggregation, wire)
+                if faulted:
+                    w = live * w
+                if aggregation.trim > 0:
+                    bar, den = faults_core.trimmed_mean(
+                        drv.stack(wire), drv.stack(w), aggregation.trim)
+                else:
+                    # select, never multiply: 0 * NaN would re-poison
+                    num = drv.sum(jnp.where(drv.expand(w) > 0, wire, 0.0))
+                    den = drv.sum(w)  # the liveness mask on the wire
+                    bar = num / jnp.maximum(den, 1.0)
+                bar = jnp.where(den > 0, bar, last_good)
+                last_good = bar
+        else:
+            payload, new_resid = drv.ef(compression, beta_tilde, resid, ref)
+            if faulted:
+                # a dropped machine computed nothing this round: its EF
+                # carry is untouched.  Corruption happens on the WIRE,
+                # after the (honest) machine updated its own residual.
+                resid = jnp.where(drv.expand(live) > 0, new_resid, resid)
+                payload = drv.corrupt_payload(compression, code, payload)
+            else:
+                resid = new_resid
+            if not masked and not faulted:
+                bar = drv.sparse_mean(compression, payload, ref)  # legacy
+            else:
+                stacked = drv.stack_payload(compression, payload)
+                w_live = drv.stack(live) if faulted else None
+                if masked:
+                    # decode RAW: the screen must see poisoned values to
+                    # zero the whole machine, not a ref-filled repair
+                    dense = compression_core.decode_stack(
+                        compression, stacked, ref, screen_nonfinite=False)
+                    w = jax.vmap(lambda b: faults_core.screen_weight(
+                        aggregation, b))(dense)
+                    if w_live is not None:
+                        w = w_live * w
+                    if aggregation.trim > 0:
+                        bar, den = faults_core.trimmed_mean(
+                            dense, w, aggregation.trim)
+                    else:
+                        bar, den = faults_core.masked_mean(dense, w)
+                    bar = jnp.where(den > 0, bar, last_good)
+                    last_good = bar
+                else:
+                    # fragile baseline: a dropped machine's missing
+                    # payload decodes to the reference (set semantics),
+                    # still diluting the mean by the full m
+                    dense = compression_core.decode_stack(
+                        compression, stacked, ref)
+                    keep = (w_live > 0).reshape(w_live.shape + (1, 1))
+                    bar = jnp.mean(jnp.where(keep, dense, ref), axis=0)
+            ref = bar
+        bars.append(bar)
+        history.append(drv.broadcast(bar))
+    out = jnp.stack(bars) if return_all_rounds else bars[-1]
+    return out, (resid if compression is not None else None)
+
+
+def _check_plan(faults, expect_shape, where: str):
+    if faults is None:
+        return
+    if isinstance(faults, FaultSchedule):
+        raise TypeError(
+            f"{where} takes a materialized FaultPlan (the faces call "
+            "FaultSchedule.plan(m, rounds, staleness)); got a schedule")
+    if faults.live.shape != expect_shape:
+        raise ValueError(
+            f"{where}: FaultPlan leaves must be {expect_shape}, got "
+            f"{faults.live.shape}")
+
+
 @trace_contract(
     "rounds.worker_rounds",
     contracts=(
@@ -109,17 +359,23 @@ def refine_step(ws: WorkerSolves, anchor: jnp.ndarray,
         # a compressed trace must hold NO dense data-axis psum at all)
         CollectiveContract("psum", count=Param("dense_psums"), axis="data",
                            shape=Param("psum_payload"), dtype="float32"),
-        PrimitiveBudget("psum", exact=Param("dense_psums")),
+        # the liveness mask of DESIGN.md §11: one scalar f32 psum (the
+        # live count) per masked dense round, nothing on the legacy path
+        CollectiveContract("psum", count=Param("live_psums"), axis="data",
+                           shape=(), dtype="float32"),
+        PrimitiveBudget("psum", exact=Param("total_psums")),
         # intra-machine CLIME reassembly: one model-axis gather per round
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
-        # the COMPRESSED uplink: values/indices(/scales) gathers over the
-        # data axis (0 on the dense path) ...
+        # the COMPRESSED uplink payload gathers, plus the fault layer's
+        # block/weight gathers (0 on the legacy dense path) ...
         CollectiveContract("all_gather", count=Param("data_gathers"),
                            axis="data"),
-        # ... and the total bits they move per link, exactly: a hidden
-        # dense block anywhere on the data axis blows this budget
+        # ... and the total bits everything moves per link, exactly: a
+        # hidden dense block anywhere on the data axis blows this budget
         AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
+        # per-machine screening + decode sanitization are is_finite eqns
+        PrimitiveBudget("is_finite", exact=Param("screen_ops")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
         VmemConformance(),
@@ -137,6 +393,10 @@ def worker_rounds(
     model_axis_size: int = 1,
     compression: Compression | None = None,
     ef_residual: jnp.ndarray | None = None,
+    resume_from: jnp.ndarray | None = None,
+    faults: FaultPlan | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
     rho_beta: jnp.ndarray | None = None,
     rho_theta: jnp.ndarray | None = None,
     state_beta: AdmmState | None = None,
@@ -159,6 +419,19 @@ def worker_rounds(
     by default).  ``rounds=1`` dense reproduces the one-shot worker +
     single averaging round of Algorithm 1 exactly.
 
+    Fault tolerance (DESIGN.md §11): ``faults`` is THIS machine's
+    :class:`~repro.core.faults.FaultPlan` row ((rounds,) leaves -- the
+    per-machine liveness operand the faces shard in);
+    ``aggregation`` switches the round close to the liveness-masked
+    (or trimmed) robust mean of :mod:`repro.core.faults`;
+    ``staleness`` bounds how many rounds a straggler's anchor may lag.
+    All three default to the legacy fragile-but-bit-exact path.
+
+    ``resume_from`` re-enters a round stream mid-way: it seeds the
+    round-1 anchor AND the compressed reference with the previous
+    replicated aggregate, so a split T-round run (with the carried
+    ``ef_residual``) matches an uninterrupted one.
+
     Returns ``(beta_bar, solves)``: the replicated (d, K) aggregate
     (un-thresholded -- the master's hard threshold is the caller's
     O(dK) postlude) and the worker's solves for reuse/warm re-entry.
@@ -168,6 +441,7 @@ def worker_rounds(
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
+    _check_plan(faults, (rounds,), "worker_rounds")
     ws = pipeline.worker_solves(
         head, *data, lam=lam, lam_prime=lam_prime, cfg=cfg,
         model_axis=model_axis, model_axis_size=model_axis_size,
@@ -175,28 +449,14 @@ def worker_rounds(
         state_beta=state_beta, state_theta=state_theta,
         full=collect_info,
     )
-    anchor = ws.beta_hat
-    resid = ef_residual
-    if compression is None:
-        for _ in range(rounds):  # static T: the jaxpr shows T pmeans
-            beta_tilde = refine_step(ws, anchor, model_axis)
-            for ax in data_axes:
-                beta_tilde = jax.lax.pmean(beta_tilde, ax)
-            anchor = beta_tilde  # replicated: next round anchors here
-    else:
+    anchor = ws.beta_hat if resume_from is None else resume_from
+    if compression is not None:
         compression.validate(anchor.shape[0])
-        if resid is None:
-            resid = jnp.zeros_like(anchor)
-        # round-1 reference is zeros (the anchor is still per-machine);
-        # afterwards it is the replicated aggregate every machine holds
-        ref = jnp.zeros_like(anchor)
-        for _ in range(rounds):
-            beta_tilde = refine_step(ws, anchor, model_axis)
-            payload, resid = compression_core.ef_step(
-                compression, beta_tilde, resid, ref)
-            anchor = compression_core.sparse_mean_mesh(
-                compression, payload, ref, data_axes)
-            ref = anchor
+    anchor, resid = _refinement_rounds(
+        _MeshRound(ws, model_axis, data_axes),
+        rounds=rounds, anchor=anchor, compression=compression,
+        ef_residual=ef_residual, plan=faults, staleness=staleness,
+        aggregation=aggregation, ref=resume_from)
     if return_ef_residual:
         return anchor, ws, resid
     return anchor, ws
@@ -208,6 +468,10 @@ def simulate_round_loop(
     rounds: int,
     compression: Compression | None = None,
     ef_residual: jnp.ndarray | None = None,
+    resume_from: jnp.ndarray | None = None,
+    faults: FaultPlan | FaultSchedule | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
     return_all_rounds: bool = False,
     return_ef_residual: bool = False,
 ):
@@ -216,17 +480,18 @@ def simulate_round_loop(
     ``ws`` is an (m, ...)-stacked :class:`WorkerSolves` (the output of
     :func:`simulate_multi_round`'s vmap).  Splitting the loop from the
     solves lets one set of per-machine solves -- the expensive part --
-    drive many round schedules: the compressed-uplink benchmark replays
-    the SAME solves under every :class:`Compression` config, so
-    accuracy-vs-bits curves differ only in the uplink.
+    drive many round schedules: the compressed-uplink and fault
+    benchmarks replay the SAME solves under every
+    :class:`Compression` / :class:`~repro.core.faults.FaultSchedule`
+    config, so the curves differ only in the uplink and its faults.
 
-    Dense (``compression=None``): T rounds of machine-axis ``mean``
-    where the mesh does its ``pmean``.  Compressed: each machine's
-    round message runs through top-k error feedback
-    (:func:`~repro.core.compression.ef_step`, residual seeded by
-    ``ef_residual`` or zero) and the aggregate is the decoded mean of
-    the m payloads -- the exact math of the mesh path's
-    :func:`~repro.core.compression.sparse_mean_mesh`.
+    Same shared round body as the mesh path
+    (:func:`_refinement_rounds`), with machine-axis reductions where
+    the mesh does collectives.  ``faults`` accepts a materialized
+    :class:`~repro.core.faults.FaultPlan` ((m, rounds) leaves) or a
+    :class:`~repro.core.faults.FaultSchedule` (materialized here);
+    ``aggregation`` / ``staleness`` / ``resume_from`` as in
+    :func:`worker_rounds`.
 
     Returns ``beta_bar`` (d, K), or the (rounds, d, K) trajectory when
     ``return_all_rounds``; with ``return_ef_residual`` a trailing
@@ -234,31 +499,19 @@ def simulate_round_loop(
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
-    anchor = ws.beta_hat  # (m, d, K)
-    resid = ef_residual
-    ref = None
+    drv = _SimRound(ws)
+    if isinstance(faults, FaultSchedule):
+        faults = faults.plan(drv.m, rounds, max(staleness, 1))
+    _check_plan(faults, (drv.m, rounds), "simulate_round_loop")
+    anchor = (ws.beta_hat if resume_from is None
+              else drv.broadcast(resume_from))
     if compression is not None:
         compression.validate(anchor.shape[1])
-        if resid is None:
-            resid = jnp.zeros_like(anchor)
-        # round-1 reference is zeros (the anchor is still per-machine);
-        # afterwards it is the aggregate every machine holds
-        ref = jnp.zeros(anchor.shape[1:], anchor.dtype)
-    bars = []
-    for _ in range(rounds):
-        beta_tilde = jax.vmap(refine_step)(ws, anchor)  # (m, d, K)
-        if compression is None:
-            bar = jnp.mean(beta_tilde, axis=0)  # the round's one pmean
-        else:
-            payload, resid = jax.vmap(
-                lambda msg, res: compression_core.ef_step(
-                    compression, msg, res, ref)
-            )(beta_tilde, resid)
-            bar = compression_core.decode_mean(compression, payload, ref)
-            ref = bar
-        bars.append(bar)
-        anchor = jnp.broadcast_to(bar[None], beta_tilde.shape)
-    out = jnp.stack(bars) if return_all_rounds else bars[-1]
+    out, resid = _refinement_rounds(
+        drv, rounds=rounds, anchor=anchor, compression=compression,
+        ef_residual=ef_residual, plan=faults, staleness=staleness,
+        aggregation=aggregation, ref=resume_from,
+        return_all_rounds=return_all_rounds)
     if return_ef_residual:
         return out, resid
     return out
@@ -274,6 +527,9 @@ def simulate_multi_round(
     cfg: DantzigConfig = DantzigConfig(),
     compression: Compression | None = None,
     ef_residual: jnp.ndarray | None = None,
+    faults: FaultPlan | FaultSchedule | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
     rho_beta: jnp.ndarray | None = None,
     rho_theta: jnp.ndarray | None = None,
     state_beta: AdmmState | None = None,
@@ -288,8 +544,10 @@ def simulate_multi_round(
     Identical math to the mesh path: per-machine solves under ``vmap``,
     then the round loop of :func:`simulate_round_loop` -- a machine-axis
     ``mean`` per dense round, or the top-k error-feedback payload mean
-    when ``compression`` is set.  Warm carries are the (m, ...)-stacked
-    fields of a previous invocation's returned :class:`WorkerSolves`.
+    when ``compression`` is set, under the same ``faults`` /
+    ``staleness`` / ``aggregation`` fault model as the mesh.  Warm
+    carries are the (m, ...)-stacked fields of a previous invocation's
+    returned :class:`WorkerSolves`.
 
     Returns ``(beta_bar, solves)`` with ``beta_bar`` (d, K), or
     (rounds, d, K) -- the whole per-round trajectory -- when
@@ -310,5 +568,6 @@ def simulate_multi_round(
     ws = jax.vmap(one_machine)(tuple(data), warms)
     out = simulate_round_loop(
         ws, rounds=rounds, compression=compression,
-        ef_residual=ef_residual, return_all_rounds=return_all_rounds)
+        ef_residual=ef_residual, faults=faults, staleness=staleness,
+        aggregation=aggregation, return_all_rounds=return_all_rounds)
     return out, ws

@@ -90,7 +90,8 @@ def debiased_local_estimator(
 
 
 @functools.partial(jax.jit, static_argnames=("rounds", "cfg",
-                                             "compression"))
+                                             "compression", "faults",
+                                             "staleness", "aggregation"))
 def multi_round_slda(
     xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -100,6 +101,9 @@ def multi_round_slda(
     rounds: int = 3,
     cfg: DantzigConfig = DantzigConfig(),
     compression: "_rounds.Compression | None" = None,
+    faults: "_rounds.FaultSchedule | None" = None,
+    staleness: int = 0,
+    aggregation: "_rounds.Aggregation | None" = None,
 ) -> jnp.ndarray:
     """T-round refined distributed estimator on stacked machine draws.
 
@@ -107,13 +111,17 @@ def multi_round_slda(
     beta_bar (d,) after ``rounds`` O(d) communication rounds, all
     sharing one set of per-machine solves (``rounds=1`` is the paper's
     one-shot aggregate).  ``compression`` swaps each round's dense
-    uplink for the top-k error-feedback payload (DESIGN.md §10).  Mesh
-    twin: :func:`repro.core.distributed.distributed_slda_shardmap` with
-    the same ``rounds=`` / ``compression=``.
+    uplink for the top-k error-feedback payload (DESIGN.md §10);
+    ``faults`` (a hashable :class:`~repro.core.faults.FaultSchedule`) /
+    ``staleness`` / ``aggregation`` inject and tolerate per-round
+    machine faults (DESIGN.md §11).  Mesh twin:
+    :func:`repro.core.distributed.distributed_slda_shardmap` with
+    the same ``rounds=`` / ``compression=`` / fault knobs.
     """
     beta_bar, _ = _rounds.simulate_multi_round(
         BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
-        rounds=rounds, cfg=cfg, compression=compression)
+        rounds=rounds, cfg=cfg, compression=compression, faults=faults,
+        staleness=staleness, aggregation=aggregation)
     return hard_threshold(beta_bar[:, 0], t)
 
 

@@ -1,0 +1,119 @@
+"""CI-gate skip semantics: skips are NOTICES, never silent passes.
+
+The gate declines to measure things for legitimate reasons (no
+committed baseline in git, cross-host timings, a benchmark that wasn't
+run) -- but every such decline must land in the machine-readable skip
+tally that ``main()`` prints, with non-zero exit reserved for real
+failures.  A missing committed baseline that produced neither a
+failure nor a notice would be a silent pass: the exact bug these tests
+pin against.  Pure-python (no jax): reads ``benchmarks.ci_gate``
+directly against synthetic payloads.
+"""
+
+from __future__ import annotations
+
+import json
+
+import benchmarks.ci_gate as cg
+
+
+def _fault_gate(**kw):
+    g = dict(d=100, m=60, rounds=3, dropout=0.1,
+             rec_nofault=0.54, rec_masked=0.57, rec_unmasked=0.38,
+             f1_nofault=1.0, f1_masked=1.0, f1_unmasked=1.0,
+             rec_slack=0.10, f1_slack=0.02)
+    g.update(kw)
+    return {"faults": g}
+
+
+def test_missing_committed_baseline_is_notice_not_silent_pass(
+        monkeypatch, capsys):
+    monkeypatch.setattr(cg, "_committed_baseline", lambda name: None)
+    cg.SKIP_NOTICES.clear()
+    failures: list = []
+    cg._gate_faults(_fault_gate(), failures)
+    assert failures == []
+    notices = [n for n in cg.SKIP_NOTICES if n["name"] == "fault_rounds"]
+    assert notices and "baseline" in notices[0]["reason"]
+    # and the notice is printed, not just recorded
+    assert "[ci_gate] SKIP fault_rounds" in capsys.readouterr().out
+
+
+def test_fault_gate_fails_when_masked_recovery_degrades(monkeypatch):
+    monkeypatch.setattr(cg, "_committed_baseline", lambda name: None)
+    cg.SKIP_NOTICES.clear()
+    failures: list = []
+    cg._gate_faults(_fault_gate(rec_masked=0.30), failures)
+    assert any("below the no-fault" in f for f in failures)
+
+
+def test_fault_gate_fails_when_unmasked_does_not_degrade(monkeypatch):
+    """A fault layer whose fragile baseline doesn't degrade proves the
+    injection isn't biting -- that's a failure, not a pass."""
+    monkeypatch.setattr(cg, "_committed_baseline", lambda name: None)
+    cg.SKIP_NOTICES.clear()
+    failures: list = []
+    cg._gate_faults(_fault_gate(rec_unmasked=0.54), failures)
+    assert any("not biting" in f for f in failures)
+
+
+def test_fault_gate_cross_pr_f1_drift_fails(monkeypatch):
+    base = _fault_gate()
+    base["generated_unix"] = 1  # volatile keys must be stripped
+    base["host"] = "elsewhere"
+    monkeypatch.setattr(cg, "_committed_baseline",
+                        lambda name: dict(base, _baseline_ref="HEAD"))
+    cg.SKIP_NOTICES.clear()
+    failures: list = []
+    cg._gate_faults(_fault_gate(f1_masked=0.90), failures)
+    assert any("drifted" in f for f in failures)
+
+
+def test_fault_gate_operating_point_change_skips_cross_pr(monkeypatch):
+    base = _fault_gate(m=80)  # baseline recorded at a different point
+    monkeypatch.setattr(cg, "_committed_baseline",
+                        lambda name: dict(base, _baseline_ref="HEAD"))
+    cg.SKIP_NOTICES.clear()
+    failures: list = []
+    cg._gate_faults(_fault_gate(), failures)
+    assert failures == []
+    assert any(n["name"] == "fault_rounds"
+               and "operating point" in n["reason"]
+               for n in cg.SKIP_NOTICES)
+
+
+def test_main_emits_machine_readable_skip_tally(
+        monkeypatch, tmp_path, capsys):
+    """main() with only fused_solver present: every other benchmark
+    skips with a notice, the tally line parses as JSON with a count,
+    and the exit stays zero (skips never flip it)."""
+    fused = {"rows": [{"d": 8, "k": 2, "L": 1, "max_abs_diff": 0.0}]}
+    (tmp_path / "BENCH_fused_solver.json").write_text(json.dumps(fused))
+    monkeypatch.setattr(cg, "bench_json_path",
+                        lambda name: str(tmp_path / f"BENCH_{name}.json"))
+    monkeypatch.setattr(cg, "_committed_baseline", lambda name: None)
+    rc = cg.main()
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines()
+             if ln.startswith("[ci_gate] skips ")]
+    assert len(lines) == 1
+    tally = json.loads(lines[0][len("[ci_gate] skips "):])
+    assert rc == 0
+    assert tally["count"] == len(tally["notices"]) == len(cg.GATED)
+    names = {n["name"] for n in tally["notices"]}
+    # 5 missing-file skips + the fused_solver wall-clock baseline skip
+    assert names == set(cg.GATED)
+
+
+def test_main_fails_closed_when_fused_solver_missing(
+        monkeypatch, tmp_path, capsys):
+    """The anchor benchmark is NOT skippable: its absence is a failure,
+    and the skip tally still prints for the rest."""
+    monkeypatch.setattr(cg, "bench_json_path",
+                        lambda name: str(tmp_path / f"BENCH_{name}.json"))
+    monkeypatch.setattr(cg, "_committed_baseline", lambda name: None)
+    rc = cg.main()
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert any(ln.startswith("[ci_gate] skips ")
+               for ln in out.splitlines())

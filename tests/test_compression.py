@@ -176,6 +176,56 @@ def test_decode_mean_matches_manual_mean():
 
 
 # ---------------------------------------------------------------------------
+# wire screening: corrupted payloads cannot poison the decode
+# ---------------------------------------------------------------------------
+
+
+def test_decode_screens_corrupted_int8_scale_column():
+    """Regression (DESIGN.md §11): ONE corrupted float32 scale column in
+    an int8 payload NaN-poisons every decoded coordinate of that column.
+    The default decode screens non-finite outputs back to the reference;
+    ``screen_nonfinite=False`` (the fault layer's RAW view, so a whole
+    machine can be screened instead of silently repaired) propagates."""
+    key1, key2 = jax.random.split(jax.random.PRNGKey(12))
+    u = jax.random.normal(key1, (24, 3))
+    ref = jax.random.normal(key2, (24, 3))
+    comp = Compression(6, "int8")
+    payload = C.encode(comp, u, ref)
+    bad = payload._replace(
+        scales=payload.scales.at[1].set(jnp.nan))
+    clean = np.asarray(C.decode(comp, payload, ref))
+
+    screened = np.asarray(C.decode(comp, bad, ref))
+    assert np.isfinite(screened).all()
+    # the poisoned column falls back to the reference at its corrupted
+    # coordinates; the other columns are untouched
+    np.testing.assert_array_equal(screened[:, [0, 2]], clean[:, [0, 2]])
+    sel = np.asarray(bad.indices[:, 1]).tolist()
+    np.testing.assert_array_equal(screened[sel, 1],
+                                  np.asarray(ref)[sel, 1])
+
+    raw = np.asarray(C.decode(comp, bad, ref, screen_nonfinite=False))
+    assert np.isnan(raw[sel, 1]).all()
+    np.testing.assert_array_equal(raw[:, [0, 2]], clean[:, [0, 2]])
+
+
+def test_decode_screens_nonfinite_float_values():
+    """Float-mode corruption lands in the transmitted values directly;
+    the decode screen repairs exactly those coordinates to the ref."""
+    u = jnp.asarray([[3.0], [2.0], [1.0], [0.5]])
+    ref = jnp.zeros((4, 1))
+    comp = Compression(2)
+    payload = C.encode(comp, u, ref)
+    bad = payload._replace(values=payload.values.at[0, 0].set(jnp.inf))
+    out = np.asarray(C.decode(comp, bad, ref))
+    assert np.isfinite(out).all()
+    poisoned = int(np.asarray(bad.indices)[0, 0])
+    intact = int(np.asarray(bad.indices)[1, 0])
+    assert out[poisoned, 0] == 0.0  # repaired to the reference
+    assert out[intact, 0] == float(np.asarray(u)[intact, 0])
+
+
+# ---------------------------------------------------------------------------
 # identity codec == dense rounds, bit for bit (the PR 5 fixed point)
 # ---------------------------------------------------------------------------
 
@@ -324,7 +374,8 @@ def test_compressed_trace_no_dense_psum_pinned_bits():
     assert count_eqns(jaxpr, "all_gather") == t_rounds * 3
     violations = check_entry(
         "distributed.slda_shardmap", jaxpr,
-        {"rounds": t_rounds, "dense_psums": 0,
+        {"rounds": t_rounds, "dense_psums": 0, "live_psums": 0,
+         "total_psums": 0, "screen_ops": 2 * t_rounds,
          "data_gathers": 2 * t_rounds,
          "data_uplink_bits": t_rounds * C.uplink_bits(comp, d, 1),
          "psum_payload": (d, 1), "pallas_calls": 0})
@@ -341,7 +392,8 @@ def test_compressed_trace_rejects_dense_bit_budget():
     jaxpr = _compressed_trace(d, t_rounds, comp)
     violations = check_entry(
         "distributed.slda_shardmap", jaxpr,
-        {"rounds": t_rounds, "dense_psums": 0,
+        {"rounds": t_rounds, "dense_psums": 0, "live_psums": 0,
+         "total_psums": 0, "screen_ops": 2 * t_rounds,
          "data_gathers": 2 * t_rounds,
          "data_uplink_bits": t_rounds * C.dense_uplink_bits(d, 1),
          "psum_payload": (d, 1), "pallas_calls": 0})

@@ -73,6 +73,7 @@ def test_rounds_trace_T_pmeans_and_one_eigh():
         violations = check_entry(
             "distributed.slda_shardmap", jaxpr,
             {"rounds": t_rounds, "dense_psums": t_rounds,
+             "live_psums": 0, "total_psums": t_rounds, "screen_ops": 0,
              "data_gathers": 0,
              "data_uplink_bits":
                  t_rounds * compression_core.dense_uplink_bits(d, 1),
@@ -104,6 +105,7 @@ def test_mc_rounds_trace_T_direction_pmeans_one_means_pmean():
         violations = check_entry(
             "distributed.mc_slda_shardmap", jaxpr,
             {"rounds": t_rounds, "dense_psums": t_rounds,
+             "live_psums": 0, "screen_ops": 0,
              "data_gathers": 0,
              "data_uplink_bits":
                  t_rounds * compression_core.dense_uplink_bits(d, K)
