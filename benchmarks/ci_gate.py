@@ -68,6 +68,10 @@ COMPRESSION_F1_DRIFT = 0.01
 # fault_rounds drift vs the committed baseline (same synthetic seeds)
 FAULTS_F1_DRIFT = 0.01
 
+# serving cross-PR drift: fresh protected-under-faults accuracy may
+# trail the committed baseline by at most this much (same seeds)
+SERVING_ACC_DRIFT = 0.01
+
 # name -> column holding the gated max-abs parity
 GATED = {
     "fused_solver": ("max_abs_diff", PARITY_BUDGET),
@@ -76,6 +80,7 @@ GATED = {
     "multi_round": (None, None),  # warm_vs_cold + recovery gates only
     "compressed_rounds": (None, None),  # compression-payload gates only
     "fault_rounds": (None, None),  # faults-payload gates only
+    "serving": (None, None),  # serving-payload + warm_vs_cold gates only
 }
 
 # Skip-with-notice bookkeeping: every gate that declines to measure
@@ -327,6 +332,99 @@ def _gate_faults(payload: dict, failures: list[str]) -> int:
     return 1
 
 
+def _gate_serving(payload: dict, failures: list[str]) -> int:
+    """The serving gates (``benchmarks/serving.py``, DESIGN.md §12).
+
+    Under the gated fault plan (ingest corruption + refit divergence +
+    refresh drops) the protected runtime must serve finite scores and
+    stay within ``acc_slack`` of its fault-free twin, while the
+    unprotected baseline must demonstrably degrade (non-finite, or
+    accuracy below the slack floor) -- a protection layer that costs
+    nothing is indistinguishable from one that does nothing.  The
+    staleness curve must actually slope (drift bites) and a refresh
+    must buy accuracy back.  Cross-PR: protected accuracy must not
+    drift below the committed baseline, and qps gates like wall-clock
+    (host/backend-matched, ``WALLCLOCK_TOL`` ratio).
+    """
+    gate = payload["serving"]
+    tag = (f"serving d={gate['d']}/B={gate['batch']}"
+           f"/ticks={gate['ticks']}")
+    acc_c = float(gate["acc_clean"])
+    acc_p = float(gate["acc_protected"])
+    acc_u = float(gate["acc_unprotected"])
+    slack = float(gate.get("acc_slack", 0.02))
+    if not gate.get("finite_protected", False):
+        failures.append(f"{tag}: protected serving emitted non-finite "
+                        "scores under faults")
+    if acc_p < acc_c - slack:
+        failures.append(
+            f"{tag}: protected accuracy {acc_p:.3f} trails the "
+            f"fault-free run {acc_c:.3f} by more than {slack}")
+    degraded = (not gate.get("finite_unprotected", True)
+                or acc_u < acc_c - slack)
+    if not degraded:
+        failures.append(
+            f"{tag}: unprotected accuracy {acc_u:.3f} does not degrade "
+            f"below {acc_c - slack:.3f} -- the fault injection is not "
+            "biting")
+    s0 = float(gate["stale_acc_s0"])
+    smax = float(gate["stale_acc_smax"])
+    refreshed = float(gate["stale_acc_refreshed"])
+    if not smax < s0:
+        failures.append(
+            f"{tag}: staleness curve is flat ({smax:.3f} at "
+            f"s={gate['stale_smax']} vs {s0:.3f} at s=0) -- the drift "
+            "model is not biting")
+    if not refreshed > smax:
+        failures.append(
+            f"{tag}: a refresh at max staleness bought nothing back "
+            f"({refreshed:.3f} vs stale {smax:.3f})")
+    if not failures:
+        print(f"[ci_gate] {tag}: protected {acc_p:.3f} vs clean "
+              f"{acc_c:.3f}, unprotected {acc_u:.3f} degrades, staleness "
+              f"{s0:.3f}->{smax:.3f} (refresh {refreshed:.3f}) OK")
+
+    base = _committed_baseline("serving")
+    if base is None or "serving" not in comparable(base):
+        _skip("serving", "no committed baseline payload "
+              "-- cross-PR gate skipped")
+        return 1
+    bgate = comparable(base)["serving"]
+    point = ("d", "batch", "ticks", "refit_every",
+             "corrupt", "diverge", "drop")
+    if any(gate.get(k) != bgate.get(k) for k in point):
+        _skip("serving", "gated operating point changed vs baseline "
+              "-- cross-PR gate skipped")
+        return 1
+    ref = base.get("_baseline_ref", "HEAD")
+    drift = float(bgate["acc_protected"]) - acc_p
+    if drift > SERVING_ACC_DRIFT:
+        failures.append(
+            f"{tag}: protected accuracy {acc_p:.3f} drifted {drift:.3f} "
+            f"below the committed baseline "
+            f"{bgate['acc_protected']:.3f} at {ref}")
+    else:
+        print(f"[ci_gate] serving: protected accuracy within "
+              f"{SERVING_ACC_DRIFT} of baseline at {ref} OK")
+    # qps is wall-clock: only comparable against the same host+backend
+    if (base.get("backend") != payload.get("backend")
+            or (base.get("host") != payload.get("host")
+                and not os.environ.get("CI_GATE_FORCE_WALLCLOCK"))):
+        _skip("serving", "baseline host/backend mismatch "
+              "-- qps gate skipped")
+        return 1
+    base_qps = float(bgate.get("qps", 0.0))
+    if base_qps > 0 and float(gate["qps"]) < base_qps / (1 + WALLCLOCK_TOL):
+        failures.append(
+            f"{tag}: sustained qps {gate['qps']:,.0f} fell more than "
+            f"{WALLCLOCK_TOL:.0%} below the baseline {base_qps:,.0f} "
+            f"at {ref}")
+    else:
+        print(f"[ci_gate] serving: qps {gate['qps']:,.0f} vs baseline "
+              f"{base_qps:,.0f} at {ref} OK")
+    return 2
+
+
 def main() -> int:
     failures = []
     checked = 0
@@ -395,6 +493,8 @@ def main() -> int:
             checked += _gate_compression(payload, failures)
         if name == "fault_rounds" and "faults" in payload:
             checked += _gate_faults(payload, failures)
+        if name == "serving" and "serving" in payload:
+            checked += _gate_serving(payload, failures)
         if name in WALLCLOCK_GATED:
             checked += _gate_wallclock(name, payload, failures)
     # the machine-readable skip tally: CI log scrapers key on this line,

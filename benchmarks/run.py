@@ -25,6 +25,7 @@ from benchmarks import (
     lambda_path,
     multi_round,
     roofline,
+    serving,
     table1_speedup,
     table2_real,
 )
@@ -48,6 +49,8 @@ BENCHES = [
      compressed_rounds.main),
     ("fault_rounds (liveness-masked aggregation under faults)",
      fault_rounds.main),
+    ("serving (classify hot path + streaming refit under faults)",
+     serving.main),
     ("roofline (dry-run aggregation)", roofline.main),
 ]
 

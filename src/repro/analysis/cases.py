@@ -21,7 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compression as compression_core
 from repro.core import path as rpath
-from repro.core import pipeline, rounds
+from repro.core import pipeline, rounds, streaming
 from repro.core.compression import Compression
 from repro.core.dantzig import DantzigConfig
 from repro.core.distributed import (
@@ -455,6 +455,63 @@ def _full_raw_scan():
     def fn(a, b):
         return solve_dantzig_full(a, b, 0.1, SCAN)
     return fn, (a, b)
+
+
+# ---------------------------------------------------------------------------
+# streaming.classify_batch / streaming.refit_step (the serving runtime)
+# ---------------------------------------------------------------------------
+
+@case("streaming.classify_batch", "B32-d16-K3-priors", {})
+def _classify_batch_priors():
+    z = _normal(22, (32, 16))
+    beta = _normal(23, (16, 3))
+    means = _normal(24, (3, 16))
+    priors = jnp.full((3,), 1.0 / 3.0)
+
+    def fn(z, beta, means, priors):
+        return streaming.classify_batch(z, beta, means, priors)
+    return fn, (z, beta, means, priors)
+
+
+@case("streaming.classify_batch", "B8-d12-K2-equal-priors", {})
+def _classify_batch_binary():
+    z = _normal(25, (8, 12))
+    beta = _normal(26, (12, 2))
+    means = _normal(27, (2, 12))
+
+    def fn(z, beta, means):
+        return streaming.classify_batch(z, beta, means, None)
+    return fn, (z, beta, means)
+
+
+def _refit_stats(d: int = 12):
+    x, y = _normal(28, (40, d)), _normal(29, (44, d))
+    return streaming.head_stats_of(pipeline.suff_stats(x, y))
+
+
+def _refit_case(cfg, warm: bool):
+    def build():
+        stats = _refit_stats()
+        if warm:
+            carry = streaming.refit_step(stats, 0.1, 0.1, cfg).carry
+
+            def fn(stats, carry):
+                return streaming.refit_step(stats, 0.1, 0.1, cfg,
+                                            carry=carry)
+            return fn, (stats, carry)
+
+        def fn(stats):
+            return streaming.refit_step(stats, 0.1, 0.1, cfg)
+        return fn, (stats,)
+    return build
+
+
+case("streaming.refit_step", "cold-scan-d12",
+     {"pallas_calls": 0})(_refit_case(SCAN, warm=False))
+case("streaming.refit_step", "warm-scan-d12",
+     {"pallas_calls": 0})(_refit_case(SCAN, warm=True))
+case("streaming.refit_step", "cold-fused-tol-d12",
+     {"pallas_calls": 2})(_refit_case(FUSED_TOL, warm=False))
 
 
 __all__ = ["Case", "all_cases", "case", "cases_for"]

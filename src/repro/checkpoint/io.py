@@ -10,6 +10,7 @@ from __future__ import annotations
 import os
 import re
 import tempfile
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -52,15 +53,42 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     return path
 
 
+def _readable(path: str) -> bool:
+    """True when the npz at ``path`` is a complete, CRC-clean archive.
+
+    npz is a zip: a writer killed mid-write (or a non-atomic copy torn
+    partway) leaves either no central directory or truncated members.
+    ``testzip`` walks every member against its CRC, so both tears are
+    caught; checkpoints here are small, making the full scan cheap.
+    """
+    try:
+        with zipfile.ZipFile(path) as z:
+            return z.testzip() is None
+    except (OSError, zipfile.BadZipFile):
+        return False
+
+
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step whose file is actually restorable.
+
+    Torn/partial writes are SKIPPED, not raised: a server that crashed
+    mid-checkpoint must come back on the previous good snapshot, and a
+    stray ``.tmp`` from a killed writer never matches the pattern.
+    """
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [
-        int(m.group(1))
-        for f in os.listdir(ckpt_dir)
-        if (m := re.match(r"step_(\d+)\.npz$", f))
-    ]
-    return max(steps) if steps else None
+    steps = sorted(
+        (
+            int(m.group(1))
+            for f in os.listdir(ckpt_dir)
+            if (m := re.match(r"step_(\d+)\.npz$", f))
+        ),
+        reverse=True,
+    )
+    for step in steps:
+        if _readable(os.path.join(ckpt_dir, f"step_{step:09d}.npz")):
+            return step
+    return None
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, target):

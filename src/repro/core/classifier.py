@@ -6,6 +6,30 @@ import jax
 import jax.numpy as jnp
 
 
+def classify_scores(
+    z: jnp.ndarray,
+    beta: jnp.ndarray,
+    mu: jnp.ndarray,
+    priors: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Batched K-class discriminant scores: (B, d) queries -> (B, K).
+
+    ``score_k(Z) = (Z - mu_k / 2)^T beta_k + log pi_k`` -- one fused
+    (B, d) @ (d, K) matmul plus elementwise per-class offsets; this is
+    the single scoring kernel behind both ``multiclass.mc_classify``
+    and the serving hot path (``streaming.classify_batch``), which
+    pins its trace to exactly one ``dot_general``.  ``priors=None``
+    means equal priors (a constant shift, dropped from the argmax).
+    """
+    proj = z @ beta  # (B, K)
+    offset = 0.5 * jnp.sum(mu * beta.T, axis=1)  # (K,)
+    scores = proj - offset[None, :]
+    if priors is not None:
+        priors = jnp.asarray(priors, scores.dtype)
+        scores = scores + jnp.log(priors)[None, :]
+    return scores
+
+
 def fisher_rule(z: jnp.ndarray, beta: jnp.ndarray, mu1: jnp.ndarray, mu2: jnp.ndarray) -> jnp.ndarray:
     """psi(Z) = 1((Z - (mu1+mu2)/2)^T beta > 0); returns class index {0, 1}.
 

@@ -31,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import classifier
 from repro.core import path as _path
 from repro.core import pipeline
 from repro.core import rounds as _rounds
@@ -232,12 +233,10 @@ def mc_classify(
     score_k(Z) = (Z - mu_k / 2)^T beta_k + log pi_k; ``priors=None``
     means equal priors (the + log pi_k term is a constant shift and
     drops out of the argmax).  At K=2 the equal-prior rule reduces to
-    the paper's Fisher rule up to the shared mu_bar shift.
+    the paper's Fisher rule up to the shared mu_bar shift.  The score
+    computation is shared with the serving hot path through
+    :func:`repro.core.classifier.classify_scores` (bit-identical to
+    the pre-dedup inline form, pinned by the parity tests).
     """
-    proj = z @ beta  # (n, K)
-    offset = 0.5 * jnp.sum(means * beta.T, axis=1)  # (K,)
-    scores = proj - offset[None, :]
-    if priors is not None:
-        priors = jnp.asarray(priors, scores.dtype)
-        scores = scores + jnp.log(priors)[None, :]
-    return jnp.argmax(scores, axis=-1)
+    return jnp.argmax(classifier.classify_scores(z, beta, means, priors),
+                      axis=-1)

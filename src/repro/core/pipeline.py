@@ -72,7 +72,7 @@ from repro.analysis import (
 from repro.core.dantzig import AdmmState, DantzigConfig
 from repro.core.solver_dispatch import solve_dantzig, solve_dantzig_full
 from repro.kernels import ops as kops
-from repro.kernels.spectral import spectral_factor
+from repro.kernels.spectral import SpectralFactor, spectral_factor
 
 
 class HeadStats(NamedTuple):
@@ -233,6 +233,9 @@ class WorkerSolves(NamedTuple):
     state_theta: AdmmState | None
     iters_beta: jnp.ndarray | None  # executed ADMM iterations per column
     iters_theta: jnp.ndarray | None
+    # the worker's ONE factorization, shared by both solves; carried so
+    # streaming refits can snapshot it without a second eigh
+    factor: "SpectralFactor | None" = None
 
 
 def worker_solves(
@@ -283,6 +286,36 @@ def worker_solves(
             "(d, d) gather to pair theta_ij with theta_ji (eq. 3.3). "
             "Run with model_axis=None to symmetrize.")
     hs = head.stats(*data)
+    return solves_from_stats(
+        hs, lam=lam, lam_prime=lam_prime, cfg=cfg, model_axis=model_axis,
+        model_axis_size=model_axis_size, rho_beta=rho_beta,
+        rho_theta=rho_theta, state_beta=state_beta, state_theta=state_theta,
+        symmetrize=symmetrize, full=full)
+
+
+def solves_from_stats(
+    hs: HeadStats,
+    *,
+    lam,
+    lam_prime,
+    cfg: DantzigConfig = DantzigConfig(),
+    model_axis: str | None = None,
+    model_axis_size: int = 1,
+    rho_beta: jnp.ndarray | None = None,
+    rho_theta: jnp.ndarray | None = None,
+    state_beta: AdmmState | None = None,
+    state_theta: AdmmState | None = None,
+    symmetrize: bool = False,
+    full: bool = False,
+) -> WorkerSolves:
+    """The solve body of :func:`worker_solves`, from pre-built statistics.
+
+    Factored out so the sufficient statistics can come from somewhere
+    OTHER than one machine's raw sample pass: the streaming serving
+    loop (:mod:`repro.core.streaming`) accumulates chunk-merged
+    :class:`HeadStats` and re-solves through this exact body, so the
+    served estimator is the pipeline's estimator by construction.
+    """
     # ONE eigendecomposition per worker: the direction solve and every
     # CLIME column share this factor (it is rho- and lam-independent).
     factor = spectral_factor(hs.sigma)
@@ -317,7 +350,7 @@ def worker_solves(
     if symmetrize:
         theta = symmetrize_min(theta)
     return WorkerSolves(stats=hs, beta_hat=beta_hat, theta=theta,
-                        valid=valid, **carries)
+                        valid=valid, factor=factor, **carries)
 
 
 def apply_correction(

@@ -1,0 +1,763 @@
+"""Streaming refit + resilient serving core (DESIGN.md §12).
+
+The paper's estimator exists to *classify* (eq. 1.1); this module is
+the layer between the trained estimator and live traffic:
+
+* **Mergeable sufficient statistics** -- :func:`merge_suff_stats` /
+  :func:`merge_mc_stats` combine two machines'/chunks' ``SuffStats`` /
+  ``MCStats`` exactly (per-class rank-1 mean-shift corrections on the
+  pooled scatter), so data can arrive in chunks of any size -- down to
+  rank-1 single samples -- and the merged statistics equal the
+  one-shot statistics on the concatenated data.
+* **Ingest screening** -- :func:`screen_batch` reuses the
+  :func:`repro.core.faults.screen_weight` policy (non-finite /
+  envelope) on the RAW arriving batch; :func:`ingest_stats` then
+  quarantines a poisoned batch with a ``where``-select, leaving the
+  accumulated statistics bit-identical to never having seen it.
+* **Incremental refit** -- :func:`refit_step` re-solves the estimator
+  directly from merged :class:`~repro.core.pipeline.HeadStats` (one
+  fresh ``eigh``, pinned by trace contract) resuming through the warm
+  ``AdmmState``/rho carries of PR 4; :func:`refit_with_escalation`
+  wraps it in the bounded non-convergence ladder (warm retry -> cold
+  retry -> full refactorize with a boosted iteration budget).
+* **Graceful degradation** -- :class:`ModelSlot` double buffering (a
+  failed or diverged refit never touches the serving estimator), the
+  live/stale/degraded bounded-staleness contract
+  (:func:`slot_status`), and the deterministic seedable
+  :class:`ServeFaultSchedule` fault-injection harness (ingest
+  corruption, refit divergence, refresh drops).
+* **The serving hot path** -- :func:`classify_batch`, a fused
+  ``(B, d) @ (d, K)`` score + argmax with priors, trace-contracted to
+  0 eigh / 0 ADMM loops / 0 collectives / exactly 1 matmul per query
+  batch.
+
+:class:`ServingRuntime` composes all of it into the host-side loop
+behind ``python -m repro.launch.serve``, ``benchmarks/serving.py``
+and the chaos tests, including crash recovery through
+:mod:`repro.checkpoint` model-slot snapshots.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import (
+    DtypePolicy,
+    Param,
+    PrimitiveBudget,
+    VmemConformance,
+    trace_contract,
+)
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core import classifier
+from repro.core.dantzig import AdmmState, DantzigConfig
+from repro.core.faults import _CORRUPT_CODES, Aggregation, screen_weight
+from repro.core.pipeline import (
+    HeadStats,
+    MCStats,
+    SuffStats,
+    debias,
+    mc_direction_rhs,
+    solves_from_stats,
+)
+from repro.core.slda import hard_threshold
+from repro.kernels.spectral import SpectralFactor
+
+__all__ = [
+    "STATUS_DEGRADED",
+    "STATUS_LIVE",
+    "STATUS_STALE",
+    "EscalationPolicy",
+    "ModelSlot",
+    "RefitCarry",
+    "RefitResult",
+    "ServeFaultPlan",
+    "ServeFaultSchedule",
+    "ServingRuntime",
+    "classify_batch",
+    "head_stats_of",
+    "ingest_stats",
+    "merge_mc_stats",
+    "merge_stats",
+    "merge_suff_stats",
+    "refit_converged",
+    "refit_step",
+    "refit_with_escalation",
+    "screen_batch",
+    "slot_from_stats",
+    "slot_status",
+    "snapshot_template",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mergeable sufficient statistics (chunked / rank-1 streaming ingest)
+# ---------------------------------------------------------------------------
+
+
+def _wmean(ma, na, mb, nb):
+    """Count-weighted mean of two class means, safe for empty classes.
+
+    An empty class's mean may be NaN (``suff_stats`` divides by a zero
+    count); the contribution is SELECTED out with ``where``, never
+    multiplied -- 0 * NaN would re-poison the merge.
+    """
+    na_f = jnp.asarray(na, ma.dtype)
+    nb_f = jnp.asarray(nb, mb.dtype)
+    num = (jnp.where(na_f > 0, na_f * ma, 0.0)
+           + jnp.where(nb_f > 0, nb_f * mb, 0.0))
+    return num / jnp.maximum(na_f + nb_f, 1.0)
+
+
+def _shift_outer(ma, na, mb, nb):
+    """The rank-1 pooled-scatter correction of one class across a merge.
+
+    ``scatter_ab = scatter_a + scatter_b + w * delta delta^T`` with
+    ``w = n_a n_b / (n_a + n_b)`` and ``delta = mu_a - mu_b`` -- the
+    exact parallel-axis decomposition of the within-class scatter, so
+    chunked merging reproduces the one-shot statistics.
+    """
+    na_f = jnp.asarray(na, ma.dtype)
+    nb_f = jnp.asarray(nb, mb.dtype)
+    both = (na_f > 0) & (nb_f > 0)
+    w = jnp.where(both, na_f * nb_f / jnp.maximum(na_f + nb_f, 1.0), 0.0)
+    delta = jnp.where(both, ma - mb, 0.0)
+    return w * jnp.outer(delta, delta)
+
+
+def merge_suff_stats(a: SuffStats, b: SuffStats) -> SuffStats:
+    """Exact merge of two two-class :class:`SuffStats` accumulators.
+
+    ``sigma`` is the pooled within-class scatter over n1 + n2, so the
+    merge rebuilds the scatter, applies the per-class rank-1 mean-shift
+    corrections, and re-normalizes.  Associative up to float rounding;
+    a single sample in ``b`` is the rank-1 update of DESIGN.md §12.
+    """
+    n_a = jnp.asarray(a.n1 + a.n2, a.sigma.dtype)
+    n_b = jnp.asarray(b.n1 + b.n2, b.sigma.dtype)
+    scatter = a.sigma * n_a + b.sigma * n_b
+    scatter = scatter + _shift_outer(a.mu1, a.n1, b.mu1, b.n1)
+    scatter = scatter + _shift_outer(a.mu2, a.n2, b.mu2, b.n2)
+    sigma = scatter / jnp.maximum(n_a + n_b, 1.0)
+    return SuffStats(
+        sigma,
+        _wmean(a.mu1, a.n1, b.mu1, b.n1),
+        _wmean(a.mu2, a.n2, b.mu2, b.n2),
+        a.n1 + b.n1,
+        a.n2 + b.n2,
+    )
+
+
+def merge_mc_stats(a: MCStats, b: MCStats) -> MCStats:
+    """Exact merge of two K-class :class:`MCStats` accumulators.
+
+    Same parallel-axis decomposition as :func:`merge_suff_stats`, one
+    rank-1 correction per class (``mc_suff_stats`` zero-fills empty
+    class means, so no NaN guards are needed on the means themselves).
+    """
+    n_a = jnp.sum(a.counts)
+    n_b = jnp.sum(b.counts)
+    counts = a.counts + b.counts
+    means = ((a.counts[:, None] * a.means + b.counts[:, None] * b.means)
+             / jnp.maximum(counts, 1.0)[:, None])
+    delta = a.means - b.means  # (K, d)
+    both = (a.counts > 0) & (b.counts > 0)
+    w = jnp.where(both, a.counts * b.counts / jnp.maximum(counts, 1.0), 0.0)
+    corr = jnp.einsum("k,ki,kj->ij", w, delta, delta)
+    sigma = (a.sigma * n_a + b.sigma * n_b + corr) / jnp.maximum(n_a + n_b, 1.0)
+    return MCStats(sigma, means, counts)
+
+
+def merge_stats(a, b):
+    """Type-dispatched merge of two same-head sufficient statistics."""
+    if isinstance(a, SuffStats):
+        return merge_suff_stats(a, b)
+    if isinstance(a, MCStats):
+        return merge_mc_stats(a, b)
+    raise TypeError(f"unmergeable stats type {type(a).__name__}")
+
+
+def head_stats_of(aux) -> HeadStats:
+    """Rebuild the pipeline-facing :class:`HeadStats` from merged aux.
+
+    The inverse of ``head.stats(*data).aux``: streaming accumulates the
+    aux statistics (they merge exactly); the direction right-hand sides
+    are re-derived from them at refit time.
+    """
+    if isinstance(aux, SuffStats):
+        return HeadStats(aux.sigma, aux.mu_d[:, None], aux)
+    if isinstance(aux, MCStats):
+        return HeadStats(aux.sigma, mc_direction_rhs(aux), aux)
+    raise TypeError(f"headless stats type {type(aux).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Ingest screening / quarantine
+# ---------------------------------------------------------------------------
+
+
+def screen_batch(agg: Aggregation, *arrays: jnp.ndarray) -> jnp.ndarray:
+    """Ingest-screening weight in {0., 1.} over a batch's float arrays.
+
+    Reuses the per-machine :func:`repro.core.faults.screen_weight`
+    policy on the RAW arriving data -- BEFORE any statistic is formed,
+    so one poisoned batch cannot contaminate the accumulators.  Integer
+    arrays (labels) pass through unscreened.
+    """
+    w = jnp.ones(())
+    for arr in arrays:
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            w = w * screen_weight(agg, arr)
+    return w
+
+
+def ingest_stats(aux, batch_aux, weight: jnp.ndarray):
+    """Merge a batch's statistics, quarantining when ``weight == 0``.
+
+    The quarantine is a ``where``-SELECT on every leaf: a rejected
+    batch leaves the accumulated statistics bit-identical to never
+    having seen it (NaN in the discarded merge branch cannot leak --
+    ``where`` selects, never multiplies).
+    """
+    merged = merge_stats(aux, batch_aux)
+    return jax.tree.map(
+        lambda new, old: jnp.where(weight > 0, new,
+                                   jnp.asarray(old, new.dtype)),
+        merged, aux)
+
+
+# ---------------------------------------------------------------------------
+# The serving hot path (trace-contracted)
+# ---------------------------------------------------------------------------
+
+
+@trace_contract(
+    "streaming.classify_batch",
+    contracts=(
+        # a query batch touches NO estimator machinery: the score matmul
+        # is the only dot, and there is no eigh, no ADMM loop (while /
+        # scan), no kernel launch and no collective anywhere in the trace
+        PrimitiveBudget("eigh", exact=0),
+        PrimitiveBudget("while", exact=0),
+        PrimitiveBudget("scan", exact=0),
+        PrimitiveBudget("pallas_call", exact=0),
+        PrimitiveBudget("psum", exact=0),
+        PrimitiveBudget("all_gather", exact=0),
+        PrimitiveBudget("dot_general", exact=1),
+        DtypePolicy(),
+    ),
+)
+def classify_batch(
+    z: jnp.ndarray,
+    beta: jnp.ndarray,
+    means: jnp.ndarray,
+    priors: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The fused (B, d) @ (d, K) serving hot path.
+
+    Returns ``(pred (B,) int, scores (B, K))`` -- the scores ride along
+    so the serving loop can monitor finiteness without a second pass.
+    One ``dot_general``; the per-class offsets and priors are
+    elementwise (see :func:`repro.core.classifier.classify_scores`).
+    """
+    scores = classifier.classify_scores(z, beta, means, priors)
+    return jnp.argmax(scores, axis=-1), scores
+
+
+# ---------------------------------------------------------------------------
+# Incremental refit + escalation ladder
+# ---------------------------------------------------------------------------
+
+
+class RefitCarry(NamedTuple):
+    """Warm-start carries threaded across streaming refits (PR 4/5)."""
+
+    rho_beta: jnp.ndarray  # (K,)
+    rho_theta: jnp.ndarray  # (d,)
+    state_beta: AdmmState  # leaves (d, K)
+    state_theta: AdmmState  # leaves (d, d)
+
+
+class RefitResult(NamedTuple):
+    beta_tilde: jnp.ndarray  # (d, K) debiased direction block
+    beta_hat: jnp.ndarray  # (d, K) biased solution
+    theta: jnp.ndarray  # (d, d) CLIME block
+    factor: SpectralFactor  # the refit's ONE factorization
+    carry: RefitCarry  # resumable warm state for the next refit
+    iters_beta: jnp.ndarray  # (K,) executed ADMM iterations
+    iters_theta: jnp.ndarray  # (d,)
+
+
+@trace_contract(
+    "streaming.refit_step",
+    contracts=(
+        # ONE fresh factorization per refit -- the moved sigma must be
+        # re-factorized, but never twice (direction + CLIME share it)
+        PrimitiveBudget("eigh", exact=1),
+        PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
+        # refit is a single-machine operation: nothing on the wire
+        PrimitiveBudget("psum", exact=0),
+        PrimitiveBudget("all_gather", exact=0),
+        DtypePolicy(),
+        VmemConformance(),
+    ),
+)
+def refit_step(
+    stats: HeadStats,
+    lam,
+    lam_prime,
+    cfg: DantzigConfig = DantzigConfig(),
+    carry: RefitCarry | None = None,
+    symmetrize: bool = False,
+) -> RefitResult:
+    """Re-solve the estimator from merged sufficient statistics.
+
+    The streaming twin of :func:`repro.core.pipeline.worker_solves`:
+    the raw-sample pass is replaced by the accumulated
+    :class:`HeadStats`, and a ``carry`` resumes both ADMM solves from
+    the previous refit's warm rho/:class:`AdmmState` -- the
+    slightly-moved-problem machinery of PR 4 applied to data drift.
+    The solves themselves run through the factored-out
+    :func:`~repro.core.pipeline.solves_from_stats`, so the served
+    estimator is the pipeline's estimator by construction.
+    """
+    kw = {}
+    if carry is not None:
+        kw = dict(rho_beta=carry.rho_beta, rho_theta=carry.rho_theta,
+                  state_beta=carry.state_beta, state_theta=carry.state_theta)
+    ws = solves_from_stats(stats, lam=lam, lam_prime=lam_prime, cfg=cfg,
+                           symmetrize=symmetrize, full=True, **kw)
+    beta_tilde = debias(stats.sigma, stats.rhs, ws.beta_hat, ws.theta)
+    return RefitResult(
+        beta_tilde, ws.beta_hat, ws.theta, ws.factor,
+        RefitCarry(ws.rho_beta, ws.rho_theta, ws.state_beta, ws.state_theta),
+        ws.iters_beta, ws.iters_theta)
+
+
+def refit_converged(res: RefitResult, cfg: DantzigConfig) -> bool:
+    """Host-side convergence verdict for one refit attempt.
+
+    Non-finite output is always a failure.  With a residual tolerance
+    configured, a solve that burned its whole iteration budget without
+    early-exiting is treated as non-converged (``iters == max_iters``);
+    the fixed-iteration schedule (``tol=None``) can only fail by
+    producing non-finite values.
+    """
+    finite = bool(np.isfinite(np.asarray(res.beta_tilde)).all()
+                  and np.isfinite(np.asarray(res.theta)).all())
+    if not finite:
+        return False
+    if cfg.tol is None:
+        return True
+    executed = max(int(np.max(np.asarray(res.iters_beta))),
+                   int(np.max(np.asarray(res.iters_theta))))
+    return executed < cfg.max_iters
+
+
+class EscalationPolicy(NamedTuple):
+    """Bounded-attempt escalation on refit non-convergence.
+
+    The ladder is warm retry (resume the carry) -> cold retry (fresh
+    ADMM state, same statistics) -> full refactorize (fresh state, a
+    re-symmetrized sigma and a ``refactor_scale``-boosted iteration
+    budget).  ``max_attempts`` bounds how far the ladder is climbed;
+    ``backoff_s`` sleeps ``backoff_s * 2^attempt`` between rungs (0 in
+    CI -- the schedule is still exercised, just without the waiting).
+    """
+
+    max_attempts: int = 3
+    backoff_s: float = 0.0
+    refactor_scale: int = 2
+
+    def validate(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
+        if self.refactor_scale < 1:
+            raise ValueError("refactor_scale must be >= 1")
+
+
+def refit_with_escalation(
+    stats: HeadStats,
+    lam,
+    lam_prime,
+    cfg: DantzigConfig,
+    carry: RefitCarry | None,
+    policy: EscalationPolicy = EscalationPolicy(),
+    inject_fail_attempts: int = 0,
+) -> tuple[RefitResult | None, list[dict]]:
+    """Climb the escalation ladder until a refit converges.
+
+    Returns ``(result, attempt_log)``; ``result`` is ``None`` when every
+    attempt within ``policy.max_attempts`` failed (the caller keeps
+    serving the last-good slot and counts a missed refresh).
+
+    ``inject_fail_attempts`` is the deterministic divergence hook of the
+    fault harness: the first n attempts have their solutions poisoned to
+    NaN AFTER solving, so the detection + escalation path is exercised
+    end to end exactly as a genuinely diverged solve would drive it.
+    """
+    policy.validate()
+    ladder: list[tuple[str, RefitCarry | None, DantzigConfig, HeadStats]] = []
+    if carry is not None:
+        ladder.append(("warm", carry, cfg, stats))
+    ladder.append(("cold", None, cfg, stats))
+    refactor_cfg = cfg._replace(
+        max_iters=cfg.max_iters * policy.refactor_scale)
+    refactor_stats = stats._replace(
+        sigma=0.5 * (stats.sigma + stats.sigma.T))
+    ladder.append(("refactor", None, refactor_cfg, refactor_stats))
+    log: list[dict] = []
+    for attempt, (name, c, cfg_a, st) in enumerate(
+            ladder[: policy.max_attempts]):
+        if attempt > 0 and policy.backoff_s > 0:
+            time.sleep(policy.backoff_s * (2 ** (attempt - 1)))
+        res = refit_step(st, lam, lam_prime, cfg_a, carry=c)
+        if attempt < inject_fail_attempts:
+            res = res._replace(
+                beta_tilde=jnp.full_like(res.beta_tilde, jnp.nan))
+        ok = refit_converged(res, cfg_a)
+        log.append({
+            "attempt": name,
+            "converged": ok,
+            "iters_beta": int(np.max(np.asarray(res.iters_beta))),
+            "iters_theta": int(np.max(np.asarray(res.iters_theta))),
+        })
+        if ok:
+            return res, log
+    return None, log
+
+
+# ---------------------------------------------------------------------------
+# Model slots + the live/stale/degraded contract
+# ---------------------------------------------------------------------------
+
+STATUS_LIVE = "live"
+STATUS_STALE = "stale"
+STATUS_DEGRADED = "degraded"
+
+
+class ModelSlot(NamedTuple):
+    """One immutable published model: everything the hot path reads.
+
+    ``means`` rows are the per-class scoring anchors ``c_k`` of
+    ``score_k(z) = (z - c_k / 2) @ beta[:, k] + log priors[k]``.  For
+    the K-class head they ARE the class means; for the binary head the
+    anchors are ``mu_k + mu_bar`` with directions ``+-beta / 2``, which
+    makes the two-column rule EXACTLY the paper's Fisher rule at equal
+    priors (pinned by the parity tests).
+    """
+
+    beta: jnp.ndarray  # (d, Kc) classifier direction columns
+    means: jnp.ndarray  # (Kc, d) scoring anchors
+    priors: jnp.ndarray  # (Kc,)
+    version: jnp.ndarray  # scalar int32, bumped per publish
+
+
+def _binary_slot(s: SuffStats, beta: jnp.ndarray, version: int) -> ModelSlot:
+    beta = beta.reshape(-1)
+    mu_bar = 0.5 * (s.mu1 + s.mu2)
+    cols = jnp.stack([0.5 * beta, -0.5 * beta], axis=1)
+    anchors = jnp.stack([s.mu1 + mu_bar, s.mu2 + mu_bar])
+    n1 = jnp.asarray(s.n1, beta.dtype)
+    n2 = jnp.asarray(s.n2, beta.dtype)
+    priors = jnp.stack([n1, n2]) / jnp.maximum(n1 + n2, 1.0)
+    return ModelSlot(cols, anchors, priors, jnp.asarray(version, jnp.int32))
+
+
+def _mc_slot(s: MCStats, beta: jnp.ndarray, version: int) -> ModelSlot:
+    priors = s.counts / jnp.maximum(jnp.sum(s.counts), 1.0)
+    return ModelSlot(beta, s.means, priors, jnp.asarray(version, jnp.int32))
+
+
+def slot_from_stats(aux, beta_raw: jnp.ndarray, threshold: float,
+                    version: int = 0) -> ModelSlot:
+    """Publishable :class:`ModelSlot` from a refit + the aux statistics."""
+    beta = hard_threshold(beta_raw, threshold)
+    if isinstance(aux, SuffStats):
+        return _binary_slot(aux, beta, version)
+    if isinstance(aux, MCStats):
+        return _mc_slot(aux, beta, version)
+    raise TypeError(f"slotless stats type {type(aux).__name__}")
+
+
+def slot_status(missed: int, bound: int) -> str:
+    """The bounded-staleness verdict, mirroring ``select_anchor``.
+
+    ``missed`` consecutive missed refreshes clip against the caller's
+    bound exactly like a straggler's requested staleness (DESIGN.md
+    §11.3): within the bound the slot serves as ``stale``; past it the
+    server KEEPS SERVING the last-good slot but must report
+    ``degraded`` -- degradation is a reporting contract, not an outage.
+    """
+    if missed <= 0:
+        return STATUS_LIVE
+    return STATUS_STALE if missed <= bound else STATUS_DEGRADED
+
+
+# ---------------------------------------------------------------------------
+# Deterministic serving fault plans
+# ---------------------------------------------------------------------------
+
+
+class ServeFaultPlan(NamedTuple):
+    """Materialized per-tick fault outcomes (host-side numpy arrays)."""
+
+    corrupt: np.ndarray  # (ticks,) int32 CORRUPT_* code for the ingest batch
+    diverge: np.ndarray  # (ticks,) int32 refit attempts to poison
+    drop: np.ndarray  # (ticks,) bool -- the tick's refresh is dropped
+
+
+class ServeFaultSchedule(NamedTuple):
+    """Seedable per-tick serving faults (:class:`FaultSchedule` twin).
+
+    Hashable scalars; :meth:`plan` materializes the outcomes so a chaos
+    run reproduces bit-for-bit from the seed.  ``corrupt_ingest``
+    poisons the tick's arriving data batch (``corrupt_mode`` as in
+    :mod:`repro.core.faults` -- ``"mix"`` cycles NaN/Inf/garbage);
+    ``diverge_refit`` poisons the first 1-2 refit attempts of the
+    tick's refresh; ``drop_refresh`` skips the refresh entirely.
+    """
+
+    corrupt_ingest: float = 0.0
+    diverge_refit: float = 0.0
+    drop_refresh: float = 0.0
+    corrupt_mode: str = "mix"
+    seed: int = 0
+
+    def validate(self) -> None:
+        for name, p in (("corrupt_ingest", self.corrupt_ingest),
+                        ("diverge_refit", self.diverge_refit),
+                        ("drop_refresh", self.drop_refresh)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if self.corrupt_mode != "mix" and self.corrupt_mode not in _CORRUPT_CODES:
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r}")
+
+    def plan(self, ticks: int) -> ServeFaultPlan:
+        self.validate()
+        k_c, k_d, k_r = jax.random.split(jax.random.PRNGKey(self.seed), 3)
+        hit_c = np.asarray(jax.random.uniform(k_c, (ticks,))
+                           < self.corrupt_ingest)
+        if self.corrupt_mode == "mix":
+            code = 1 + np.arange(ticks) % 3
+        else:
+            code = _CORRUPT_CODES[self.corrupt_mode]
+        corrupt = np.where(hit_c, code, 0).astype(np.int32)
+        hit_d = np.asarray(jax.random.uniform(k_d, (ticks,))
+                           < self.diverge_refit)
+        # alternate 1- and 2-rung divergence so both the cold retry and
+        # the full refactorize rung get exercised deterministically
+        diverge = np.where(hit_d, 1 + np.arange(ticks) % 2, 0).astype(np.int32)
+        drop = np.asarray(jax.random.uniform(k_r, (ticks,))
+                          < self.drop_refresh)
+        return ServeFaultPlan(corrupt, diverge, drop)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint templates (crash recovery of the serving loop)
+# ---------------------------------------------------------------------------
+
+
+def _zeros_admm(d: int, k: int) -> AdmmState:
+    z = jnp.zeros((d, k))
+    return AdmmState(z, z, z, z)
+
+
+def snapshot_template(aux) -> dict:
+    """Zeros pytree matching a serving snapshot's structure and shapes.
+
+    The snapshot is the full last-good serving state: the published
+    :class:`ModelSlot`, the accumulated aux statistics, the refit's
+    :class:`SpectralFactor` and the warm :class:`RefitCarry` ADMM
+    states -- everything :func:`ServingRuntime.restore` needs to resume
+    serving AND refitting after a crash.
+    """
+    zero = jax.tree.map(jnp.zeros_like, aux)
+    if isinstance(aux, SuffStats):
+        d = aux.mu1.shape[0]
+        k_solve, k_cls = 1, 2
+    else:
+        k_cls, d = aux.means.shape
+        k_solve = k_cls
+    slot = ModelSlot(jnp.zeros((d, k_cls)), jnp.zeros((k_cls, d)),
+                     jnp.zeros((k_cls,)), jnp.zeros((), jnp.int32))
+    factor = SpectralFactor(jnp.zeros((d, d)), jnp.zeros((d, d)),
+                            jnp.zeros((d,)))
+    carry = RefitCarry(jnp.zeros((k_solve,)), jnp.zeros((d,)),
+                       _zeros_admm(d, k_solve), _zeros_admm(d, d))
+    return {"slot": slot, "aux": zero, "factor": factor, "carry": carry}
+
+
+# ---------------------------------------------------------------------------
+# The serving runtime (host loop)
+# ---------------------------------------------------------------------------
+
+
+class ServingRuntime:
+    """Classify-as-a-service over a streaming refit loop.
+
+    Host-side driver composing the pieces above.  The jit'd hot path
+    reads ONLY the active :class:`ModelSlot` (double-buffered: refits
+    build a candidate slot off to the side and :meth:`refresh` swaps it
+    in atomically on success); ingest screens before merging; refits
+    climb the escalation ladder; missed refreshes count against the
+    bounded-staleness contract.  ``protect=False`` is the deliberately
+    fragile baseline -- no screening, no convergence verdict, no
+    staleness accounting -- that the chaos gates must show degrading.
+    """
+
+    def __init__(
+        self,
+        aux,
+        lam: float,
+        lam_prime: float,
+        threshold: float,
+        cfg: DantzigConfig = DantzigConfig(),
+        staleness_bound: int = 2,
+        escalation: EscalationPolicy = EscalationPolicy(),
+        ingest: Aggregation = Aggregation(envelope=1e6),
+        protect: bool = True,
+        ckpt_dir: str | None = None,
+        _defer_fit: bool = False,
+    ):
+        self.lam, self.lam_prime, self.threshold = lam, lam_prime, threshold
+        self.cfg = cfg
+        self.staleness_bound = int(staleness_bound)
+        self.escalation = escalation
+        self.ingest_policy = ingest
+        self.protect = bool(protect)
+        self.ckpt_dir = ckpt_dir
+        self.aux = aux
+        self.carry: RefitCarry | None = None
+        self.factor: SpectralFactor | None = None
+        self.missed = 0
+        self.ladder_log: list[dict] = []
+        self.queries = 0
+        self._jit_classify = jax.jit(classify_batch)
+        self.slot: ModelSlot | None = None
+        if not _defer_fit:
+            res, log = refit_with_escalation(
+                head_stats_of(aux), lam, lam_prime, cfg, None, escalation)
+            self.ladder_log.extend(log)
+            if res is None:
+                raise RuntimeError("initial fit did not converge within "
+                                   f"{escalation.max_attempts} attempts")
+            self._stage(res, version=1)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _stage(self, res: RefitResult, version: int) -> None:
+        """Publish a converged refit: build + atomically swap the slot."""
+        candidate = slot_from_stats(self.aux, res.beta_tilde,
+                                    self.threshold, version)
+        # the swap is the double-buffer commit point: the hot path holds
+        # the previous slot until this rebind, so a failed refit (which
+        # never reaches here) cannot expose partial state
+        self.slot = candidate
+        self.carry = res.carry
+        self.factor = res.factor
+        self.missed = 0
+        if self.ckpt_dir is not None:
+            save_checkpoint(self.ckpt_dir, int(candidate.version),
+                            self.snapshot())
+
+    def snapshot(self) -> dict:
+        return {"slot": self.slot, "aux": self.aux,
+                "factor": self.factor, "carry": self.carry}
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, aux_like, lam, lam_prime, threshold,
+                cfg: DantzigConfig = DantzigConfig(), **kw) -> "ServingRuntime":
+        """Resume serving from the latest READABLE snapshot.
+
+        ``latest_step`` skips torn/partial writes, so a server killed
+        mid-checkpoint restores the previous good snapshot.
+        """
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no restorable checkpoint in {ckpt_dir}")
+        snap = restore_checkpoint(ckpt_dir, step,
+                                  snapshot_template(aux_like))
+        rt = cls(snap["aux"], lam, lam_prime, threshold, cfg=cfg,
+                 ckpt_dir=ckpt_dir, _defer_fit=True, **kw)
+        rt.slot = snap["slot"]
+        rt.factor = snap["factor"]
+        rt.carry = snap["carry"]
+        return rt
+
+    @property
+    def status(self) -> str:
+        return slot_status(self.missed, self.staleness_bound)
+
+    # -- the three serving verbs ------------------------------------------
+
+    def classify(self, z: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """The hot path: (B, d) queries -> (pred (B,), scores (B, Kc))."""
+        s = self.slot
+        self.queries += int(z.shape[0])
+        return self._jit_classify(z, s.beta, s.means, s.priors)
+
+    def ingest_batch(self, batch_aux, *raw: jnp.ndarray) -> bool:
+        """Screen + merge one arriving batch; returns acceptance.
+
+        ``raw`` are the arriving arrays (screened before the statistics
+        are touched); ``batch_aux`` their sufficient statistics.  The
+        unprotected baseline merges blindly.
+        """
+        if not self.protect:
+            self.aux = merge_stats(self.aux, batch_aux)
+            return True
+        w = screen_batch(self.ingest_policy, *raw)
+        self.aux = ingest_stats(self.aux, batch_aux, w)
+        return bool(w > 0)
+
+    def refresh(self, drop: bool = False, inject_diverge: int = 0) -> bool:
+        """Attempt one model refresh; returns True when published.
+
+        ``drop`` simulates a lost refresh (the staleness path);
+        ``inject_diverge`` poisons the first n refit attempts (the
+        divergence path).  Failures leave the active slot untouched and
+        count a missed refresh against the staleness bound.
+        """
+        if drop:
+            self.missed += 1
+            return False
+        if not self.protect:
+            # fragile baseline: one attempt, no verdict, publish whatever
+            res = refit_step(head_stats_of(self.aux), self.lam,
+                             self.lam_prime, self.cfg, carry=None)
+            if inject_diverge > 0:
+                res = res._replace(
+                    beta_tilde=jnp.full_like(res.beta_tilde, jnp.nan))
+            self._stage(res, version=int(self.slot.version) + 1)
+            return True
+        res, log = refit_with_escalation(
+            head_stats_of(self.aux), self.lam, self.lam_prime, self.cfg,
+            self.carry, self.escalation,
+            inject_fail_attempts=inject_diverge)
+        self.ladder_log.extend(log)
+        if res is None:
+            self.missed += 1
+            return False
+        self._stage(res, version=int(self.slot.version) + 1)
+        return True
+
+
+def corrupt_batch_arrays(code: int, arrays: Sequence[jnp.ndarray]) -> tuple:
+    """Apply one tick's ingest corruption to the float arrays of a batch."""
+    from repro.core.faults import corrupt_block
+
+    out: list[Any] = []
+    for arr in arrays:
+        if code and jnp.issubdtype(arr.dtype, jnp.floating):
+            out.append(corrupt_block(jnp.asarray(code), arr))
+        else:
+            out.append(arr)
+    return tuple(out)

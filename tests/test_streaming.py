@@ -1,0 +1,432 @@
+"""Streaming refit + resilient serving (DESIGN.md §12).
+
+What is pinned here, and why it is the contract that matters:
+
+* chunked sufficient-stat merges are EXACT: any chunking of the stream
+  (including chunks that miss a class entirely, and d/n not multiples
+  of the chunk) reproduces the one-shot statistics on the concatenated
+  data to float tolerance, for both heads -- so the streaming refit
+  solves the SAME problem the batch pipeline would;
+* quarantine is bit-identical: a screened-out batch leaves every leaf
+  of the accumulated statistics byte-for-byte what it was, because the
+  rejection is a ``where``-SELECT, never an arithmetic no-op;
+* the serving hot path IS the paper's rule: the binary model slot's
+  two-column scores reproduce ``fisher_rule`` prediction-for-
+  prediction, and ``mc_classify`` is bit-identical through the
+  deduplicated ``classifier.classify_scores``;
+* the escalation ladder is bounded and honest: injected divergence
+  fails exactly the rungs it poisons, convergence verdicts come from
+  executed-iteration counts, and a ladder that runs out of attempts
+  returns None (the caller keeps the last-good slot);
+* warm refits resume: after a data increment, the warm carry re-solves
+  in strictly fewer ADMM iterations than a cold solve of the same
+  statistics;
+* graceful degradation end to end: under ingest corruption + refit
+  divergence + refresh drops, served scores stay finite and accuracy
+  stays within slack of a fault-free twin, while the unprotected
+  baseline demonstrably collapses on the same fault plan;
+* the staleness contract mirrors PR 8: missed refreshes walk
+  live -> stale -> degraded at the caller's bound, and a publish
+  resets to live;
+* crash recovery: a serving runtime restored from its checkpoint
+  serves the same predictions as the live instance at the same slot
+  version.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streaming as st
+from repro.core.classifier import classify_scores, fisher_rule
+from repro.core.dantzig import DantzigConfig
+from repro.core.faults import Aggregation
+from repro.core.multiclass import mc_classify
+from repro.core.pipeline import BinaryHead, mc_suff_stats, suff_stats
+from repro.core.slda import hard_threshold
+from repro.stats.synthetic import (
+    make_problem,
+    sample_labeled,
+    sample_two_class,
+)
+
+CFG = DantzigConfig(tol=1e-3)
+
+
+def _problem(d=17, seed=0, rho=0.5):
+    return make_problem(d=d, n_signal=max(3, d // 4), rho=rho)
+
+
+def _chunks(x, size):
+    return [x[i:i + size] for i in range(0, x.shape[0], size)]
+
+
+# ---------------------------------------------------------------------------
+# merge exactness
+# ---------------------------------------------------------------------------
+
+def test_chunked_merge_matches_oneshot_binary():
+    """Uneven per-class chunks reproduce the one-shot SuffStats (d=17,
+    chunk 48 divides neither class count)."""
+    prob = _problem(d=17)
+    x, y = sample_two_class(jax.random.PRNGKey(0), prob, 130, 150)
+    one = suff_stats(x, y)
+    empty = jnp.zeros((0, 17))
+    acc = None
+    for cx in _chunks(x, 48):
+        s = suff_stats(cx, empty)
+        acc = s if acc is None else st.merge_suff_stats(acc, s)
+    for cy in _chunks(y, 48):
+        s = suff_stats(empty, cy)
+        acc = st.merge_suff_stats(acc, s)
+    assert int(acc.n1) == 130 and int(acc.n2) == 150
+    np.testing.assert_allclose(np.asarray(acc.sigma), np.asarray(one.sigma),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(acc.mu1), np.asarray(one.mu1),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(acc.mu2), np.asarray(one.mu2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_single_class_chunks_merge_exactly():
+    """A chunk that misses a class entirely (NaN mean from the empty
+    side) must not poison the merge: where-SELECT, never 0 * NaN."""
+    prob = _problem(d=9)
+    x, y = sample_two_class(jax.random.PRNGKey(1), prob, 60, 70)
+    empty = jnp.zeros((0, 9))
+    only_x = suff_stats(x, empty)
+    assert not np.isfinite(np.asarray(only_x.mu2)).any()
+    merged = st.merge_suff_stats(only_x, suff_stats(empty, y))
+    one = suff_stats(x, y)
+    assert np.isfinite(np.asarray(merged.sigma)).all()
+    np.testing.assert_allclose(np.asarray(merged.sigma),
+                               np.asarray(one.sigma), atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(merged.mu2), np.asarray(one.mu2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_merge_matches_oneshot_multiclass():
+    """K=3 chunked MCStats merge == one-shot on the full stream (d=13,
+    n=205 not a multiple of the 64-chunk)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(k1, (205, 13))
+    labels = jax.random.randint(k2, (205,), 0, 3)
+    one = mc_suff_stats(x, labels, 3)
+    acc = None
+    for i in range(0, 205, 64):
+        s = mc_suff_stats(x[i:i + 64], labels[i:i + 64], 3)
+        acc = s if acc is None else st.merge_mc_stats(acc, s)
+    np.testing.assert_array_equal(np.asarray(acc.counts),
+                                  np.asarray(one.counts))
+    np.testing.assert_allclose(np.asarray(acc.sigma), np.asarray(one.sigma),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(acc.means), np.asarray(one.means),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rank1_stream_matches_oneshot():
+    """Single-sample (rank-1) ingest, the finest chunking, stays exact."""
+    prob = _problem(d=7)
+    x, y = sample_two_class(jax.random.PRNGKey(3), prob, 25, 20)
+    one = suff_stats(x, y)
+    empty = jnp.zeros((0, 7))
+    acc = suff_stats(x[:1], empty)
+    for i in range(1, 25):
+        acc = st.merge_suff_stats(acc, suff_stats(x[i:i + 1], empty))
+    for i in range(20):
+        acc = st.merge_suff_stats(acc, suff_stats(empty, y[i:i + 1]))
+    np.testing.assert_allclose(np.asarray(acc.sigma), np.asarray(one.sigma),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_head_stats_roundtrip():
+    """head_stats_of rebuilds the exact HeadStats the head would emit."""
+    prob = _problem(d=11)
+    x, y = sample_two_class(jax.random.PRNGKey(4), prob, 40, 44)
+    direct = BinaryHead().stats(x, y)
+    rebuilt = st.head_stats_of(direct.aux)
+    np.testing.assert_array_equal(np.asarray(direct.sigma),
+                                  np.asarray(rebuilt.sigma))
+    np.testing.assert_array_equal(np.asarray(direct.rhs),
+                                  np.asarray(rebuilt.rhs))
+
+
+# ---------------------------------------------------------------------------
+# screening / quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("poison", ["nan", "inf", "garbage"])
+def test_quarantine_bit_identical(poison):
+    prob = _problem(d=10)
+    x, y = sample_two_class(jax.random.PRNGKey(5), prob, 50, 50)
+    acc = suff_stats(x, y)
+    fill = {"nan": jnp.nan, "inf": jnp.inf, "garbage": 1e12}[poison]
+    bad = jnp.full((8, 10), fill)
+    bad_stats = suff_stats(bad, jnp.zeros((0, 10)))
+    w = st.screen_batch(Aggregation(envelope=1e6), bad)
+    assert float(w) == 0.0
+    after = st.ingest_stats(acc, bad_stats, w)
+    for got, want in zip(jax.tree.leaves(after), jax.tree.leaves(acc)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clean_batch_passes_screen_and_merges():
+    prob = _problem(d=10)
+    x, y = sample_two_class(jax.random.PRNGKey(6), prob, 50, 50)
+    acc = suff_stats(x, y)
+    bx, by = sample_two_class(jax.random.PRNGKey(7), prob, 20, 20)
+    w = st.screen_batch(Aggregation(envelope=1e6), bx, by)
+    assert float(w) == 1.0
+    after = st.ingest_stats(acc, suff_stats(bx, by), w)
+    assert int(after.n1) == 70 and int(after.n2) == 70
+    one = suff_stats(jnp.concatenate([x, bx]), jnp.concatenate([y, by]))
+    np.testing.assert_allclose(np.asarray(after.sigma), np.asarray(one.sigma),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_garbage_without_envelope_is_not_screened():
+    """Finite garbage needs the envelope opt-in, mirroring the PR 8
+    wire-screening semantics."""
+    bad = jnp.full((4, 6), 1e12)
+    assert float(st.screen_batch(Aggregation(envelope=None), bad)) == 1.0
+    assert float(st.screen_batch(Aggregation(envelope=1e6), bad)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# classifier dedup parity
+# ---------------------------------------------------------------------------
+
+def test_binary_slot_matches_fisher_rule():
+    """The serving slot's 2-column scores reproduce eq. 1.1's rule
+    prediction-for-prediction (equal priors)."""
+    prob = _problem(d=17)
+    x, y = sample_two_class(jax.random.PRNGKey(8), prob, 120, 140)
+    aux = suff_stats(x, y)
+    res, _ = st.refit_with_escalation(st.head_stats_of(aux), 0.1, 0.2,
+                                      CFG, None)
+    slot = st.slot_from_stats(aux, res.beta_tilde, 1e-3, version=1)
+    z, _ = sample_labeled(jax.random.PRNGKey(9), prob, 400)
+    pred, scores = st.classify_batch(z, slot.beta, slot.means, None)
+    beta_vec = hard_threshold(res.beta_tilde, 1e-3).reshape(-1)
+    want = fisher_rule(z, beta_vec, aux.mu1, aux.mu2)
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(want))
+    assert scores.shape == (400, 2)
+
+
+def test_mc_classify_identical_through_dedup():
+    """mc_classify == argmax(classify_scores) bitwise, priors and not."""
+    key = jax.random.PRNGKey(10)
+    z = jax.random.normal(key, (64, 12))
+    beta = jax.random.normal(jax.random.fold_in(key, 1), (12, 4))
+    means = jax.random.normal(jax.random.fold_in(key, 2), (4, 12))
+    priors = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    for p in (None, priors):
+        got = mc_classify(z, beta, means, p)
+        want = jnp.argmax(classify_scores(z, beta, means, p), axis=-1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_priors_shift_decisions():
+    """The + log pi_k term must reach the argmax (lopsided priors pull
+    borderline queries toward the heavy class)."""
+    z = jnp.zeros((1, 2))
+    beta = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+    means = jnp.asarray([[0.1, 0.0], [0.0, 0.1]])
+    flat = st.classify_batch(z, beta, means, jnp.asarray([0.5, 0.5]))[0]
+    tilted = st.classify_batch(z, beta, means, jnp.asarray([0.99, 0.01]))[0]
+    assert int(flat[0]) != int(tilted[0]) or int(tilted[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# refit: warm resume + escalation ladder
+# ---------------------------------------------------------------------------
+
+def test_warm_refit_fewer_iters_than_cold():
+    prob = _problem(d=17)
+    x, y = sample_two_class(jax.random.PRNGKey(11), prob, 120, 120)
+    aux = suff_stats(x, y)
+    res0, _ = st.refit_with_escalation(st.head_stats_of(aux), 0.1, 0.2,
+                                       CFG, None)
+    bx, by = sample_two_class(jax.random.PRNGKey(12), prob, 40, 40)
+    aux = st.merge_suff_stats(aux, suff_stats(bx, by))
+    hs = st.head_stats_of(aux)
+    warm = st.refit_step(hs, 0.1, 0.2, CFG, carry=res0.carry)
+    cold = st.refit_step(hs, 0.1, 0.2, CFG)
+    warm_total = int(np.max(np.asarray(warm.iters_beta))) + int(
+        np.max(np.asarray(warm.iters_theta)))
+    cold_total = int(np.max(np.asarray(cold.iters_beta))) + int(
+        np.max(np.asarray(cold.iters_theta)))
+    assert warm_total < cold_total, (warm_total, cold_total)
+    assert st.refit_converged(warm, CFG) and st.refit_converged(cold, CFG)
+
+
+def test_escalation_ladder_recovers_and_logs():
+    prob = _problem(d=12)
+    x, y = sample_two_class(jax.random.PRNGKey(13), prob, 80, 80)
+    hs = st.head_stats_of(suff_stats(x, y))
+    cold, _ = st.refit_with_escalation(hs, 0.1, 0.2, CFG, None)
+    res, log = st.refit_with_escalation(hs, 0.1, 0.2, CFG, cold.carry,
+                                        inject_fail_attempts=2)
+    assert res is not None
+    assert [e["attempt"] for e in log] == ["warm", "cold", "refactor"]
+    assert [e["converged"] for e in log] == [False, False, True]
+    assert np.isfinite(np.asarray(res.beta_tilde)).all()
+
+
+def test_escalation_ladder_bounded():
+    """max_attempts=1 with one injected failure -> honest None."""
+    prob = _problem(d=12)
+    x, y = sample_two_class(jax.random.PRNGKey(14), prob, 80, 80)
+    hs = st.head_stats_of(suff_stats(x, y))
+    res, log = st.refit_with_escalation(
+        hs, 0.1, 0.2, CFG, None,
+        policy=st.EscalationPolicy(max_attempts=1),
+        inject_fail_attempts=1)
+    assert res is None and len(log) == 1 and not log[0]["converged"]
+
+
+def test_nonfinite_stats_fail_verdict():
+    """A refit on NaN statistics must never pass the verdict."""
+    prob = _problem(d=10)
+    x, y = sample_two_class(jax.random.PRNGKey(15), prob, 60, 60)
+    aux = suff_stats(x, y)
+    hs = st.head_stats_of(aux)._replace(
+        sigma=jnp.full((10, 10), jnp.nan))
+    res = st.refit_step(hs, 0.1, 0.2, CFG)
+    assert not st.refit_converged(res, CFG)
+
+
+# ---------------------------------------------------------------------------
+# fault plans + the state machine
+# ---------------------------------------------------------------------------
+
+def test_serve_fault_plan_deterministic():
+    sched = st.ServeFaultSchedule(0.4, 0.5, 0.3, seed=7)
+    a, b = sched.plan(32), sched.plan(32)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert a.corrupt.shape == (32,)
+    # rate 0 schedules fire nothing
+    quiet = st.ServeFaultSchedule().plan(16)
+    assert not quiet.corrupt.any() and not quiet.drop.any()
+    with pytest.raises(ValueError):
+        st.ServeFaultSchedule(corrupt_ingest=1.5).validate()
+
+
+def test_slot_status_contract():
+    assert st.slot_status(0, 2) == st.STATUS_LIVE
+    assert st.slot_status(1, 2) == st.STATUS_STALE
+    assert st.slot_status(2, 2) == st.STATUS_STALE
+    assert st.slot_status(3, 2) == st.STATUS_DEGRADED
+    assert st.slot_status(1, 0) == st.STATUS_DEGRADED
+
+
+def _runtime(d=16, seed=16, **kw):
+    prob = _problem(d=d)
+    x, y = sample_two_class(jax.random.PRNGKey(seed), prob, 100, 100)
+    rt = st.ServingRuntime(suff_stats(x, y), 0.1, 0.2, 1e-3, cfg=CFG, **kw)
+    return prob, rt
+
+
+def test_runtime_staleness_walk():
+    """Dropped refreshes walk live -> stale -> degraded; a publish
+    resets to live and bumps the version."""
+    prob, rt = _runtime(staleness_bound=2)
+    assert rt.status == st.STATUS_LIVE and int(rt.slot.version) == 1
+    v0 = np.asarray(rt.slot.beta)
+    for want in (st.STATUS_STALE, st.STATUS_STALE, st.STATUS_DEGRADED):
+        assert rt.refresh(drop=True) is False
+        assert rt.status == want
+    # the slot itself never changed while degraded
+    np.testing.assert_array_equal(np.asarray(rt.slot.beta), v0)
+    assert rt.refresh() is True
+    assert rt.status == st.STATUS_LIVE and int(rt.slot.version) == 2
+
+
+def test_failed_refit_keeps_last_good_slot():
+    """A ladder that exhausts its attempts must not touch the slot."""
+    prob, rt = _runtime(
+        escalation=st.EscalationPolicy(max_attempts=1))
+    before = np.asarray(rt.slot.beta)
+    assert rt.refresh(inject_diverge=1) is False
+    np.testing.assert_array_equal(np.asarray(rt.slot.beta), before)
+    assert rt.status == st.STATUS_STALE
+    # scores off the last-good slot stay finite
+    z, _ = sample_labeled(jax.random.PRNGKey(17), prob, 64)
+    _, scores = rt.classify(z)
+    assert np.isfinite(np.asarray(scores)).all()
+
+
+# ---------------------------------------------------------------------------
+# chaos: protected within slack of fault-free, unprotected collapses
+# ---------------------------------------------------------------------------
+
+def _run_stream(rt, prob, plan, ticks, seed=1000, refit_every=2):
+    key = jax.random.PRNGKey(seed)
+    accs, finite = [], True
+    for t in range(ticks):
+        key, k1, k2 = jax.random.split(key, 3)
+        z, lab = sample_labeled(k1, prob, 250)
+        pred, scores = rt.classify(z)
+        finite &= bool(np.isfinite(np.asarray(scores)).all())
+        accs.append(float(jnp.mean(pred == lab)))
+        bx, by = sample_two_class(k2, prob, 40, 40)
+        code = int(plan.corrupt[t]) if plan is not None else 0
+        bx, by = st.corrupt_batch_arrays(code, (bx, by))
+        rt.ingest_batch(suff_stats(bx, by), bx, by)
+        if (t + 1) % refit_every == 0:
+            drop = bool(plan.drop[t]) if plan is not None else False
+            div = int(plan.diverge[t]) if plan is not None else 0
+            rt.refresh(drop=drop, inject_diverge=div)
+    return float(np.mean(accs)), finite
+
+
+def test_chaos_protected_vs_unprotected():
+    """The acceptance gate: same stream, same fault plan -- protected
+    serving stays finite and within 0.02 of fault-free accuracy, the
+    unprotected baseline demonstrably degrades."""
+    prob = _problem(d=20)
+    x, y = sample_two_class(jax.random.PRNGKey(18), prob, 150, 150)
+    aux0 = suff_stats(x, y)
+    ticks = 10
+    plan = st.ServeFaultSchedule(
+        corrupt_ingest=0.5, diverge_refit=0.6, drop_refresh=0.25,
+        seed=3).plan(ticks)
+    assert plan.corrupt.any() and plan.diverge.any()
+
+    def fresh(protect):
+        return st.ServingRuntime(aux0, 0.1, 0.2, 1e-3, cfg=CFG,
+                                 staleness_bound=2, protect=protect)
+
+    acc_clean, fin_clean = _run_stream(fresh(True), prob, None, ticks)
+    acc_prot, fin_prot = _run_stream(fresh(True), prob, plan, ticks)
+    acc_unprot, fin_unprot = _run_stream(fresh(False), prob, plan, ticks)
+    assert fin_clean and fin_prot
+    assert acc_prot >= acc_clean - 0.02, (acc_prot, acc_clean)
+    degraded = (not fin_unprot) or (acc_unprot < acc_clean - 0.02)
+    assert degraded, (acc_unprot, acc_clean, fin_unprot)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint wiring
+# ---------------------------------------------------------------------------
+
+def test_runtime_checkpoint_restore_parity(tmp_path):
+    prob, rt = _runtime(ckpt_dir=str(tmp_path))
+    bx, by = sample_two_class(jax.random.PRNGKey(19), prob, 40, 40)
+    rt.ingest_batch(suff_stats(bx, by), bx, by)
+    assert rt.refresh() is True
+    restored = st.ServingRuntime.restore(
+        str(tmp_path), rt.aux, 0.1, 0.2, 1e-3, cfg=CFG)
+    assert int(restored.slot.version) == int(rt.slot.version)
+    z, _ = sample_labeled(jax.random.PRNGKey(20), prob, 300)
+    p_live, s_live = rt.classify(z)
+    p_rest, s_rest = restored.classify(z)
+    np.testing.assert_array_equal(np.asarray(p_live), np.asarray(p_rest))
+    np.testing.assert_array_equal(np.asarray(s_live), np.asarray(s_rest))
+    # and the restored runtime can keep refitting (carry survived)
+    assert restored.refresh() is True
+    assert int(restored.slot.version) == int(rt.slot.version) + 1

@@ -139,14 +139,30 @@ def test_train_driver_smoke():
     assert "loss" in res.stdout
 
 
-def test_serve_driver_smoke():
+def test_serve_driver_smoke(tmp_path):
+    """The SLDA serving CLI: smoke stream + checkpoint restore parity."""
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     res = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-1.3b",
-         "--smoke", "--batch", "2", "--prompt-len", "4", "--gen", "4"],
+        [sys.executable, "-m", "repro.launch.serve", "--smoke",
+         "--ckpt-dir", str(tmp_path)],
         capture_output=True, text=True, timeout=480, env=env, cwd=REPO,
     )
     assert res.returncode == 0, res.stderr[-4000:]
+    assert "sustained qps" in res.stdout
+    assert "checkpoint restore OK" in res.stdout
+
+
+def test_serve_driver_chaos_leg():
+    """The chaos CLI leg asserts the degradation contract inline."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--smoke", "--chaos",
+         "--corrupt-ingest", "0.3", "--diverge-refit", "0.5",
+         "--drop-refresh", "0.2"],
+        capture_output=True, text=True, timeout=480, env=env, cwd=REPO,
+    )
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "fault-free twin accuracy" in res.stdout
 
 
 def test_checkpoint_roundtrip(tmp_path):
@@ -163,6 +179,37 @@ def test_checkpoint_roundtrip(tmp_path):
     restored = restore_checkpoint(str(tmp_path), 11, target)
     for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
         np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_latest_step_skips_torn_write(tmp_path):
+    """Kill-mid-write regression: a truncated step file (a writer that
+    died before the atomic rename, or a torn copy) must be SKIPPED by
+    latest_step, and the previous good step must restore."""
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+    tree = {"w": jnp.arange(12.0).reshape(3, 4), "step": jnp.int32(1)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    good = (tmp_path / "step_000000001.npz").read_bytes()
+    # a torn newer step: first half of a valid archive (no central dir)
+    (tmp_path / "step_000000002.npz").write_bytes(good[: len(good) // 2])
+    assert latest_step(str(tmp_path)) == 1
+    target = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    restored = restore_checkpoint(str(tmp_path), 1, target)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_latest_step_ignores_tmp_and_garbage(tmp_path):
+    """Leftover mkstemp .tmp files and non-zip bytes under the step
+    pattern never win; an all-torn dir reports no checkpoint at all."""
+    from repro.checkpoint import latest_step, save_checkpoint
+
+    assert latest_step(str(tmp_path)) is None
+    (tmp_path / "step_000000009.npz").write_bytes(b"not a zip archive")
+    (tmp_path / "tmpabc123.tmp").write_bytes(b"half-written scratch")
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.ones((2,))})
+    assert latest_step(str(tmp_path)) == 3
 
 
 def test_dryrun_single_combo_small_mesh():
