@@ -203,7 +203,7 @@ def main(paper: bool = False) -> None:
         "stale_smax": max_stale,
         **chaos,
     }
-    write_csv("serving", header, stale_rows)
+    write_csv("serving.csv", header, stale_rows)
     jpath = write_bench_json("serving", header, stale_rows,
                              warm_vs_cold=warm_vs_cold, serving=gate,
                              paper=paper)
