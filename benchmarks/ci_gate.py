@@ -28,6 +28,12 @@ and exits nonzero when
     within ``COMPRESSION_F1_DRIFT``.  Run-volatile payload fields
     (``generated_unix``, ``host``) are stripped by :func:`comparable`
     before any cross-run diff;
+  * the gated bit-budget schedule regresses (``compressed_rounds``'s
+    ``schedule`` payload): TOTAL (uplink + downlink) bits over the
+    budget fraction of the dense total, F1 below dense parity, or --
+    cross-PR at an unchanged operating point -- a realized per-round
+    ``(k_up, k_down)`` plan or bit total differing AT ALL from the
+    committed baseline;
   * wall-clock regresses more than ``WALLCLOCK_TOL`` against the
     COMMITTED root ``BENCH_*.json`` baselines for the fused-solver and
     lambda-path suites, summed over the (d, k, L) shapes both runs
@@ -271,6 +277,72 @@ def _gate_compression(payload: dict, failures: list[str]) -> int:
     return 1
 
 
+def _gate_schedule(payload: dict, failures: list[str]) -> int:
+    """The bit-budget schedule gates (two-way transport, DESIGN.md §13).
+
+    Fresh-run: the gated schedule's TOTAL (uplink + downlink) bits must
+    fit its budget fraction of the dense total at F1 parity with the
+    dense rounds.  Cross-PR: at an unchanged operating point the
+    REALIZED schedule -- the per-round ``(k_up, k_down)`` plan and the
+    per-direction bit totals -- must match the committed baseline
+    EXACTLY (planning is deterministic host-side arithmetic, so any
+    diff is a wire-format change), and F1 must not drift below the
+    committed number by more than ``COMPRESSION_F1_DRIFT``.
+    """
+    gate = payload["schedule"]
+    tag = f"compressed_rounds schedule {gate.get('schedule', '?')}"
+    ratio = float(gate["bits_ratio"])
+    budget = float(gate["bits_budget"])
+    if ratio > budget:
+        failures.append(
+            f"{tag}: total (up+down) bits_ratio {ratio:.3f} over the "
+            f"{budget:.2f} budget")
+    f1_slack = float(gate.get("f1_slack", COMPRESSION_F1_DRIFT))
+    if float(gate["f1_sched"]) < float(gate["f1_dense"]) - f1_slack:
+        failures.append(
+            f"{tag}: F1 {gate['f1_sched']:.3f} trails dense rounds "
+            f"{gate['f1_dense']:.3f} by more than {f1_slack}")
+    else:
+        print(f"[ci_gate] {tag}: {gate['total_bits']} of "
+              f"{gate['dense_total_bits']} total bits ({ratio:.0%}), "
+              f"F1 {gate['f1_sched']:.3f} vs dense "
+              f"{gate['f1_dense']:.3f} OK")
+
+    base = _committed_baseline("compressed_rounds")
+    if base is None or "schedule" not in comparable(base):
+        _skip("compressed_rounds", "no committed schedule payload "
+              "-- cross-PR schedule gate skipped")
+        return 1
+    bgate = comparable(base)["schedule"]
+    point = ("schedule", "mode", "taper", "quantize", "down_fraction",
+             "budget_bits", "d", "m", "t_rounds")
+    if any(gate.get(k) != bgate.get(k) for k in point):
+        _skip("compressed_rounds", "gated schedule operating point "
+              "changed vs baseline -- cross-PR schedule gate skipped")
+        return 1
+    ref = base.get("_baseline_ref", "HEAD")
+    for key in ("up_bits", "down_bits", "total_bits", "dense_total_bits"):
+        if int(gate[key]) != int(bgate[key]):
+            failures.append(
+                f"{tag}: {key} {gate[key]} != committed {bgate[key]} at "
+                f"{ref} -- the wire format changed under an unchanged "
+                "operating point")
+    plan = [[int(k) for k in pair] for pair in gate["plan"]]
+    bplan = [[int(k) for k in pair] for pair in bgate["plan"]]
+    if plan != bplan:
+        failures.append(
+            f"{tag}: realized plan {plan} != committed {bplan} at {ref}")
+    drift = float(bgate["f1_sched"]) - float(gate["f1_sched"])
+    if drift > COMPRESSION_F1_DRIFT:
+        failures.append(
+            f"{tag}: F1 {gate['f1_sched']:.3f} drifted {drift:.3f} below "
+            f"the committed baseline {bgate['f1_sched']:.3f} at {ref}")
+    else:
+        print(f"[ci_gate] {tag}: plan and bits exact and F1 within "
+              f"{COMPRESSION_F1_DRIFT} of baseline at {ref} OK")
+    return 1
+
+
 def _gate_faults(payload: dict, failures: list[str]) -> int:
     """The fault-tolerance gates (``benchmarks/fault_rounds.py``).
 
@@ -491,6 +563,8 @@ def main() -> int:
                       f"{rec['f1_cent']:.3f} OK")
         if name == "compressed_rounds" and "compression" in payload:
             checked += _gate_compression(payload, failures)
+        if name == "compressed_rounds" and "schedule" in payload:
+            checked += _gate_schedule(payload, failures)
         if name == "fault_rounds" and "faults" in payload:
             checked += _gate_faults(payload, failures)
         if name == "serving" and "serving" in payload:

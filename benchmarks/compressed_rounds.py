@@ -29,10 +29,21 @@ Gates (also enforced by ``benchmarks/ci_gate.py``):
     dense trajectory BIT-EXACTLY (set-semantics decode), asserted on
     every repeat.
 
+Since the two-way transport layer (DESIGN.md §13) the same solves also
+drive the SCHEDULE sweep: round-adaptive :class:`~repro.core.transport.
+BitBudget` planners (constant / taper / probe-weighted adaptive) that
+compress BOTH directions under one TOTAL bit budget.  The gated taper
+schedule must move <= 25% of the dense TOTAL (uplink + downlink) bits
+at F1 parity with the dense rounds, and its planned per-round
+``(k_up, k_down)`` pairs and bit totals are compared EXACTLY against
+the committed baseline by ``benchmarks/ci_gate.py``.
+
 Quick mode (default, CI-sized): the multi_round quick operating point
 at its largest machine count -- d=100, N=6000, m=60, 2 repeats, the
 same draws (same seed fold) as the m-barrier benchmark.  ``--paper``
-scales to d=200, N=10000, m=80, rho=0.8, 6 repeats.
+scales to the section-5 grid of :mod:`repro.configs.paper_synthetic`
+(d=200, N=10000, rho=0.8) at m=80, 6 repeats.  ``--schedules`` runs
+the schedule sweep alone (CI-sized, no artifact write) as a fast gate.
 """
 
 from __future__ import annotations
@@ -49,12 +60,14 @@ from benchmarks.common import (
     write_bench_json,
     write_csv,
 )
+from repro.configs import SYNTHETIC
 from repro.core import compression as compression_core
 from repro.core import rounds as rounds_core
 from repro.core.compression import Compression
 from repro.core.dantzig import DantzigConfig
 from repro.core.pipeline import BinaryHead
 from repro.core.slda import centralized_slda
+from repro.core.transport import BitBudget, CommPlan, Transport
 from repro.stats import synthetic
 
 T_GRID = np.geomspace(0.005, 2.0, 25)
@@ -67,6 +80,33 @@ BITS_BUDGET = 0.25
 F1_SLACK = 0.01
 REC_SLACK = 0.01
 GATED_CONFIG = "top20pct-int8"
+GATED_SCHEDULE = "taper50-int8"
+# probe-measured per-round delta norms on the quick operating point
+# (the dense trajectory's ||bar_t - bar_{t-1}||, seed 0): the input the
+# "adaptive" planner needs, since trace time cannot see data
+PROBE_WEIGHTS = (1.63, 0.63, 0.55)
+
+
+def schedules(dense_total_bits: int) -> list[tuple[str, BitBudget]]:
+    """The swept :class:`BitBudget` planners, budgets as fractions of
+    the dense TOTAL (uplink + downlink, all ``T_GATE`` rounds).
+
+    ``taper50-int8`` is the gated point (<= 25% of dense total);
+    ``const-int8`` spends the same budget evenly (no front-loading);
+    ``adaptive-int8`` follows the probe-measured round deltas;
+    ``taper50-int8-b50pct`` is the half-dense reference.
+    """
+    budget = int(BITS_BUDGET * dense_total_bits)
+    return [
+        (GATED_SCHEDULE, BitBudget(budget, "taper", taper=0.5,
+                                   quantize="int8", down_fraction=0.5)),
+        ("const-int8", BitBudget(budget, "constant", quantize="int8")),
+        ("adaptive-int8", BitBudget(budget, "adaptive", quantize="int8",
+                                    weights=PROBE_WEIGHTS)),
+        ("taper50-int8-b50pct", BitBudget(int(0.5 * dense_total_bits),
+                                          "taper", taper=0.5,
+                                          quantize="int8")),
+    ]
 
 
 def configs(d: int) -> list[tuple[str, Compression | None]]:
@@ -86,10 +126,12 @@ def configs(d: int) -> list[tuple[str, Compression | None]]:
     ]
 
 
-def accuracy_vs_bits(paper: bool, seed: int = 0):
+def accuracy_vs_bits(paper: bool, seed: int = 0, schedules_only: bool = False):
     if paper:
-        d, n_total, m, repeats = 200, 10_000, 80, 6
-        rho, iters = 0.8, 600
+        # the section-5 synthetic grid (repro.configs.paper_synthetic)
+        # at the m=80 operating point
+        d, n_total, m, repeats = SYNTHETIC.d, SYNTHETIC.N, 80, 6
+        rho, iters = SYNTHETIC.rho, 600
     else:
         # the multi_round quick operating point at its largest m: the
         # regime where refinement rounds matter most is where their
@@ -103,8 +145,10 @@ def accuracy_vs_bits(paper: bool, seed: int = 0):
     n1 = n2 = n // 2
     lam = 0.30 * math.sqrt(math.log(d) / n) * b1
     lam_c = 0.30 * math.sqrt(math.log(d) / n_total) * b1
-    swept = configs(d)
+    swept = [] if schedules_only else configs(d)
     dense_bits = compression_core.dense_uplink_bits(d, 1)
+    dense_total = T_GATE * dense_bits
+    swept_schedules = schedules(dense_total)
 
     acc: dict[tuple, list] = {}
     for rep in range(repeats):
@@ -115,7 +159,8 @@ def accuracy_vs_bits(paper: bool, seed: int = 0):
                                 lam_c, cfg)
         acc.setdefault("l2_cent", []).append(
             tuned_metrics(cent, problem.beta_star, T_GRID)["l2"])
-        # ONE set of per-machine solves serves every codec and every T
+        # ONE set of per-machine solves serves every codec, every
+        # schedule and every T
         _, ws = rounds_core.simulate_multi_round(
             BinaryHead(), (xs, ys), lam=lam, lam_prime=lam,
             rounds=1, cfg=cfg)
@@ -130,12 +175,30 @@ def accuracy_vs_bits(paper: bool, seed: int = 0):
                                    problem.beta_star, T_GRID)
                 acc.setdefault((name, t_rounds, "f1"), []).append(mt["f1"])
                 acc.setdefault((name, t_rounds, "l2"), []).append(mt["l2"])
-        # identity-codec premise: k_top = d, unquantized reproduces the
-        # dense trajectory bit for bit (the EF stream is exactly zero)
-        ident = rounds_core.simulate_round_loop(
-            ws, rounds=ROUNDS, compression=Compression(d),
-            return_all_rounds=True)
-        np.testing.assert_array_equal(np.asarray(ident), dense_traj)
+        if not schedules_only:
+            # identity-codec premise: k_top = d, unquantized reproduces
+            # the dense trajectory bit for bit (the EF stream is zero)
+            ident = rounds_core.simulate_round_loop(
+                ws, rounds=ROUNDS, compression=Compression(d),
+                return_all_rounds=True)
+            np.testing.assert_array_equal(np.asarray(ident), dense_traj)
+        # the schedule sweep compresses BOTH wires; planned for T_GATE
+        # rounds (a schedule is a whole-trajectory budget, so unlike a
+        # fixed codec it is not truncatable to a shorter T)
+        dense_gate = rounds_core.simulate_round_loop(
+            ws, rounds=T_GATE, return_all_rounds=True)
+        mt = tuned_metrics(dense_gate[T_GATE - 1][:, 0],
+                           problem.beta_star, T_GRID)
+        acc.setdefault(("sched-dense", "f1"), []).append(mt["f1"])
+        acc.setdefault(("sched-dense", "l2"), []).append(mt["l2"])
+        for name, sched in swept_schedules:
+            bars = rounds_core.simulate_round_loop(
+                ws, rounds=T_GATE, comm=CommPlan(schedule=sched),
+                return_all_rounds=True)
+            mt = tuned_metrics(bars[T_GATE - 1][:, 0],
+                               problem.beta_star, T_GRID)
+            acc.setdefault(("sched", name, "f1"), []).append(mt["f1"])
+            acc.setdefault(("sched", name, "l2"), []).append(mt["l2"])
 
     def mean(k):
         return sum(acc[k]) / len(acc[k])
@@ -155,64 +218,130 @@ def accuracy_vs_bits(paper: bool, seed: int = 0):
                          t_rounds, mean((name, t_rounds, "f1")),
                          mean((name, t_rounds, "l2"))])
 
-    # the headline gate: dense-level recovery at <= 25% of the bits.
-    # recovery normalizes by the SAME denominators for every codec (the
-    # dense T=1 start and the centralized floor), so it compares what
-    # the rounds themselves achieve under each uplink.
-    l2_cent = mean("l2_cent")
-    l2_t1_dense = mean(("dense", 1, "l2"))
+    gate = None
+    if not schedules_only:
+        # the headline gate: dense-level recovery at <= 25% of the
+        # bits.  recovery normalizes by the SAME denominators for
+        # every codec (the dense T=1 start and the centralized floor),
+        # so it compares what the rounds achieve under each uplink.
+        l2_cent = mean("l2_cent")
+        l2_t1_dense = mean(("dense", 1, "l2"))
 
-    def recovery(name):
-        l2_t = mean((name, T_GATE, "l2"))
-        return (l2_t1_dense - l2_t) / max(l2_t1_dense - l2_cent, 1e-12)
+        def recovery(name):
+            l2_t = mean((name, T_GATE, "l2"))
+            return (l2_t1_dense - l2_t) / max(l2_t1_dense - l2_cent, 1e-12)
 
-    gated = dict(swept)[GATED_CONFIG]
-    gate = {
-        "m": m, "d": d, "t_rounds": T_GATE, "config": GATED_CONFIG,
-        "k_top": gated.k_top, "quantize": gated.quantize,
-        "bits_per_round": compression_core.uplink_bits(gated, d, 1),
-        "dense_bits_per_round": dense_bits,
-        "bits_ratio": compression_core.compression_ratio(gated, d, 1),
+        gated = dict(swept)[GATED_CONFIG]
+        gate = {
+            "m": m, "d": d, "t_rounds": T_GATE, "config": GATED_CONFIG,
+            "k_top": gated.k_top, "quantize": gated.quantize,
+            "bits_per_round": compression_core.uplink_bits(gated, d, 1),
+            "dense_bits_per_round": dense_bits,
+            "bits_ratio": compression_core.compression_ratio(gated, d, 1),
+            "bits_budget": BITS_BUDGET,
+            "f1_dense": mean(("dense", T_GATE, "f1")),
+            "f1_comp": mean((GATED_CONFIG, T_GATE, "f1")),
+            "f1_slack": F1_SLACK,
+            "rec_dense": recovery("dense"),
+            "rec_comp": recovery(GATED_CONFIG),
+            "rec_slack": REC_SLACK,
+            "l2_cent": l2_cent, "l2_t1_dense": l2_t1_dense,
+            "l2_t3_dense": mean(("dense", T_GATE, "l2")),
+            "l2_t3_comp": mean((GATED_CONFIG, T_GATE, "l2")),
+        }
+
+    # schedule rows: realized plans + TOTAL (up + down) accounting via
+    # Transport -- the same numbers the AxisPayloadBits contracts pin
+    sched_header = ["schedule", "mode", "budget_bits", "plan_k",
+                    "up_bits", "down_bits", "total_bits", "total_ratio",
+                    "F1", "l2"]
+    sched_rows = [["dense", "dense", dense_total, "-", dense_total, 0,
+                   dense_total, 1.0, mean(("sched-dense", "f1")),
+                   mean(("sched-dense", "l2"))]]
+    for name, sched in swept_schedules:
+        tr = Transport(CommPlan(schedule=sched), d, 1, T_GATE)
+        up_b, down_b = tr.uplink_total_bits(), tr.downlink_total_bits()
+        plan_k = "/".join(f"{up.k_top}+{down.k_top}"
+                          for up, down in tr.links)
+        sched_rows.append([
+            name, sched.mode, sched.total_bits, plan_k, up_b, down_b,
+            up_b + down_b, (up_b + down_b) / dense_total,
+            mean(("sched", name, "f1")), mean(("sched", name, "l2"))])
+
+    gated_sched = dict(swept_schedules)[GATED_SCHEDULE]
+    tr = Transport(CommPlan(schedule=gated_sched), d, 1, T_GATE)
+    up_b, down_b = tr.uplink_total_bits(), tr.downlink_total_bits()
+    sched_gate = {
+        "m": m, "d": d, "t_rounds": T_GATE, "schedule": GATED_SCHEDULE,
+        "mode": gated_sched.mode, "taper": gated_sched.taper,
+        "quantize": gated_sched.quantize,
+        "down_fraction": gated_sched.down_fraction,
+        "budget_bits": gated_sched.total_bits,
+        # the committed wire format, compared EXACTLY across PRs
+        "plan": [[up.k_top, down.k_top] for up, down in tr.links],
+        "up_bits": up_b, "down_bits": down_b,
+        "total_bits": up_b + down_b, "dense_total_bits": dense_total,
+        "bits_ratio": (up_b + down_b) / dense_total,
         "bits_budget": BITS_BUDGET,
-        "f1_dense": mean(("dense", T_GATE, "f1")),
-        "f1_comp": mean((GATED_CONFIG, T_GATE, "f1")),
+        "f1_dense": mean(("sched-dense", "f1")),
+        "f1_sched": mean(("sched", GATED_SCHEDULE, "f1")),
         "f1_slack": F1_SLACK,
-        "rec_dense": recovery("dense"),
-        "rec_comp": recovery(GATED_CONFIG),
-        "rec_slack": REC_SLACK,
-        "l2_cent": l2_cent, "l2_t1_dense": l2_t1_dense,
-        "l2_t3_dense": mean(("dense", T_GATE, "l2")),
-        "l2_t3_comp": mean((GATED_CONFIG, T_GATE, "l2")),
+        "l2_dense": mean(("sched-dense", "l2")),
+        "l2_sched": mean(("sched", GATED_SCHEDULE, "l2")),
     }
-    return header, rows, gate
+    return header, rows, gate, sched_header, sched_rows, sched_gate
 
 
-def main(paper: bool = False) -> None:
-    header, rows, gate = accuracy_vs_bits(paper)
-    print_table("compressed refinement uplinks: accuracy vs bits moved "
-                "(one solve set per repeat)", header, rows)
+def _assert_schedule_gate(sg: dict) -> None:
+    assert sg["bits_ratio"] <= sg["bits_budget"], (
+        "gated schedule over the total bit budget", sg)
+    assert sg["f1_sched"] >= sg["f1_dense"] - sg["f1_slack"], (
+        "bit-budget schedule lost more than 1% F1 vs dense rounds", sg)
 
-    write_csv("compressed_rounds.csv", header, rows)
-    jpath = write_bench_json("compressed_rounds", header, rows,
-                             compression=gate)
-    print(f"[compressed_rounds] wrote {jpath}")
-    print(f"[compressed_rounds] gate at m={gate['m']}, T={gate['t_rounds']}: "
-          f"{gate['config']} moves {gate['bits_per_round']} of "
-          f"{gate['dense_bits_per_round']} bits/round "
-          f"({gate['bits_ratio']:.0%}); "
-          f"F1 {gate['f1_comp']:.3f} vs dense {gate['f1_dense']:.3f}; "
-          f"recovery {gate['rec_comp']:.3f} vs dense {gate['rec_dense']:.3f}")
 
-    assert gate["bits_ratio"] <= gate["bits_budget"], (
-        "gated config over the bit budget", gate)
-    assert gate["f1_comp"] >= gate["f1_dense"] - gate["f1_slack"], (
-        "compressed rounds lost more than 1% F1 vs dense rounds", gate)
-    assert gate["rec_comp"] >= gate["rec_dense"] - gate["rec_slack"], (
-        "compressed rounds recover more than 1% less excess l2 than "
-        "dense rounds", gate)
+def main(paper: bool = False, schedules_only: bool = False) -> None:
+    header, rows, gate, sh, srows, sgate = accuracy_vs_bits(
+        paper, schedules_only=schedules_only)
+    if not schedules_only:
+        print_table("compressed refinement uplinks: accuracy vs bits "
+                    "moved (one solve set per repeat)", header, rows)
+    print_table("bit-budget schedules: accuracy vs TOTAL (up+down) bits "
+                f"at T={T_GATE}", sh, srows)
+
+    if not schedules_only:
+        write_csv("compressed_rounds.csv", header, rows)
+        write_csv("compressed_schedules.csv", sh, srows)
+        jpath = write_bench_json("compressed_rounds", header, rows,
+                                 compression=gate, schedule=sgate)
+        print(f"[compressed_rounds] wrote {jpath}")
+        print(f"[compressed_rounds] gate at m={gate['m']}, "
+              f"T={gate['t_rounds']}: "
+              f"{gate['config']} moves {gate['bits_per_round']} of "
+              f"{gate['dense_bits_per_round']} bits/round "
+              f"({gate['bits_ratio']:.0%}); "
+              f"F1 {gate['f1_comp']:.3f} vs dense {gate['f1_dense']:.3f}; "
+              f"recovery {gate['rec_comp']:.3f} vs dense "
+              f"{gate['rec_dense']:.3f}")
+
+        assert gate["bits_ratio"] <= gate["bits_budget"], (
+            "gated config over the bit budget", gate)
+        assert gate["f1_comp"] >= gate["f1_dense"] - gate["f1_slack"], (
+            "compressed rounds lost more than 1% F1 vs dense rounds", gate)
+        assert gate["rec_comp"] >= gate["rec_dense"] - gate["rec_slack"], (
+            "compressed rounds recover more than 1% less excess l2 than "
+            "dense rounds", gate)
+
+    print(f"[compressed_rounds] schedule gate at m={sgate['m']}, "
+          f"T={sgate['t_rounds']}: {sgate['schedule']} moves "
+          f"{sgate['total_bits']} (up {sgate['up_bits']} + down "
+          f"{sgate['down_bits']}) of {sgate['dense_total_bits']} total "
+          f"bits ({sgate['bits_ratio']:.0%}); F1 {sgate['f1_sched']:.3f} "
+          f"vs dense {sgate['f1_dense']:.3f}")
+    _assert_schedule_gate(sgate)
 
 
 if __name__ == "__main__":
     import sys
 
-    main(paper="--paper" in sys.argv)
+    main(paper="--paper" in sys.argv,
+         schedules_only="--schedules" in sys.argv)

@@ -81,7 +81,7 @@ def main(paper: bool = False):
     results = load_results()
     if not results:
         print("[roofline] no dry-run results yet "
-              f"(run python -m repro.launch.dryrun --all); dir={DRYRUN_DIR}")
+              f"(run python -m repro.launch.dryrun_slda); dir={DRYRUN_DIR}")
         return
     header = ["arch", "shape", "mesh", "compute_s", "memory_s",
               "collective_s", "dominant", "useful_ratio", "model_flops"]

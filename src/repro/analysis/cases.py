@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import compression as compression_core
 from repro.core import path as rpath
 from repro.core import pipeline, rounds, streaming
+from repro.core import transport as transport_core
 from repro.core.compression import Compression
 from repro.core.dantzig import DantzigConfig
 from repro.core.distributed import (
@@ -117,37 +118,60 @@ def _worker_debiased_mc():
 # rounds.worker_rounds (inside a minimal shard_map shell)
 # ---------------------------------------------------------------------------
 
-def _round_params(t_rounds, d, num_cols, comp=None, extra_bits=0):
-    """Params shared by every rounds-bearing entry: collective counts and
-    the exact per-link data-axis bit budget for T rounds, dense or
-    compressed (``extra_bits`` covers one-off payloads like the mc
-    class-means pmean).  Legacy (fault-free, unmasked) path: no
-    liveness psum; the compressed path's 2 is_finite per round are the
-    ef_step decode + the aggregate decode, both sanitized by default.
+def _comm_params(comm, t_rounds, d, num_cols, extra_bits=0):
+    """Collective counts + per-direction exact bits for a fault-free,
+    unmasked :class:`~repro.core.transport.CommPlan`.
+
+    Walks the resolved :class:`~repro.core.transport.Transport` round by
+    round (a :class:`~repro.core.transport.BitBudget` schedule changes
+    codecs per round), applying the DESIGN §10/§13 accounting: a dense
+    uplink is one (d, K) f32 psum; a compressed uplink is 2 payload
+    all_gathers (3 with int8 scales) + 2 decode-sanitize is_finite; a
+    compressed downlink is 2 payload psums (3 with int8 scales) + ONE
+    whole-block receiver screen (a dense downlink never touches the
+    wire -- the aggregate is already replicated).  ``extra_bits`` covers
+    one-off psum payloads like the mc class-means pmean.
     """
-    if comp is None:
-        per_round = compression_core.dense_uplink_bits(d, num_cols)
-        gathers_per_round = 0
-        dense_psums = t_rounds
-        screen_ops = 0
-    else:
-        per_round = compression_core.uplink_bits(comp, d, num_cols)
-        gathers_per_round = 3 if comp.quantize == "int8" else 2
-        dense_psums = 0
-        screen_ops = 2 * t_rounds
+    tr = transport_core.Transport(comm, d, num_cols, t_rounds)
+    dense_psums = down_psums = data_gathers = screen_ops = 0
+    gather_bits, psum_bits = 0, extra_bits
+    for t in range(1, t_rounds + 1):
+        up, down = tr.up(t), tr.down(t)
+        if up.compressed:
+            data_gathers += 3 if up.comp.quantize == "int8" else 2
+            gather_bits += up.bits(d, num_cols)
+            screen_ops += 2
+        else:
+            dense_psums += 1
+            psum_bits += compression_core.dense_uplink_bits(d, num_cols)
+        if down.compressed:
+            down_psums += 3 if down.comp.quantize == "int8" else 2
+            psum_bits += down.bits(d, num_cols)
+            screen_ops += 1
     return {
         "rounds": t_rounds,
         "dense_psums": dense_psums,
         "live_psums": 0,
-        "total_psums": dense_psums,
+        "total_psums": dense_psums + down_psums,
         "screen_ops": screen_ops,
-        "data_gathers": t_rounds * gathers_per_round,
-        "data_uplink_bits": t_rounds * per_round + extra_bits,
+        "data_gathers": data_gathers,
+        "data_gather_bits": gather_bits,
+        "data_psum_bits": psum_bits,
+        "data_total_bits": gather_bits + psum_bits,
     }
 
 
+def _round_params(t_rounds, d, num_cols, comp=None, extra_bits=0,
+                  down=None):
+    """Fixed-codec shorthand over :func:`_comm_params`."""
+    return _comm_params(
+        transport_core.CommPlan(uplink=comp, downlink=down),
+        t_rounds, d, num_cols, extra_bits=extra_bits)
+
+
 def _masked_round_params(t_rounds, d, num_cols, comp=None, *,
-                         faulted=False, trim=False, extra_bits=0):
+                         faulted=False, trim=False, extra_bits=0,
+                         down=None):
     """The DESIGN §11 masked-aggregation counterparts.
 
     Masked dense rounds close with a (d, K) psum + the scalar liveness
@@ -155,42 +179,54 @@ def _masked_round_params(t_rounds, d, num_cols, comp=None, *,
     masked compressed rounds gather the payload as before plus, when a
     fault plan rides along, the per-machine liveness scalar.  Screening
     is one is_finite per round on the dense wire, or (compressed) one
-    on the ef_step decode + one on the raw decoded stack."""
+    on the ef_step decode + one on the raw decoded stack.  The downlink
+    close is orthogonal to the masking and keeps its
+    :func:`_comm_params` accounting."""
     base = _round_params(t_rounds, d, num_cols, comp,
-                         extra_bits=extra_bits)
+                         extra_bits=extra_bits, down=down)
     scalar_bits = 32  # one f32 liveness scalar per round on the wire
+    dl_psums = (0 if down is None
+                else t_rounds * (3 if down.quantize == "int8" else 2))
+    dl_bits = (0 if down is None
+               else t_rounds * compression_core.uplink_bits(
+                   down, d, num_cols))
+    dl_screens = 0 if down is None else t_rounds
     if comp is None:
+        dense_bits = t_rounds * compression_core.dense_uplink_bits(
+            d, num_cols)
         if trim:
             # all_gather of the (d, K) block + the weight scalar; the
             # trimmed reduction itself is replicated local math
             base.update({
-                "dense_psums": 0, "live_psums": 0, "total_psums": 0,
+                "dense_psums": 0, "live_psums": 0,
+                "total_psums": dl_psums,
                 "data_gathers": 2 * t_rounds,
-                "screen_ops": t_rounds,
-                "data_uplink_bits": t_rounds * (
-                    compression_core.dense_uplink_bits(d, num_cols)
-                    + scalar_bits) + extra_bits,
+                "screen_ops": t_rounds + dl_screens,
+                "data_gather_bits": dense_bits + t_rounds * scalar_bits,
+                "data_psum_bits": extra_bits + dl_bits,
             })
         else:
             base.update({
                 "live_psums": t_rounds,
-                "total_psums": base["dense_psums"] + t_rounds,
-                "screen_ops": t_rounds,
-                "data_uplink_bits":
-                    base["data_uplink_bits"] + t_rounds * scalar_bits,
+                "total_psums": base["total_psums"] + t_rounds,
+                "screen_ops": t_rounds + dl_screens,
+                "data_psum_bits":
+                    base["data_psum_bits"] + t_rounds * scalar_bits,
             })
     else:
         extra_gathers = t_rounds if faulted else 0
         base.update({
             "data_gathers": base["data_gathers"] + extra_gathers,
-            "data_uplink_bits":
-                base["data_uplink_bits"] + extra_gathers * scalar_bits,
+            "data_gather_bits":
+                base["data_gather_bits"] + extra_gathers * scalar_bits,
         })
+    base["data_total_bits"] = (base["data_gather_bits"]
+                               + base["data_psum_bits"])
     return base
 
 
 def _worker_rounds_case(cfg, t_rounds, comp=None, agg=None, faults=False,
-                        staleness=0):
+                        staleness=0, comm=None):
     def build():
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         x, y = _normal(4, (30, 12)), _normal(5, (30, 12))
@@ -205,8 +241,8 @@ def _worker_rounds_case(cfg, t_rounds, comp=None, agg=None, faults=False,
             beta, _ = rounds.worker_rounds(
                 pipeline.BinaryHead(), xs, ys, lam=0.2, lam_prime=0.2,
                 rounds=t_rounds, cfg=cfg, model_axis="model",
-                model_axis_size=1, compression=comp, faults=row,
-                staleness=staleness, aggregation=agg)
+                model_axis_size=1, comm=comm, compression=comp,
+                faults=row, staleness=staleness, aggregation=agg)
             return beta
 
         spec = P("data", None)
@@ -248,6 +284,15 @@ case("rounds.worker_rounds", "rounds2-mesh1x1-d12-top4-int8-masked-faulted",
       "psum_payload": (12, 1), "pallas_calls": 0})(
     _worker_rounds_case(SCAN, 2, Compression(4, "int8"),
                         agg=Aggregation(envelope=1e6), faults=True))
+# DESIGN §13 two-way transport: the compressed downlink rides the
+# master-masked psum broadcast (values + indices, + scales when int8)
+# and adds ONE whole-block receiver screen per round
+case("rounds.worker_rounds", "rounds2-mesh1x1-d12-top5-down4-int8",
+     {**_round_params(2, 12, 1, Compression(5),
+                      down=Compression(4, "int8")),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _worker_rounds_case(SCAN, 2, comm=transport_core.CommPlan(
+        uplink=Compression(5), downlink=Compression(4, "int8"))))
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +300,7 @@ case("rounds.worker_rounds", "rounds2-mesh1x1-d12-top4-int8-masked-faulted",
 # ---------------------------------------------------------------------------
 
 def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30, comp=None,
-                    faults=None, staleness=0, agg=None):
+                    faults=None, staleness=0, agg=None, comm=None):
     def build():
         mesh = jax.make_mesh(mesh_shape, ("data", "model"))
         n = n_per * mesh_shape[0]
@@ -264,8 +309,8 @@ def _slda_face_case(cfg, t_rounds, d, mesh_shape, n_per=30, comp=None,
         def fn(x, y):
             return distributed_slda_shardmap(
                 mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=t_rounds,
-                compression=comp, faults=faults, staleness=staleness,
-                aggregation=agg)
+                comm=comm, compression=comp, faults=faults,
+                staleness=staleness, aggregation=agg)
         return fn, (x, y)
     return build
 
@@ -316,6 +361,49 @@ case("distributed.slda_shardmap", "scan-rounds2-mesh1x1-d12-trimmed",
     _slda_face_case(SCAN, 2, 12, (1, 1),
                     faults=FaultSchedule(corrupt=0.2, seed=2),
                     agg=Aggregation(trim=0.25)))
+# DESIGN §13: compressed downlinks -- dense uplink + compressed
+# downlink, both directions compressed, and on the 8-device remainder
+# mesh (k < d keeps the (k, 1) downlink psum distinct from the dense
+# (d, 1) psum the dense_psums contract counts)
+case("distributed.slda_shardmap", "scan-rounds3-mesh1x1-d12-down6",
+     {**_round_params(3, 12, 1, down=Compression(6)),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _slda_face_case(SCAN, 3, 12, (1, 1),
+                    comm=transport_core.CommPlan(downlink=Compression(6))))
+case("distributed.slda_shardmap", "scan-rounds2-mesh1x1-d12-top5-down4-int8",
+     {**_round_params(2, 12, 1, Compression(5),
+                      down=Compression(4, "int8")),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _slda_face_case(SCAN, 2, 12, (1, 1), comm=transport_core.CommPlan(
+        uplink=Compression(5), downlink=Compression(4, "int8"))))
+case("distributed.slda_shardmap",
+     "fused-rounds3-mesh2x4-d70-top16-bf16-down8-int8",
+     {**_round_params(3, 70, 1, Compression(16, "bf16"),
+                      down=Compression(8, "int8")),
+      "psum_payload": (70, 1), "pallas_calls": 2},
+     min_devices=8)(
+    _slda_face_case(FUSED, 3, 70, (2, 4), comm=transport_core.CommPlan(
+        uplink=Compression(16, "bf16"), downlink=Compression(8, "int8"))))
+# DESIGN §13 bit-budget schedules: the BitBudget planner re-plans both
+# directions per round at trace time; the pinned bits are the REALIZED
+# schedule totals (what plan_rounds fit under the budget).  Budgets are
+# sized so every planned k_top < d: a k=d downlink would put a (d, 1)
+# psum on the wire, which the dense_psums contract's shape filter
+# counts (it filters by payload shape before checking dtype)
+_TAPER = transport_core.BitBudget(total_bits=1100, mode="taper",
+                                  taper=0.5, quantize="int8")
+case("distributed.slda_shardmap", "scan-rounds3-mesh1x1-d12-taper1100",
+     {**_comm_params(transport_core.CommPlan(schedule=_TAPER), 3, 12, 1),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _slda_face_case(SCAN, 3, 12, (1, 1),
+                    comm=transport_core.CommPlan(schedule=_TAPER)))
+_CONST = transport_core.BitBudget(total_bits=1500, mode="constant",
+                                  quantize=None, down_fraction=0.25)
+case("distributed.slda_shardmap", "scan-rounds2-mesh1x1-d12-const1500",
+     {**_comm_params(transport_core.CommPlan(schedule=_CONST), 2, 12, 1),
+      "psum_payload": (12, 1), "pallas_calls": 0})(
+    _slda_face_case(SCAN, 2, 12, (1, 1),
+                    comm=transport_core.CommPlan(schedule=_CONST)))
 case("distributed.slda_shardmap", "fused-rounds3-mesh2x4-d70-masked-faulted",
      {**_masked_round_params(3, 70, 1), "psum_payload": (70, 1),
       "pallas_calls": 2},

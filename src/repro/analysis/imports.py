@@ -232,20 +232,139 @@ def pipeline_unification_violations(
     return violations
 
 
+# ---------------------------------------------------------------------------
+# reachability: no module may exist that the repo's entry points cannot reach
+# ---------------------------------------------------------------------------
+
+#: The repo's real surfaces.  The seed scaffold's LLM stack (models/,
+#: optim/, sharding/, data/, launch.train, ...) was deleted in favour of
+#: this rule: any src module unreachable from these roots -- via the
+#: import graph, ``python -m`` mains included -- is dead weight and a
+#: violation, so a dead subsystem cannot silently grow back.
+ENTRY_POINTS: Tuple[str, ...] = (
+    "repro.core",          # the paper's estimator (library surface)
+    "repro.launch.serve",  # the serving driver
+    "repro.analysis",      # trace-contract lint + this module
+)
+
+#: Out-of-tree script roots whose repro imports also seed reachability.
+SCRIPT_DIRS: Tuple[str, ...] = ("benchmarks",)
+
+
+def _repro_imports(tree: ast.Module, mod: str, known: set) -> set:
+    """Resolved ``repro.*`` module names imported by ``tree``.
+
+    ``from repro.core import transport`` yields both ``repro.core`` and
+    ``repro.core.transport`` (when the latter is a known module, not an
+    attribute); relative imports resolve against ``mod``'s package.
+    """
+    out: set = set()
+    pkg_parts = mod.split(".")[:-1] if mod else []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro" or a.name.startswith("repro."):
+                    out.add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:  # relative: resolve against this package
+                anchor = pkg_parts[: len(pkg_parts) - (node.level - 1)]
+                base = ".".join(anchor + ([base] if base else []))
+            if not (base == "repro" or base.startswith("repro.")):
+                continue
+            out.add(base)
+            for a in node.names:
+                sub = f"{base}.{a.name}"
+                if sub in known:
+                    out.add(sub)
+    return out
+
+
+def unreachable_module_violations(
+    src_root: Optional[Path] = None,
+    *,
+    entry_points: Tuple[str, ...] = ENTRY_POINTS,
+    script_dirs: Tuple[str, ...] = SCRIPT_DIRS,
+) -> List[Violation]:
+    """Every src module must be import-reachable from an entry point.
+
+    Roots are (a) the modules under :data:`ENTRY_POINTS` (prefix match:
+    ``repro.core`` seeds the whole package surface), (b) any module with
+    a ``python -m`` main guard, and (c) whatever the script dirs
+    (benchmarks/) import.  Importing ``repro.core.dantzig`` also marks
+    its ancestor packages reachable (their ``__init__`` executes).
+    """
+    rule = f"imports[reachable from {entry_points + script_dirs}]"
+    root = Path(src_root) if src_root is not None else SRC_ROOT
+    modules = dict(iter_modules(root))
+    trees = {mod: _parse(path) for mod, path in modules.items() if mod}
+    known = set(trees)
+
+    def expand(name: str) -> set:
+        """A module plus every ancestor package that exists."""
+        parts = name.split(".")
+        return {".".join(parts[:i]) for i in range(1, len(parts) + 1)} & known
+
+    roots: set = set()
+    for mod, tree in trees.items():
+        if any(mod == e or mod.startswith(e + ".") for e in entry_points):
+            roots |= expand(mod)
+        elif any(isinstance(n, ast.If) and isinstance(n.test, ast.Compare)
+                 and isinstance(n.test.left, ast.Name)
+                 and n.test.left.id == "__name__"
+                 for n in tree.body):
+            roots |= expand(mod)  # `python -m` target
+    for d in script_dirs:
+        script_dir = root.parent / d
+        if not script_dir.is_dir():
+            continue
+        for script in sorted(script_dir.glob("*.py")):
+            for imp in _repro_imports(_parse(script), "", known):
+                roots |= expand(imp)
+
+    reachable: set = set()
+    frontier = list(roots)
+    while frontier:
+        mod = frontier.pop()
+        if mod in reachable:
+            continue
+        reachable.add(mod)
+        for imp in _repro_imports(trees[mod], mod, known):
+            for hit in expand(imp):
+                if hit not in reachable:
+                    frontier.append(hit)
+
+    return [
+        Violation(
+            rule,
+            f"{mod} is unreachable from every entry point "
+            f"({', '.join(entry_points)}) and script dir "
+            f"({', '.join(script_dirs)}/) -- dead code; delete it or "
+            f"wire it to a surface",
+            (str(modules[mod]),),
+        )
+        for mod in sorted(known - reachable)
+    ]
+
+
 def structural_violations(src_root: Optional[Path] = None) -> List[Violation]:
     """All repo import-graph rules (the former grep pins)."""
     return (
         banned_import_violations(src_root)
         + exclusive_call_violations(src_root)
         + pipeline_unification_violations(src_root)
+        + unreachable_module_violations(src_root)
     )
 
 
 __all__ = [
+    "ENTRY_POINTS",
+    "SCRIPT_DIRS",
     "SRC_ROOT",
     "banned_import_violations",
     "exclusive_call_violations",
     "iter_modules",
     "pipeline_unification_violations",
     "structural_violations",
+    "unreachable_module_violations",
 ]

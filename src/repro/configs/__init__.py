@@ -1,97 +1,34 @@
-"""Architecture config registry (``--arch <id>`` lookup).
+"""Experiment configs for the paper's own studies.
 
-Module filenames are sanitized ids (dots/dashes -> underscores); the
-registry keys are the literal assigned ids.
+The seed scaffold's LLM architecture registry (``--arch`` lookup over
+ten transformer/SSM/MoE configs) was dead weight for this repository --
+nothing on the paper's reproduction path ever consumed it -- and was
+deleted; the reachability rule in :mod:`repro.analysis.imports` keeps
+it from growing back.  What remains is the paper's section-5
+experimental grid (:mod:`repro.configs.paper_synthetic`).
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-from repro.models.common import ArchConfig
-
-from repro.configs import (  # noqa: E402
-    phi3_5_moe_42b_a6_6b,
-    llava_next_mistral_7b,
-    qwen2_5_3b,
-    qwen2_72b,
-    seamless_m4t_large_v2,
-    jamba_v0_1_52b,
-    mistral_large_123b,
-    llama4_maverick_400b_a17b,
-    granite_8b,
-    xlstm_1_3b,
-    paper_synthetic,
+from repro.configs import paper_synthetic
+from repro.configs.paper_synthetic import (  # noqa: F401
+    FIXED_N,
+    REAL,
+    SYNTHETIC,
+    FixedNConfig,
+    RealDataConfig,
+    SyntheticConfig,
 )
-
-REGISTRY: dict[str, ArchConfig] = {
-    m.CONFIG.name: m.CONFIG
-    for m in (
-        phi3_5_moe_42b_a6_6b,
-        llava_next_mistral_7b,
-        qwen2_5_3b,
-        qwen2_72b,
-        seamless_m4t_large_v2,
-        jamba_v0_1_52b,
-        mistral_large_123b,
-        llama4_maverick_400b_a17b,
-        granite_8b,
-        xlstm_1_3b,
-    )
-}
 
 PAPER_SYNTHETIC = paper_synthetic
 
-
-def get_config(name: str) -> ArchConfig:
-    if name not in REGISTRY:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
-    return REGISTRY[name]
-
-
-def list_archs() -> list[str]:
-    return sorted(REGISTRY)
-
-
-_SMOKE_PATTERNS = {
-    # cover each block kind with <= 2 pattern entries
-    ("attn",): ("attn", "attn"),
-    ("attn_moe",): ("attn_moe", "attn_moe"),
-    ("attn", "attn_moe"): ("attn", "attn_moe"),
-}
-
-
-def smoke_config(cfg: ArchConfig) -> ArchConfig:
-    """Reduced same-family variant: <=2-entry pattern x1 repeat,
-    d_model <= 512, <= 4 experts (assignment's smoke-test contract)."""
-    pattern = cfg.pattern
-    if pattern in _SMOKE_PATTERNS:
-        pattern = _SMOKE_PATTERNS[pattern]
-    else:
-        # keep one of each distinct kind, order-preserved, max 2
-        seen: list[str] = []
-        for k in pattern:
-            if k not in seen:
-                seen.append(k)
-        pattern = tuple(seen[:2]) if len(seen) > 1 else (seen[0], seen[0])
-    num_heads = min(cfg.num_heads, 4)
-    return dataclasses.replace(
-        cfg,
-        name=cfg.name + "-smoke",
-        num_layers=len(pattern),
-        pattern=pattern,
-        d_model=256,
-        num_heads=num_heads,
-        num_kv_heads=min(cfg.num_kv_heads, max(1, num_heads // 2)),
-        pad_heads_to=0,  # no model axis to pad for in smoke tests
-        head_dim=64,
-        d_ff=512 if cfg.d_ff else 0,
-        vocab_size=512,
-        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
-        experts_per_token=min(cfg.experts_per_token, 2) if cfg.num_experts else 0,
-        encoder_layers=min(cfg.encoder_layers, 2),
-        num_patches=min(cfg.num_patches, 8),
-        ssm_chunk=32,
-        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
-        dtype="float32",
-    )
+__all__ = [
+    "FIXED_N",
+    "FixedNConfig",
+    "PAPER_SYNTHETIC",
+    "REAL",
+    "RealDataConfig",
+    "SYNTHETIC",
+    "SyntheticConfig",
+    "paper_synthetic",
+]

@@ -14,5 +14,5 @@ multiclass   K-class face (shared covariance, one (d, K) uplink block)
 distributed  Algorithm 1 over a jax mesh (shard_map + one pmean),
              binary and multiclass, plus single-device simulations
 classifier   Fisher discriminant rule, evaluation metrics
-lda_head     distributed LDA readout over transformer hidden states
+transport    two-way comms abstraction: CommPlan, links, bit budgets
 """

@@ -56,10 +56,12 @@ from repro.analysis import (
     trace_contract,
 )
 from repro.core import rounds as rounds_core, slda
+from repro.core import transport as transport_core
 from repro.core.compression import Compression
 from repro.core.dantzig import DantzigConfig
 from repro.core.faults import Aggregation, FaultPlan, FaultSchedule
 from repro.core.pipeline import BinaryHead, MulticlassHead
+from repro.core.transport import CommPlan
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -112,10 +114,16 @@ def _materialize_plan(faults, mesh, data_axes, rounds, staleness):
         PrimitiveBudget("psum", exact=Param("total_psums")),
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
-        # compressed uplink: the payload gathers, and their exact bits
+        # compressed uplink: the payload gathers, and the exact bits
+        # per direction -- uplink payloads on all_gathers, dense psums
+        # + liveness masks + downlink payloads on psums (DESIGN.md §13)
         CollectiveContract("all_gather", count=Param("data_gathers"),
                            axis="data"),
-        AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
+        AxisPayloadBits("data", exact_bits=Param("data_gather_bits"),
+                        prims=("all_gather",)),
+        AxisPayloadBits("data", exact_bits=Param("data_psum_bits"),
+                        prims=("psum",)),
+        AxisPayloadBits("data", exact_bits=Param("data_total_bits")),
         PrimitiveBudget("is_finite", exact=Param("screen_ops")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
@@ -133,6 +141,7 @@ def distributed_slda_shardmap(
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = "model",
     rounds: int = 1,
+    comm: CommPlan | None = None,
     compression: Compression | None = None,
     faults: FaultPlan | FaultSchedule | None = None,
     staleness: int = 0,
@@ -148,26 +157,35 @@ def distributed_slda_shardmap(
         around the aggregate (DESIGN.md §8) -- each an O(d) ``pmean``
         reusing the round-one solves, no extra eigendecompositions --
         recovering the centralized rate past the one-shot m-barrier.
-      compression: None (default) moves each round's dense (d, 1)
-        float32 block; a :class:`~repro.core.compression.Compression`
-        moves the top-k error-feedback payload instead (DESIGN.md §10)
-        -- ``uplink_bits`` instead of ``dense_uplink_bits`` per link
-        per round, with the fixed point preserved.
-      faults: a :class:`~repro.core.faults.FaultSchedule` (materialized
-        against this mesh's machine count) or an (m, rounds)
-        :class:`~repro.core.faults.FaultPlan`; each machine's row rides
-        in as a sharded liveness operand (DESIGN.md §11).
-      staleness: bound s on how many rounds a straggler's anchor lags.
-      aggregation: an :class:`~repro.core.faults.Aggregation` switches
-        the round close to the liveness-masked robust mean; None keeps
-        the legacy bit-exact unweighted pmean.
+      comm: the ONE static comms config
+        (:class:`~repro.core.transport.CommPlan`, DESIGN.md §13):
+        uplink/downlink codecs or a
+        :class:`~repro.core.transport.BitBudget` schedule, the fault
+        schedule, the staleness bound, and the aggregation policy.
+        The default plan moves each round's dense (d, 1) float32
+        block, bit-exact vs the legacy path.
+      compression / faults / staleness / aggregation: DEPRECATED shims
+        for the corresponding :class:`CommPlan` fields (mutually
+        exclusive with ``comm``; ``faults`` additionally accepts an
+        (m, rounds) :class:`~repro.core.faults.FaultPlan`).  A fault
+        schedule is materialized against this mesh's machine count and
+        each machine's row rides in as a sharded liveness operand
+        (DESIGN.md §11).
     Returns:
       beta_bar: (d,) aggregated sparse discriminant vector (replicated).
     """
     data_axes = tuple(data_axes)
     in_spec = P(data_axes, None)
     model_size = mesh.shape[model_axis] if model_axis is not None else 1
-    plan = _materialize_plan(faults, mesh, data_axes, rounds, staleness)
+    if comm is not None and faults is not None:
+        raise TypeError("distributed_slda_shardmap: pass the fault schedule "
+                        "inside comm=CommPlan(faults=...), not alongside it")
+    comm = transport_core.resolve_comm(
+        comm, compression=compression, staleness=staleness,
+        aggregation=aggregation, where="distributed_slda_shardmap")
+    plan = _materialize_plan(faults if faults is not None else comm.faults,
+                             mesh, data_axes, rounds, comm.staleness)
+    worker_comm = comm._replace(faults=None)  # the row is the operand
     plan_args = tuple(plan) if plan is not None else ()
     plan_specs = tuple(P(data_axes, None) for _ in plan_args)
 
@@ -179,8 +197,7 @@ def distributed_slda_shardmap(
             BinaryHead(), xs, ys, lam=lam, lam_prime=lam_prime,
             rounds=rounds, cfg=cfg, data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
-            compression=compression, faults=row, staleness=staleness,
-            aggregation=aggregation,
+            comm=worker_comm, faults=row,
         )
         return slda.hard_threshold(beta_bar[:, 0], t)
 
@@ -207,10 +224,15 @@ def distributed_slda_shardmap(
         CollectiveContract("all_gather", count=Param("rounds"),
                            axis="model"),
         # compressed uplink: the payload gathers, and the exact bits
-        # everything (gathers + means psum) moves over the data axis
+        # everything moves over the data axis, split by direction
+        # (the one-time means psum counts on the psum side)
         CollectiveContract("all_gather", count=Param("data_gathers"),
                            axis="data"),
-        AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
+        AxisPayloadBits("data", exact_bits=Param("data_gather_bits"),
+                        prims=("all_gather",)),
+        AxisPayloadBits("data", exact_bits=Param("data_psum_bits"),
+                        prims=("psum",)),
+        AxisPayloadBits("data", exact_bits=Param("data_total_bits")),
         PrimitiveBudget("is_finite", exact=Param("screen_ops")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
         DtypePolicy(),
@@ -229,6 +251,7 @@ def distributed_mc_slda_shardmap(
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = "model",
     rounds: int = 1,
+    comm: CommPlan | None = None,
     compression: Compression | None = None,
     faults: FaultPlan | FaultSchedule | None = None,
     staleness: int = 0,
@@ -243,12 +266,12 @@ def distributed_mc_slda_shardmap(
     The (K, d) class means ride one extra ``pmean`` once (they are
     round-independent), and ``rounds`` > 1 refines the direction block
     around the aggregate exactly as in the binary driver (DESIGN.md §8).
-    ``compression`` compresses the per-round direction uplink exactly as
-    in the binary driver (the one-time means pmean stays dense);
-    ``faults`` / ``staleness`` / ``aggregation`` inject and tolerate
-    per-round machine faults exactly as in the binary driver (DESIGN.md
-    §11 -- the one-time means pmean is NOT fault-masked; it rides the
-    round-1 uplink in the paper's cost model).
+    ``comm`` is the one static :class:`~repro.core.transport.CommPlan`
+    (DESIGN.md §13) -- per-direction codecs / schedule / faults /
+    staleness / aggregation exactly as in the binary driver; the
+    legacy kwargs remain as deprecation shims.  The one-time means
+    pmean stays dense and is NOT fault-masked; it rides the round-1
+    uplink in the paper's cost model.
 
     Args:
       x: (N, d) samples, shardable over the data axes.
@@ -258,7 +281,16 @@ def distributed_mc_slda_shardmap(
     """
     data_axes = tuple(data_axes)
     model_size = mesh.shape[model_axis] if model_axis is not None else 1
-    plan = _materialize_plan(faults, mesh, data_axes, rounds, staleness)
+    if comm is not None and faults is not None:
+        raise TypeError("distributed_mc_slda_shardmap: pass the fault "
+                        "schedule inside comm=CommPlan(faults=...), not "
+                        "alongside it")
+    comm = transport_core.resolve_comm(
+        comm, compression=compression, staleness=staleness,
+        aggregation=aggregation, where="distributed_mc_slda_shardmap")
+    plan = _materialize_plan(faults if faults is not None else comm.faults,
+                             mesh, data_axes, rounds, comm.staleness)
+    worker_comm = comm._replace(faults=None)  # the row is the operand
     plan_args = tuple(plan) if plan is not None else ()
     plan_specs = tuple(P(data_axes, None) for _ in plan_args)
 
@@ -270,8 +302,7 @@ def distributed_mc_slda_shardmap(
             lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg,
             data_axes=data_axes,
             model_axis=model_axis, model_axis_size=model_size,
-            compression=compression, faults=row, staleness=staleness,
-            aggregation=aggregation,
+            comm=worker_comm, faults=row,
         )
         means = ws.stats.aux.means
         for ax in data_axes:
@@ -316,7 +347,7 @@ def naive_averaged_slda_shardmap(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "rounds",
+@functools.partial(jax.jit, static_argnames=("cfg", "rounds", "comm",
                                              "compression", "faults",
                                              "staleness", "aggregation"))
 def simulated_debiased_mean(
@@ -330,26 +361,28 @@ def simulated_debiased_mean(
     faults: FaultSchedule | None = None,
     staleness: int = 0,
     aggregation: Aggregation | None = None,
+    comm: CommPlan | None = None,
 ) -> jnp.ndarray:
     """Mean of debiased locals WITHOUT the hard threshold.
 
     Benchmarks tune the threshold t post hoc over a grid (the paper
     reports grid-tuned best results); exposing the raw mean makes that
     tuning free (HT is O(d)).  ``rounds`` > 1 applies the extra
-    refinement rounds around the aggregate (DESIGN.md §8), sharing the
-    per-machine solves across all rounds; ``compression`` runs them
-    over the top-k error-feedback uplink (DESIGN.md §10); ``faults`` (a
-    hashable :class:`~repro.core.faults.FaultSchedule`, materialized
-    inside the jit) / ``staleness`` / ``aggregation`` exercise the
-    fault model of DESIGN.md §11."""
+    refinement rounds around the aggregate (DESIGN.md §8).  ``comm``
+    (a hashable :class:`~repro.core.transport.CommPlan` -- static, so
+    changing the plan recompiles) carries the whole comms config:
+    codecs/schedule (DESIGN.md §10/§13), fault schedule (materialized
+    inside the jit), staleness, aggregation (DESIGN.md §11).  The
+    legacy ``compression``/``faults``/``staleness``/``aggregation``
+    kwargs remain as deprecation shims."""
     beta_bar, _ = rounds_core.simulate_multi_round(
         BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
-        rounds=rounds, cfg=cfg, compression=compression, faults=faults,
-        staleness=staleness, aggregation=aggregation)
+        rounds=rounds, cfg=cfg, comm=comm, compression=compression,
+        faults=faults, staleness=staleness, aggregation=aggregation)
     return beta_bar[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "rounds",
+@functools.partial(jax.jit, static_argnames=("cfg", "rounds", "comm",
                                              "compression", "faults",
                                              "staleness", "aggregation"))
 def simulated_distributed_slda(
@@ -364,12 +397,13 @@ def simulated_distributed_slda(
     faults: FaultSchedule | None = None,
     staleness: int = 0,
     aggregation: Aggregation | None = None,
+    comm: CommPlan | None = None,
 ) -> jnp.ndarray:
     """xs: (m, n1, d), ys: (m, n2, d) -> aggregated beta_bar (d,)."""
     return slda.hard_threshold(
         simulated_debiased_mean(xs, ys, lam, lam_prime, cfg, rounds,
                                 compression, faults, staleness,
-                                aggregation), t)
+                                aggregation, comm), t)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -109,20 +109,21 @@ def mc_multi_round_slda(
     faults: "_rounds.FaultSchedule | None" = None,
     staleness: int = 0,
     aggregation: "_rounds.Aggregation | None" = None,
+    comm: "_rounds.CommPlan | None" = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """T-round refined K-class estimator on stacked machine draws.
 
     The large-m face (DESIGN.md §8): xs (m, n, d) / labels (m, n) ->
     (beta_bar (d, K), means (K, d)) after ``rounds`` O(dK)
     communication rounds sharing one set of per-machine solves.
-    ``compression`` swaps each round's dense direction uplink for the
-    top-k error-feedback payload (DESIGN.md §10); ``faults`` /
-    ``staleness`` / ``aggregation`` inject and tolerate per-round
-    machine faults (DESIGN.md §11).
+    ``comm`` (a hashable :class:`~repro.core.transport.CommPlan`,
+    DESIGN.md §13) carries the whole comms config; the legacy
+    ``compression`` / ``faults`` / ``staleness`` / ``aggregation``
+    kwargs remain as deprecation shims (DESIGN.md §10/§11).
     """
     return simulated_distributed_mc_slda(
         xs, labels, num_classes, lam, lam_prime, t, cfg, rounds,
-        compression, faults, staleness, aggregation)
+        compression, faults, staleness, aggregation, comm)
 
 
 def mc_debiased_local_path(
@@ -158,7 +159,8 @@ def mc_debiased_local_path(
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "cfg", "rounds",
                                              "compression", "faults",
-                                             "staleness", "aggregation"))
+                                             "staleness", "aggregation",
+                                             "comm"))
 def simulated_distributed_mc_slda(
     xs: jnp.ndarray,
     labels: jnp.ndarray,
@@ -172,23 +174,25 @@ def simulated_distributed_mc_slda(
     faults: "_rounds.FaultSchedule | None" = None,
     staleness: int = 0,
     aggregation: "_rounds.Aggregation | None" = None,
+    comm: "_rounds.CommPlan | None" = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """xs: (m, n, d), labels: (m, n) -> (beta_bar (d, K), means (K, d)).
 
     The vmap axis is the machine; the master aggregation is one mean of
     (d, K) blocks per round + hard threshold -- the multi-class
     analogue of the paper's schedule (``rounds=1`` one-shot, T > 1
-    refined around the aggregate, DESIGN.md §8; ``compression``
-    compresses the per-round direction uplink, DESIGN.md §10; the
-    fault knobs follow DESIGN.md §11 with ``faults`` a hashable
-    :class:`~repro.core.faults.FaultSchedule`).  Mesh-executed twin:
+    refined around the aggregate, DESIGN.md §8).  ``comm`` (a hashable
+    :class:`~repro.core.transport.CommPlan`, DESIGN.md §13) carries
+    the whole comms config; the legacy ``compression`` / ``faults`` /
+    ``staleness`` / ``aggregation`` kwargs remain as deprecation shims
+    (DESIGN.md §10/§11).  Mesh-executed twin:
     :func:`repro.core.distributed.distributed_mc_slda_shardmap`.
     """
     beta_bar, ws = _rounds.simulate_multi_round(
         MulticlassHead(num_classes), (xs, labels),
         lam=lam, lam_prime=lam_prime, rounds=rounds, cfg=cfg,
-        compression=compression, faults=faults, staleness=staleness,
-        aggregation=aggregation)
+        comm=comm, compression=compression, faults=faults,
+        staleness=staleness, aggregation=aggregation)
     return hard_threshold(beta_bar, t), jnp.mean(ws.stats.aux.means, axis=0)
 
 

@@ -79,10 +79,12 @@ from repro.analysis import (
 from repro.core import compression as compression_core
 from repro.core import faults as faults_core
 from repro.core import pipeline
+from repro.core import transport as transport_core
 from repro.core.compression import Compression
 from repro.core.dantzig import AdmmState, DantzigConfig
 from repro.core.faults import Aggregation, FaultPlan, FaultSchedule
 from repro.core.pipeline import DiscriminantHead, WorkerSolves
+from repro.core.transport import CommPlan, Transport, TransportState
 
 __all__ = [
     "refine_step",
@@ -163,6 +165,16 @@ class _MeshRound:
         return compression_core.gather_payloads(
             comp, payload, self.data_axes)
 
+    def downlink_wire(self, comp, payload, code):
+        """The aggregator's broadcast: master-masked psum of the leaves.
+
+        ``code`` is THIS machine's corruption code; only the master's
+        survives the mask, so the downlink's fate is the aggregator's
+        fault row and every receiver sees the same wire."""
+        if code is not None:
+            payload = faults_core.corrupt_payload(comp, code, payload)
+        return transport_core.psum_broadcast(payload, self.data_axes)
+
 
 class _SimRound:
     """The vmap twin: machines are a leading axis, reductions are local."""
@@ -212,36 +224,58 @@ class _SimRound:
     def stack_payload(self, comp, payload):
         return payload
 
+    def downlink_wire(self, comp, payload, code):
+        """Machine 0 is the aggregator: its fault row corrupts the wire."""
+        if code is not None:
+            payload = faults_core.corrupt_payload(comp, code[0], payload)
+        return payload
+
 
 def _refinement_rounds(
     drv,
     *,
     rounds: int,
     anchor: jnp.ndarray,
-    compression: Compression | None = None,
-    ef_residual: jnp.ndarray | None = None,
+    transport: Transport,
     plan: FaultPlan | None = None,
-    staleness: int = 0,
-    aggregation: Aggregation | None = None,
+    state: TransportState | None = None,
     ref: jnp.ndarray | None = None,
     return_all_rounds: bool = False,
 ):
-    """The ONE T-round body both drivers run (DESIGN.md §8/§10/§11).
+    """The ONE T-round body both drivers run (DESIGN.md §8/§10/§11/§13).
 
     ``drv`` supplies the axis-specific operations (mesh collectives vs
-    machine-axis reductions); everything else -- the anchor/EF-residual
-    /reference iteration, fault injection, screening, masked/trimmed
-    aggregation, bounded staleness, and the last-good fallback -- is
-    written exactly once so the mesh and vmap twins cannot drift.
+    machine-axis reductions); ``transport`` the per-round
+    uplink/downlink codecs, aggregation policy, and staleness bound --
+    everything else (the anchor/EF-residual/reference iteration, fault
+    injection, screening, masked/trimmed aggregation, bounded
+    staleness, and the last-good fallback) is written exactly once so
+    the mesh and vmap twins cannot drift.
 
-    With ``plan is None and aggregation is None`` the branches reduce
-    LITERALLY to the pre-fault code path: the legacy jaxpr (and its
-    golden pins) is reproduced bit for bit.  ``ref`` seeds the
-    compressed stream's reference on re-entry (the previous replicated
-    aggregate); None starts at zeros, the round-1 convention.
+    With a default :class:`CommPlan` (no codecs, no plan, no
+    aggregation) the branches reduce LITERALLY to the pre-fault code
+    path: the legacy jaxpr (and its golden pins) is reproduced bit for
+    bit.  ``ref`` seeds the SHARED delta reference on re-entry (the
+    previous *received* aggregate); None starts at zeros, the round-1
+    convention.  Both wires encode against this one reference: the
+    uplink's per-machine EF residual and the downlink's
+    aggregator-held residual ride in/out through ``state``.
 
-    Returns ``(bar-or-trajectory, final EF residual | None)``.
+    The downlink round close (transport contract, DESIGN.md §13): the
+    aggregator EF-encodes the round's aggregate against ``ref``, the
+    payload crosses the data axis on the master-masked psum of
+    :func:`repro.core.transport.psum_broadcast` (where ``corrupt_payload``
+    can hit it), and every machine -- master included -- applies the
+    same whole-block finite screen to the same post-wire payload: on a
+    corrupted round all of them fall back to ``ref`` together and the
+    aggregator's residual drops (the rolled-back anchors regenerate the
+    lost step next round), so the master/receiver reference views can
+    never diverge and the stream resumes exactly one round delayed.
+
+    Returns ``(bar-or-trajectory, final TransportState)``.
     """
+    aggregation = transport.aggregation
+    staleness = transport.staleness
     masked = aggregation is not None
     faulted = plan is not None
     if masked:
@@ -249,17 +283,21 @@ def _refinement_rounds(
         # replicated, so an ALL-dead final round still returns a value
         # every machine agrees on (zeros before any round succeeded)
         last_good = drv.agg_zeros(anchor)
-    resid = ef_residual
-    if compression is not None:
-        if resid is None:
-            resid = jnp.zeros_like(anchor)
-        if ref is None:
-            # round-1 reference is zeros (the anchor is still
-            # per-machine); afterwards the replicated aggregate
-            ref = drv.agg_zeros(anchor)
+    resid = state.up_residual if state is not None else None
+    down_resid = state.down_residual if state is not None else None
+    if transport.any_up and resid is None:
+        resid = jnp.zeros_like(anchor)
+    if transport.any_down and down_resid is None:
+        down_resid = drv.agg_zeros(anchor)  # replicated, like the aggregate
+    if (transport.any_up or transport.any_down) and ref is None:
+        # round-1 reference is zeros (the anchor is still per-machine);
+        # afterwards the replicated RECEIVED aggregate -- both wires
+        # share it
+        ref = drv.agg_zeros(anchor)
     history = [anchor]  # entry j-1 = the round-j anchor
     bars = []
     for t in range(1, rounds + 1):  # static T: the jaxpr shows T rounds
+        compression = transport.up(t).comp
         live = code = None
         if faulted:
             live, stale, code = plan.row(t)
@@ -289,7 +327,6 @@ def _refinement_rounds(
                     den = drv.sum(w)  # the liveness mask on the wire
                     bar = num / jnp.maximum(den, 1.0)
                 bar = jnp.where(den > 0, bar, last_good)
-                last_good = bar
         else:
             payload, new_resid = drv.ef(compression, beta_tilde, resid, ref)
             if faulted:
@@ -320,7 +357,6 @@ def _refinement_rounds(
                     else:
                         bar, den = faults_core.masked_mean(dense, w)
                     bar = jnp.where(den > 0, bar, last_good)
-                    last_good = bar
                 else:
                     # fragile baseline: a dropped machine's missing
                     # payload decodes to the reference (set semantics),
@@ -329,11 +365,36 @@ def _refinement_rounds(
                         compression, stacked, ref)
                     keep = (w_live > 0).reshape(w_live.shape + (1, 1))
                     bar = jnp.mean(jnp.where(keep, dense, ref), axis=0)
-            ref = bar
+        # ---- the downlink close (DESIGN.md §13): the aggregate back
+        # down the wire, EF-compressed against the SAME reference ----
+        down = transport.down(t)
+        if down.compressed:
+            u = bar + down_resid
+            payload = down.encode(u, ref)
+            wire = drv.downlink_wire(down.comp, payload, code)
+            decoded = down.decode(wire, ref, screen_nonfinite=False)
+            # whole-block receiver screen, replicated: a poisoned wire
+            # rolls EVERY machine (master included) back to the last
+            # received aggregate, so the shared reference never forks
+            ok = jnp.all(jnp.isfinite(decoded))
+            honest = down.decode(payload, ref, screen_nonfinite=False)
+            # delivered: residual = quantization/selection leftovers.
+            # rejected: DROP the carry -- receivers roll back to ref, so
+            # next round's anchors regenerate the lost step themselves;
+            # re-arming with it would deliver the step twice (and a
+            # poisoned upstream aggregate would ride the carry forever)
+            down_resid = jnp.where(ok, u - honest, jnp.zeros_like(u))
+            bar = jnp.where(ok, decoded, ref)
+        if transport.any_up or transport.any_down:
+            ref = bar  # the received aggregate seeds both wires' deltas
+        if masked:
+            last_good = bar  # what receivers actually hold
         bars.append(bar)
         history.append(drv.broadcast(bar))
     out = jnp.stack(bars) if return_all_rounds else bars[-1]
-    return out, (resid if compression is not None else None)
+    return out, TransportState(
+        resid if transport.any_up else None,
+        down_resid if transport.any_down else None)
 
 
 def _check_plan(faults, expect_shape, where: str):
@@ -371,9 +432,16 @@ def _check_plan(faults, expect_shape, where: str):
         # block/weight gathers (0 on the legacy dense path) ...
         CollectiveContract("all_gather", count=Param("data_gathers"),
                            axis="data"),
-        # ... and the total bits everything moves per link, exactly: a
-        # hidden dense block anywhere on the data axis blows this budget
-        AxisPayloadBits("data", exact_bits=Param("data_uplink_bits")),
+        # ... and the bits everything moves per link, exactly, split by
+        # direction: uplink payloads ride all_gathers, dense uplinks +
+        # liveness masks + downlink payloads ride psums -- pinning each
+        # primitive family to its analytic schedule total means a
+        # hidden dense block in EITHER direction blows its own budget
+        AxisPayloadBits("data", exact_bits=Param("data_gather_bits"),
+                        prims=("all_gather",)),
+        AxisPayloadBits("data", exact_bits=Param("data_psum_bits"),
+                        prims=("psum",)),
+        AxisPayloadBits("data", exact_bits=Param("data_total_bits")),
         # per-machine screening + decode sanitization are is_finite eqns
         PrimitiveBudget("is_finite", exact=Param("screen_ops")),
         PrimitiveBudget("pallas_call", exact=Param("pallas_calls")),
@@ -391,8 +459,10 @@ def worker_rounds(
     data_axes: Sequence[str] = ("data",),
     model_axis: str | None = None,
     model_axis_size: int = 1,
+    comm: CommPlan | None = None,
     compression: Compression | None = None,
     ef_residual: jnp.ndarray | None = None,
+    down_residual: jnp.ndarray | None = None,
     resume_from: jnp.ndarray | None = None,
     faults: FaultPlan | None = None,
     staleness: int = 0,
@@ -403,6 +473,7 @@ def worker_rounds(
     state_theta: AdmmState | None = None,
     collect_info: bool = False,
     return_ef_residual: bool = False,
+    return_transport_state: bool = False,
 ):
     """T-round refined aggregate, from inside shard_map over the mesh.
 
@@ -410,37 +481,52 @@ def worker_rounds(
     one eigh, direction + CLIME ADMM -- warm-startable via the
     ``rho_*`` / ``state_*`` carries of a previous invocation's
     :class:`WorkerSolves`), then ``rounds`` closed-form refinement
-    rounds.  ``compression=None`` (default) closes each round with one
-    dense (d, K) ``pmean`` over ``data_axes`` -- bit-identical to the
-    pre-compression path; a :class:`~repro.core.compression.Compression`
-    instead uplinks each round's top-k error-feedback payload through
-    :func:`~repro.core.compression.sparse_mean_mesh`, carrying the
-    per-machine residual across rounds (seeded by ``ef_residual``, zero
-    by default).  ``rounds=1`` dense reproduces the one-shot worker +
-    single averaging round of Algorithm 1 exactly.
+    rounds driven by ONE static comms config: ``comm`` (a
+    :class:`~repro.core.transport.CommPlan`).  The default plan closes
+    each round with one dense (d, K) ``pmean`` over ``data_axes`` --
+    bit-identical to the pre-compression path; ``comm.uplink`` moves
+    each round's top-k error-feedback payload through
+    :func:`~repro.core.compression.sparse_mean_mesh` instead (residual
+    seeded by ``ef_residual``), ``comm.downlink`` EF-compresses the
+    aggregate's broadcast back down against the same reference
+    (aggregator residual seeded by ``down_residual``), and
+    ``comm.schedule`` (a :class:`~repro.core.transport.BitBudget`)
+    replans both directions per round under a total bit budget.
+    ``rounds=1`` dense reproduces the one-shot worker + single
+    averaging round of Algorithm 1 exactly.
 
-    Fault tolerance (DESIGN.md §11): ``faults`` is THIS machine's
-    :class:`~repro.core.faults.FaultPlan` row ((rounds,) leaves -- the
-    per-machine liveness operand the faces shard in);
+    The legacy ``compression=`` / ``staleness=`` / ``aggregation=``
+    kwargs remain as deprecation shims (mutually exclusive with
+    ``comm``); ``comm.faults`` must stay None here -- fault SCHEDULES
+    are materialized by the faces, and ``faults`` is THIS machine's
+    materialized :class:`~repro.core.faults.FaultPlan` row ((rounds,)
+    leaves -- the per-machine liveness operand the faces shard in).
     ``aggregation`` switches the round close to the liveness-masked
     (or trimmed) robust mean of :mod:`repro.core.faults`;
     ``staleness`` bounds how many rounds a straggler's anchor may lag.
-    All three default to the legacy fragile-but-bit-exact path.
 
     ``resume_from`` re-enters a round stream mid-way: it seeds the
-    round-1 anchor AND the compressed reference with the previous
-    replicated aggregate, so a split T-round run (with the carried
-    ``ef_residual``) matches an uninterrupted one.
+    round-1 anchor AND the shared delta reference with the previous
+    received aggregate, so a split T-round run (with the carried
+    residuals) matches an uninterrupted one.
 
     Returns ``(beta_bar, solves)``: the replicated (d, K) aggregate
     (un-thresholded -- the master's hard threshold is the caller's
     O(dK) postlude) and the worker's solves for reuse/warm re-entry.
-    With ``return_ef_residual`` a third element carries the final
-    error-feedback residual (None on the dense path) so a re-entry can
-    resume the compressed stream where it left off.
+    ``return_ef_residual`` appends the final uplink error-feedback
+    residual (None on a dense uplink); ``return_transport_state``
+    appends the full :class:`~repro.core.transport.TransportState`
+    (both wires' residuals) for a bit-exact resume.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
+    comm = transport_core.resolve_comm(
+        comm, compression=compression, staleness=staleness,
+        aggregation=aggregation, where="worker_rounds")
+    if comm.faults is not None:
+        raise TypeError(
+            "worker_rounds: CommPlan.faults is a schedule -- the faces "
+            "materialize it; pass this machine's FaultPlan row via faults=")
     _check_plan(faults, (rounds,), "worker_rounds")
     ws = pipeline.worker_solves(
         head, *data, lam=lam, lam_prime=lam_prime, cfg=cfg,
@@ -450,30 +536,34 @@ def worker_rounds(
         full=collect_info,
     )
     anchor = ws.beta_hat if resume_from is None else resume_from
-    if compression is not None:
-        compression.validate(anchor.shape[0])
-    anchor, resid = _refinement_rounds(
+    tr = Transport(comm, anchor.shape[0], anchor.shape[1], rounds)
+    anchor, tstate = _refinement_rounds(
         _MeshRound(ws, model_axis, data_axes),
-        rounds=rounds, anchor=anchor, compression=compression,
-        ef_residual=ef_residual, plan=faults, staleness=staleness,
-        aggregation=aggregation, ref=resume_from)
+        rounds=rounds, anchor=anchor, transport=tr, plan=faults,
+        state=TransportState(ef_residual, down_residual), ref=resume_from)
+    out = [anchor, ws]
     if return_ef_residual:
-        return anchor, ws, resid
-    return anchor, ws
+        out.append(tstate.up_residual)
+    if return_transport_state:
+        out.append(tstate)
+    return tuple(out)
 
 
 def simulate_round_loop(
     ws: WorkerSolves,
     *,
     rounds: int,
+    comm: CommPlan | None = None,
     compression: Compression | None = None,
     ef_residual: jnp.ndarray | None = None,
+    down_residual: jnp.ndarray | None = None,
     resume_from: jnp.ndarray | None = None,
     faults: FaultPlan | FaultSchedule | None = None,
     staleness: int = 0,
     aggregation: Aggregation | None = None,
     return_all_rounds: bool = False,
     return_ef_residual: bool = False,
+    return_transport_state: bool = False,
 ):
     """The T refinement rounds alone, on already-computed machine solves.
 
@@ -487,34 +577,50 @@ def simulate_round_loop(
 
     Same shared round body as the mesh path
     (:func:`_refinement_rounds`), with machine-axis reductions where
-    the mesh does collectives.  ``faults`` accepts a materialized
-    :class:`~repro.core.faults.FaultPlan` ((m, rounds) leaves) or a
-    :class:`~repro.core.faults.FaultSchedule` (materialized here);
-    ``aggregation`` / ``staleness`` / ``resume_from`` as in
-    :func:`worker_rounds`.
+    the mesh does collectives.  ``comm`` is the one static
+    :class:`~repro.core.transport.CommPlan` (its ``faults`` -- a
+    hashable :class:`~repro.core.faults.FaultSchedule` -- is
+    materialized here against ``m``); the legacy ``compression`` /
+    ``faults`` / ``staleness`` / ``aggregation`` kwargs remain as
+    deprecation shims, with ``faults`` additionally accepting an
+    already-materialized :class:`~repro.core.faults.FaultPlan`
+    ((m, rounds) leaves).  ``resume_from`` as in :func:`worker_rounds`.
 
     Returns ``beta_bar`` (d, K), or the (rounds, d, K) trajectory when
-    ``return_all_rounds``; with ``return_ef_residual`` a trailing
-    element adds the final (m, d, K) residual (None on the dense path).
+    ``return_all_rounds``; ``return_ef_residual`` appends the final
+    (m, d, K) uplink residual (None on a dense uplink) and
+    ``return_transport_state`` the full
+    :class:`~repro.core.transport.TransportState` for a bit-exact
+    resume of both wires.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1, got {rounds}")
     drv = _SimRound(ws)
-    if isinstance(faults, FaultSchedule):
-        faults = faults.plan(drv.m, rounds, max(staleness, 1))
-    _check_plan(faults, (drv.m, rounds), "simulate_round_loop")
+    if comm is not None and isinstance(faults, FaultSchedule):
+        raise TypeError(
+            "simulate_round_loop: pass the fault schedule inside "
+            "comm=CommPlan(faults=...), not alongside it (a materialized "
+            "FaultPlan is data and may ride next to comm)")
+    comm = transport_core.resolve_comm(
+        comm, compression=compression, staleness=staleness,
+        aggregation=aggregation, where="simulate_round_loop")
+    plan = faults if faults is not None else comm.faults
+    if isinstance(plan, FaultSchedule):
+        plan = plan.plan(drv.m, rounds, max(comm.staleness, 1))
+    _check_plan(plan, (drv.m, rounds), "simulate_round_loop")
     anchor = (ws.beta_hat if resume_from is None
               else drv.broadcast(resume_from))
-    if compression is not None:
-        compression.validate(anchor.shape[1])
-    out, resid = _refinement_rounds(
-        drv, rounds=rounds, anchor=anchor, compression=compression,
-        ef_residual=ef_residual, plan=faults, staleness=staleness,
-        aggregation=aggregation, ref=resume_from,
-        return_all_rounds=return_all_rounds)
+    tr = Transport(comm, anchor.shape[1], anchor.shape[2], rounds)
+    out, tstate = _refinement_rounds(
+        drv, rounds=rounds, anchor=anchor, transport=tr, plan=plan,
+        state=TransportState(ef_residual, down_residual),
+        ref=resume_from, return_all_rounds=return_all_rounds)
+    res = [out]
     if return_ef_residual:
-        return out, resid
-    return out
+        res.append(tstate.up_residual)
+    if return_transport_state:
+        res.append(tstate)
+    return tuple(res) if len(res) > 1 else out
 
 
 def simulate_multi_round(
@@ -525,6 +631,7 @@ def simulate_multi_round(
     lam_prime,
     rounds: int = 1,
     cfg: DantzigConfig = DantzigConfig(),
+    comm: CommPlan | None = None,
     compression: Compression | None = None,
     ef_residual: jnp.ndarray | None = None,
     faults: FaultPlan | FaultSchedule | None = None,
@@ -567,7 +674,7 @@ def simulate_multi_round(
 
     ws = jax.vmap(one_machine)(tuple(data), warms)
     out = simulate_round_loop(
-        ws, rounds=rounds, compression=compression,
+        ws, rounds=rounds, comm=comm, compression=compression,
         ef_residual=ef_residual, faults=faults, staleness=staleness,
         aggregation=aggregation, return_all_rounds=return_all_rounds)
     return out, ws

@@ -89,7 +89,7 @@ def debiased_local_estimator(
     return beta_tilde[:, 0], beta_hat[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("rounds", "cfg",
+@functools.partial(jax.jit, static_argnames=("rounds", "cfg", "comm",
                                              "compression", "faults",
                                              "staleness", "aggregation"))
 def multi_round_slda(
@@ -104,24 +104,27 @@ def multi_round_slda(
     faults: "_rounds.FaultSchedule | None" = None,
     staleness: int = 0,
     aggregation: "_rounds.Aggregation | None" = None,
+    comm: "_rounds.CommPlan | None" = None,
 ) -> jnp.ndarray:
     """T-round refined distributed estimator on stacked machine draws.
 
     The large-m face (DESIGN.md §8): xs (m, n1, d) / ys (m, n2, d) ->
     beta_bar (d,) after ``rounds`` O(d) communication rounds, all
     sharing one set of per-machine solves (``rounds=1`` is the paper's
-    one-shot aggregate).  ``compression`` swaps each round's dense
-    uplink for the top-k error-feedback payload (DESIGN.md §10);
-    ``faults`` (a hashable :class:`~repro.core.faults.FaultSchedule`) /
-    ``staleness`` / ``aggregation`` inject and tolerate per-round
-    machine faults (DESIGN.md §11).  Mesh twin:
+    one-shot aggregate).  ``comm`` (a hashable
+    :class:`~repro.core.transport.CommPlan`, DESIGN.md §13) carries
+    the whole comms config -- per-direction codecs / bit-budget
+    schedule (DESIGN.md §10), fault schedule / staleness / aggregation
+    (DESIGN.md §11); the legacy ``compression`` / ``faults`` /
+    ``staleness`` / ``aggregation`` kwargs remain as deprecation
+    shims.  Mesh twin:
     :func:`repro.core.distributed.distributed_slda_shardmap` with
-    the same ``rounds=`` / ``compression=`` / fault knobs.
+    the same ``rounds=`` / ``comm=`` knobs.
     """
     beta_bar, _ = _rounds.simulate_multi_round(
         BinaryHead(), (xs, ys), lam=lam, lam_prime=lam_prime,
-        rounds=rounds, cfg=cfg, compression=compression, faults=faults,
-        staleness=staleness, aggregation=aggregation)
+        rounds=rounds, cfg=cfg, comm=comm, compression=compression,
+        faults=faults, staleness=staleness, aggregation=aggregation)
     return hard_threshold(beta_bar[:, 0], t)
 
 

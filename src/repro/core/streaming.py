@@ -55,6 +55,7 @@ from repro.analysis import (
 )
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core import classifier
+from repro.core import transport as transport_core
 from repro.core.dantzig import AdmmState, DantzigConfig
 from repro.core.faults import _CORRUPT_CODES, Aggregation, screen_weight
 from repro.core.pipeline import (
@@ -625,10 +626,22 @@ class ServingRuntime:
         ingest: Aggregation = Aggregation(envelope=1e6),
         protect: bool = True,
         ckpt_dir: str | None = None,
+        comm: "transport_core.CommPlan | None" = None,
         _defer_fit: bool = False,
     ):
         self.lam, self.lam_prime, self.threshold = lam, lam_prime, threshold
         self.cfg = cfg
+        if comm is not None:
+            # the CommPlan shim (DESIGN.md §13): the runtime's comms
+            # knobs come from the one plan -- its staleness bound maps
+            # onto the refresh contract, its aggregation onto ingest
+            # screening (the refit itself is single-machine: nothing of
+            # the plan's codecs rides a wire here)
+            comm.validate()
+            staleness_bound = (comm.staleness if comm.staleness > 0
+                               else staleness_bound)
+            if comm.aggregation is not None:
+                ingest = comm.aggregation
         self.staleness_bound = int(staleness_bound)
         self.escalation = escalation
         self.ingest_policy = ingest

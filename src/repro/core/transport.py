@@ -1,0 +1,370 @@
+"""The two-way transport layer: one comms abstraction for both wires.
+
+PR 7 compressed the uplink (worker -> aggregate) and PR 8 made the
+rounds fault-tolerant, but the configuration surface sprawled: four
+separately-threaded kwargs (``compression=`` / ``faults=`` /
+``staleness=`` / ``aggregation=``) through every entry point, a dense
+f32 downlink nobody accounted for, and a fixed ``k_top`` for every
+round even though the round-over-round delta concentrates (Fonseca &
+Nadler analyze sparse estimation under an explicit TOTAL bit
+constraint; EDSL motivates spending bits early and tapering).  This
+module is the single place all of that now lives (DESIGN.md §13):
+
+* :class:`CommPlan` -- ONE hashable static config subsuming the four
+  legacy kwargs plus the new ``downlink`` codec and ``schedule``
+  planner.  ``CommPlan()`` (all defaults) is the legacy dense path,
+  bit-exact against the PR 5 goldens.  The legacy kwargs survive as
+  thin deprecation shims resolved by :func:`resolve_comm`.
+* :class:`BitBudget` -- round-adaptive schedule planners under a fixed
+  TOTAL bit budget (both directions, all rounds): ``constant`` splits
+  evenly, ``taper`` front-loads geometrically, ``adaptive`` follows
+  caller-measured per-round delta-norm weights.  Planning happens at
+  trace time (the rounds unroll statically), so the analyzer's
+  ``AxisPayloadBits`` contract can pin the traced uplink AND downlink
+  bits to the analytic schedule totals exactly.
+* :class:`Transport` -- the per-trace resolution of a plan: a
+  ``(Uplink, Downlink)`` :class:`Link` pair per round, each owning its
+  direction's encode/decode/EF step against the SHARED delta reference
+  (the previous *received* aggregate), plus the exact per-direction
+  bit accounting.
+* :func:`psum_broadcast` -- the downlink's wire.  The aggregate is
+  replicated, so a broadcast could be free; putting the payload on a
+  master-masked ``psum`` keeps the bits on the traced wire (where the
+  contracts count them) and gives ``corrupt_payload`` a wire to hit.
+  Every non-master contributes exact zeros, so the sum reproduces the
+  master's payload bit-for-bit (only a -0.0 can flip to +0.0).
+
+Both wires reuse the PR 7 codec (:mod:`repro.core.compression`)
+unchanged; :mod:`repro.core.rounds` drives the round loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as compression_core
+from repro.core.compression import (
+    Compression,
+    QUANTIZE_MODES,
+    SCALE_BITS,
+    dense_uplink_bits,
+    index_bits,
+    uplink_bits,
+)
+from repro.core.faults import Aggregation, FaultSchedule
+
+__all__ = [
+    "BitBudget",
+    "CommPlan",
+    "Link",
+    "Transport",
+    "TransportState",
+    "link_bits",
+    "psum_broadcast",
+    "resolve_comm",
+]
+
+
+# ---------------------------------------------------------------------------
+# Bit-budget schedule planners
+# ---------------------------------------------------------------------------
+
+
+class BitBudget(NamedTuple):
+    """A round-adaptive codec schedule under a fixed TOTAL bit budget.
+
+    ``total_bits`` is the budget for ONE machine's link over ALL
+    ``rounds`` rounds and BOTH directions.  The planner splits it into
+    per-round shares by ``mode``, gives ``down_fraction`` of each
+    round's share to the downlink, and inverts the wire-format cost
+    (:func:`repro.core.compression.uplink_bits`) to the largest
+    ``k_top`` that fits -- all host-side at trace time, so the rounds
+    still unroll statically and the jaxpr pins hold exactly.
+
+    Modes:
+      * ``"constant"``: every round gets ``total_bits / rounds``.
+      * ``"taper"``: round t gets a share proportional to
+        ``taper**(t-1)`` -- front-loaded for ``taper < 1`` (the EDSL
+        regime: the round-1 delta is the whole anchor, later deltas
+        concentrate).
+      * ``"adaptive"``: round t's share is proportional to
+        ``weights[t-1]`` -- caller-measured per-round residual/delta
+        norms from a probe run (trace time cannot see data, so the
+        measurement is an input, not a peek).
+
+    Hashable (ints/floats/str/tuple) so it rides inside
+    :class:`CommPlan` as a static jit argument.
+    """
+
+    total_bits: int
+    mode: str = "taper"
+    taper: float = 0.5
+    quantize: str | None = "int8"
+    down_fraction: float = 0.5
+    weights: tuple[float, ...] | None = None
+
+    def validate(self, rounds: int) -> None:
+        if self.total_bits < 1:
+            raise ValueError(f"total_bits must be >= 1, got {self.total_bits}")
+        if self.mode not in ("constant", "taper", "adaptive"):
+            raise ValueError(f"unknown schedule mode {self.mode!r}")
+        if self.quantize not in QUANTIZE_MODES:
+            raise ValueError(f"unknown quantize mode {self.quantize!r}")
+        if not 0.0 <= self.down_fraction <= 1.0:
+            raise ValueError(
+                f"down_fraction must be in [0, 1], got {self.down_fraction}")
+        if self.mode == "taper" and not self.taper > 0:
+            raise ValueError(f"taper ratio must be > 0, got {self.taper}")
+        if self.mode == "adaptive":
+            if self.weights is None or len(self.weights) != rounds:
+                raise ValueError(
+                    f"adaptive mode needs weights of length rounds={rounds}, "
+                    f"got {self.weights!r}")
+            if not all(w > 0 for w in self.weights):
+                raise ValueError(f"weights must be positive: {self.weights}")
+
+    def round_shares(self, rounds: int) -> tuple[float, ...]:
+        """Fraction of ``total_bits`` each round gets (sums to 1)."""
+        self.validate(rounds)
+        if self.mode == "constant":
+            w = [1.0] * rounds
+        elif self.mode == "taper":
+            w = [self.taper ** t for t in range(rounds)]
+        else:
+            w = list(self.weights)
+        s = sum(w)
+        return tuple(wi / s for wi in w)
+
+    def plan_rounds(
+        self, d: int, num_cols: int, rounds: int
+    ) -> tuple[tuple[Compression, Compression], ...]:
+        """The realized per-round ``(uplink, downlink)`` codec pairs.
+
+        Each direction's per-round bit share is inverted to the largest
+        ``k_top`` whose wire cost fits (clamped to [1, d] -- the floor
+        keeps every round a legal codec, the ceiling stops a generous
+        budget from exceeding the identity codec).  The REALIZED total
+        (:func:`schedule_bits` summed) is therefore <= ``total_bits``
+        up to the per-round floors; the analyzer pins the realized
+        number, not the nominal budget.
+        """
+        out = []
+        for share in self.round_shares(rounds):
+            bits_t = self.total_bits * share
+            up = _fit_codec(bits_t * (1.0 - self.down_fraction),
+                            d, num_cols, self.quantize)
+            down = _fit_codec(bits_t * self.down_fraction,
+                              d, num_cols, self.quantize)
+            out.append((up, down))
+        return tuple(out)
+
+
+def _fit_codec(budget_bits: float, d: int, num_cols: int,
+               quantize: str | None) -> Compression:
+    """Largest ``k_top`` whose :func:`uplink_bits` fits ``budget_bits``."""
+    per_coord = num_cols * (QUANTIZE_MODES[quantize] + index_bits(d))
+    overhead = num_cols * SCALE_BITS if quantize == "int8" else 0
+    k = int((budget_bits - overhead) // per_coord)
+    return Compression(max(1, min(k, d)), quantize)
+
+
+# ---------------------------------------------------------------------------
+# CommPlan: the one static comms config
+# ---------------------------------------------------------------------------
+
+
+class CommPlan(NamedTuple):
+    """ONE hashable static config for everything on the wire.
+
+    Subsumes the four legacy kwargs (``compression=`` -> ``uplink``,
+    ``faults=`` / ``staleness=`` / ``aggregation=`` verbatim) plus the
+    downlink codec and the bit-budget schedule.  ``CommPlan()`` -- and
+    therefore ``CommPlan(None)`` -- is the legacy dense fragile path,
+    bit-exact against the PR 5 goldens.
+
+    ``faults`` holds the hashable :class:`FaultSchedule` only; a
+    materialized :class:`~repro.core.faults.FaultPlan` is DATA (arrays)
+    and keeps riding as an operand exactly as before.  ``schedule`` is
+    exclusive with the fixed per-direction codecs: a
+    :class:`BitBudget` re-plans both directions every round.
+    """
+
+    uplink: Compression | None = None
+    downlink: Compression | None = None
+    schedule: BitBudget | None = None
+    faults: FaultSchedule | None = None
+    staleness: int = 0
+    aggregation: Aggregation | None = None
+
+    def validate(self) -> None:
+        if self.schedule is not None and (
+                self.uplink is not None or self.downlink is not None):
+            raise ValueError(
+                "CommPlan.schedule replans both directions per round; "
+                "fixed uplink/downlink codecs cannot be combined with it")
+        if self.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {self.staleness}")
+
+
+def resolve_comm(
+    comm: CommPlan | None,
+    *,
+    compression: Compression | None = None,
+    faults: FaultSchedule | None = None,
+    staleness: int = 0,
+    aggregation: Aggregation | None = None,
+    where: str = "this entry point",
+) -> CommPlan:
+    """The legacy-kwarg deprecation shim: four kwargs -> one CommPlan.
+
+    ``comm=None`` packs the legacy kwargs into a :class:`CommPlan`
+    (their long-standing meaning, so old call sites keep working
+    unchanged); an explicit ``comm`` forbids mixing -- the plan is the
+    single source of truth.
+    """
+    if comm is None:
+        comm = CommPlan(uplink=compression, faults=faults,
+                        staleness=staleness, aggregation=aggregation)
+    elif (compression is not None or faults is not None or staleness
+          or aggregation is not None):
+        raise TypeError(
+            f"{where}: pass comm=CommPlan(...) OR the deprecated "
+            "compression=/faults=/staleness=/aggregation= kwargs, not both")
+    comm.validate()
+    return comm
+
+
+# ---------------------------------------------------------------------------
+# Transport: the per-trace resolution
+# ---------------------------------------------------------------------------
+
+
+class Link(NamedTuple):
+    """One direction of one round: the codec, or dense (``comp=None``)."""
+
+    comp: Compression | None
+
+    @property
+    def compressed(self) -> bool:
+        return self.comp is not None
+
+    def bits(self, d: int, num_cols: int) -> int:
+        """What this link moves in one round, at wire dtypes."""
+        return link_bits(self.comp, d, num_cols)
+
+    def encode(self, u, ref):
+        return compression_core.encode(self.comp, u, ref)
+
+    def decode(self, payload, ref, *, screen_nonfinite: bool = True):
+        return compression_core.decode(
+            self.comp, payload, ref, screen_nonfinite=screen_nonfinite)
+
+    def ef_step(self, message, residual, ref):
+        return compression_core.ef_step(self.comp, message, residual, ref)
+
+
+def link_bits(comp: Compression | None, d: int, num_cols: int) -> int:
+    """Per-round per-machine bits of one direction (dense when None)."""
+    if comp is None:
+        return dense_uplink_bits(d, num_cols)
+    return uplink_bits(comp, d, num_cols)
+
+
+class TransportState(NamedTuple):
+    """The carries a split round stream needs to resume bit-exactly.
+
+    ``up_residual`` is the per-machine uplink EF carry ((d, K) on the
+    mesh, (m, d, K) in the simulation); ``down_residual`` the
+    aggregator-held downlink EF carry (replicated (d, K) -- identical
+    on every machine, since it is a pure function of replicated
+    values).  ``None`` on an uncompressed direction.
+    """
+
+    up_residual: Any = None
+    down_residual: Any = None
+
+
+class Transport:
+    """A :class:`CommPlan` resolved against one trace's (d, K, T).
+
+    Owns the per-round :class:`Link` pairs (fixed codecs, or the
+    :class:`BitBudget` schedule realized) and the per-direction
+    analytic bit totals the ``AxisPayloadBits`` contracts pin.
+    """
+
+    def __init__(self, comm: CommPlan, d: int, num_cols: int, rounds: int):
+        comm.validate()
+        self.comm = comm
+        self.d, self.num_cols, self.rounds = d, num_cols, rounds
+        if comm.schedule is not None:
+            self.links = comm.schedule.plan_rounds(d, num_cols, rounds)
+        else:
+            self.links = ((comm.uplink, comm.downlink),) * rounds
+        for up, down in self.links:
+            if up is not None:
+                up.validate(d)
+            if down is not None:
+                down.validate(d)
+        self.any_up = any(up is not None for up, _ in self.links)
+        self.any_down = any(down is not None for _, down in self.links)
+
+    @property
+    def staleness(self) -> int:
+        return self.comm.staleness
+
+    @property
+    def aggregation(self) -> Aggregation | None:
+        return self.comm.aggregation
+
+    def up(self, t: int) -> Link:
+        """Round t's uplink (1-indexed, like the round loop)."""
+        return Link(self.links[t - 1][0])
+
+    def down(self, t: int) -> Link:
+        """Round t's downlink (1-indexed)."""
+        return Link(self.links[t - 1][1])
+
+    def uplink_total_bits(self) -> int:
+        """Analytic per-machine uplink bits over all rounds."""
+        return sum(link_bits(up, self.d, self.num_cols)
+                   for up, _ in self.links)
+
+    def downlink_total_bits(self) -> int:
+        """Analytic downlink bits over all rounds (0 when dense: the
+        replicated dense broadcast never touches the wire)."""
+        return sum(link_bits(down, self.d, self.num_cols)
+                   for _, down in self.links if down is not None)
+
+
+# ---------------------------------------------------------------------------
+# The downlink wire
+# ---------------------------------------------------------------------------
+
+
+def psum_broadcast(payload, data_axes: Sequence[str]):
+    """Broadcast the master's payload leaves over the data axes.
+
+    Machine (0, ..., 0) on the data axes is the aggregator; every other
+    machine contributes exact zeros, so the ``psum`` reproduces the
+    master's leaf bit-for-bit (x + 0.0 == x for every float except
+    -0.0, which lands as the numerically-equal +0.0).  This is how the
+    downlink payload gets ON the traced wire: the aggregate is
+    replicated, so a free broadcast would be invisible to the
+    ``AxisPayloadBits`` accounting and unreachable by fault injection.
+    """
+    axes = tuple(data_axes)
+    is_master = functools.reduce(
+        jnp.logical_and,
+        [jax.lax.axis_index(ax) == 0 for ax in axes])
+
+    def send(leaf):
+        x = jnp.where(is_master, leaf, jnp.zeros_like(leaf))
+        for ax in axes:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    return jax.tree.map(send, payload)

@@ -1,1 +1,1 @@
-"""Launch layer: mesh construction, dry-run, training and serving drivers."""
+"""Launch layer: mesh construction, dry-run, and the serving driver."""

@@ -5,6 +5,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # --- everything below may import jax (device count is now locked) ---------
 import argparse  # noqa: E402
 import json  # noqa: E402
+import re  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
@@ -14,20 +15,80 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.core.dantzig import DantzigConfig  # noqa: E402
 from repro.core.distributed import distributed_slda_shardmap  # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
-from repro.launch.dryrun import (  # noqa: E402
-    HBM_BW, ICI_BW, PEAK_FLOPS, collective_bytes,
-)
 
-"""Dry-run of the PAPER'S OWN technique on the production mesh.
+"""Dry-run of the paper's technique on the production mesh.
 
 Lowers Algorithm 1 (the one-shot distributed sparse-LDA estimator) via
 shard_map on the 16x16 / 2x16x16 meshes with abstract inputs and
-extracts the same roofline terms as the architecture dry-run.  This is
-the baseline/optimized pair tracked in EXPERIMENTS.md SSPerf-A.
+extracts the roofline terms.  This is the baseline/optimized pair
+tracked in EXPERIMENTS.md SSPerf-A.
 
 Machines = data slices (16 per pod x pods); CLIME columns sharded over
 the 16-wide model axis.
 """
+
+# TPU v5e constants (target hardware; container runtime is CPU)
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective byte totals from a compiled (post-SPMD) HLO dump.
+
+    Sums the *result* shape bytes of every collective op in the
+    per-device module -- i.e. bytes landing on each chip's ICI.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        op = None
+        rhs_head = rhs.strip()
+        for c in _COLLECTIVES:
+            if rhs_head.startswith(c + "(") or rhs_head.split(" ", 2)[:2][-1:] == [c]:
+                op = c
+                break
+            # result shape precedes op name: "bf16[..] all-gather(...)"
+            m = re.match(r"[\w\[\],{}\s/#*()]*?\b" + re.escape(c) + r"\(", rhs_head)
+            if m:
+                op = c
+                break
+        if op is None:
+            continue
+        # shapes appear on the rhs before the op name
+        head = rhs_head.split(op + "(")[0]
+        nbytes = _shape_bytes(head) or _shape_bytes(lhs)
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
 
 
 def _compile_costs(d, n_machines, n1, multi_pod, iters, variant):

@@ -377,7 +377,9 @@ def test_compressed_trace_no_dense_psum_pinned_bits():
         {"rounds": t_rounds, "dense_psums": 0, "live_psums": 0,
          "total_psums": 0, "screen_ops": 2 * t_rounds,
          "data_gathers": 2 * t_rounds,
-         "data_uplink_bits": t_rounds * C.uplink_bits(comp, d, 1),
+         "data_gather_bits": t_rounds * C.uplink_bits(comp, d, 1),
+         "data_psum_bits": 0,
+         "data_total_bits": t_rounds * C.uplink_bits(comp, d, 1),
          "psum_payload": (d, 1), "pallas_calls": 0})
     assert violations == [], violations
 
@@ -395,6 +397,8 @@ def test_compressed_trace_rejects_dense_bit_budget():
         {"rounds": t_rounds, "dense_psums": 0, "live_psums": 0,
          "total_psums": 0, "screen_ops": 2 * t_rounds,
          "data_gathers": 2 * t_rounds,
-         "data_uplink_bits": t_rounds * C.dense_uplink_bits(d, 1),
+         "data_gather_bits": t_rounds * C.dense_uplink_bits(d, 1),
+         "data_psum_bits": 0,
+         "data_total_bits": t_rounds * C.dense_uplink_bits(d, 1),
          "psum_payload": (d, 1), "pallas_calls": 0})
     assert any("bits" in v.message for v in violations), violations

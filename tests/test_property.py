@@ -113,20 +113,6 @@ def test_aggregate_of_identical_is_fixed_point(xs, t):
     )
 
 
-@given(finite_f32((12,)), st.floats(0.05, 2.0))
-@settings(max_examples=25, deadline=None)
-def test_int8_quantize_roundtrip_bounded(x, scale_mag):
-    """Symmetric int8 quantization error is bounded by scale/2 per entry."""
-    from repro.models.attention import _quantize_token
-
-    x = jnp.asarray(x * scale_mag).reshape(1, 1, 12, 1)
-    q, s = _quantize_token(x, axis=2)
-    deq = q.astype(np.float32) * s
-    err = np.max(np.abs(np.asarray(deq - x)))
-    # half-step of the quantization grid (+ float slack)
-    assert err <= float(s.max()) * 0.5 + 1e-6
-
-
 @given(st.integers(2, 5), st.integers(20, 40))
 @settings(max_examples=10, deadline=None)
 def test_mc_stats_match_binary_stats(num_classes, d):

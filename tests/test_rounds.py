@@ -75,7 +75,10 @@ def test_rounds_trace_T_pmeans_and_one_eigh():
             {"rounds": t_rounds, "dense_psums": t_rounds,
              "live_psums": 0, "total_psums": t_rounds, "screen_ops": 0,
              "data_gathers": 0,
-             "data_uplink_bits":
+             "data_gather_bits": 0,
+             "data_psum_bits":
+                 t_rounds * compression_core.dense_uplink_bits(d, 1),
+             "data_total_bits":
                  t_rounds * compression_core.dense_uplink_bits(d, 1),
              "psum_payload": (d, 1), "pallas_calls": 0})
         assert violations == [], violations
@@ -107,9 +110,13 @@ def test_mc_rounds_trace_T_direction_pmeans_one_means_pmean():
             {"rounds": t_rounds, "dense_psums": t_rounds,
              "live_psums": 0, "screen_ops": 0,
              "data_gathers": 0,
-             "data_uplink_bits":
+             "data_gather_bits": 0,
+             "data_psum_bits":
                  t_rounds * compression_core.dense_uplink_bits(d, K)
                  + K * d * 32,  # + the one (K, d) f32 means psum
+             "data_total_bits":
+                 t_rounds * compression_core.dense_uplink_bits(d, K)
+                 + K * d * 32,
              "direction_payload": (d, K),
              "means_payload": (K, d), "total_psums": t_rounds + 1,
              "pallas_calls": 0})

@@ -1,0 +1,379 @@
+"""Two-way transport layer (core/transport.py, DESIGN.md §13).
+
+Pin families:
+
+* **CommPlan shims** -- ``CommPlan()`` is bit-exact against the legacy
+  kwargs AND the PR 5 golden; mixing ``comm=`` with a legacy kwarg is
+  a TypeError at every entry point.
+* **Downlink identity** -- a ``k_top=d`` f32 downlink is bit-exact
+  against the dense (no-downlink) broadcast, on the 1x1 mesh and the
+  8-device (2, 4) d=70 remainder mesh.
+* **Dual EF resume** -- a T-round two-way-compressed stream split at
+  any point replays bit-exactly from the returned
+  :class:`TransportState` carries.
+* **Downlink fault containment** -- a corrupted downlink payload
+  screens every receiver (master included) back to the last received
+  aggregate: no NaN escapes, the shared reference never forks.
+* **BitBudget planners** -- share laws, budget adherence, validation.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.core import rounds as rounds_core
+from repro.core import transport as transport_core
+from repro.core.compression import Compression, uplink_bits
+from repro.core.dantzig import DantzigConfig
+from repro.core.distributed import (
+    distributed_slda_shardmap,
+    simulated_distributed_slda,
+)
+from repro.core.faults import (
+    CORRUPT_NAN,
+    CORRUPT_NONE,
+    Aggregation,
+    FaultPlan,
+    FaultSchedule,
+)
+from repro.core.pipeline import BinaryHead
+from repro.core.transport import BitBudget, CommPlan, Transport, TransportState
+from repro.stats import synthetic
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "binary_prerefactor.npz")
+CFG = DantzigConfig(max_iters=200)
+
+
+def _problem(seed=0, d=24, m=4, n=60):
+    p = synthetic.make_problem(d=d, n_signal=5, rho=0.5)
+    xs, ys = synthetic.sample_machines(jax.random.PRNGKey(seed), p, m, n, n)
+    return xs, ys
+
+
+def _solves(xs, ys, cfg=CFG):
+    def one(x, y):
+        from repro.core import pipeline
+        return pipeline.worker_solves(
+            BinaryHead(), x, y, lam=0.2, lam_prime=0.2, cfg=cfg)
+    return jax.vmap(one)(xs, ys)
+
+
+# ---------------------------------------------------------------------------
+# CommPlan: the one static config, and its deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_commplan_default_matches_legacy_bitwise():
+    """comm=CommPlan() and the legacy no-kwargs call produce the SAME
+    bits at every rounds setting."""
+    xs, ys = _problem()
+    for t in (1, 3):
+        legacy = simulated_distributed_slda(
+            xs, ys, 0.2, 0.2, 0.05, CFG, rounds=t)
+        via_plan = simulated_distributed_slda(
+            xs, ys, 0.2, 0.2, 0.05, CFG, rounds=t, comm=CommPlan())
+        np.testing.assert_array_equal(np.asarray(legacy),
+                                      np.asarray(via_plan))
+
+
+def test_commplan_default_matches_pr5_golden():
+    """CommPlan() reproduces the pre-refactor golden exactly -- the
+    transport refactor left the dense path untouched."""
+    golden = np.load(GOLDEN)
+    cfg = DantzigConfig(max_iters=300)
+    p30 = synthetic.make_problem(d=30, n_signal=4)
+    xs, ys = synthetic.sample_machines(
+        jax.random.PRNGKey(11), p30, 3, 100, 100)
+    out = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, cfg, comm=CommPlan())
+    np.testing.assert_allclose(np.asarray(out), golden["sim_dist"],
+                               atol=1e-6)
+
+
+def test_commplan_uplink_matches_legacy_compression_kwarg():
+    xs, ys = _problem(seed=1)
+    comp = Compression(6, "int8")
+    legacy = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, CFG, rounds=3, compression=comp)
+    via_plan = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, CFG, rounds=3,
+        comm=CommPlan(uplink=comp))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(via_plan))
+
+
+def test_mixing_comm_and_legacy_kwargs_raises():
+    xs, ys = _problem()
+    ws = _solves(xs, ys)
+    with pytest.raises(TypeError, match="not both"):
+        rounds_core.simulate_round_loop(
+            ws, rounds=2, comm=CommPlan(), compression=Compression(5))
+    with pytest.raises(TypeError):
+        rounds_core.simulate_round_loop(
+            ws, rounds=2, comm=CommPlan(),
+            faults=FaultSchedule(dropout=0.2, seed=0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x, y = xs.reshape(-1, xs.shape[-1]), ys.reshape(-1, ys.shape[-1])
+    with pytest.raises(TypeError):
+        distributed_slda_shardmap(
+            mesh, x, y, 0.2, 0.2, 0.05, CFG, rounds=2,
+            comm=CommPlan(), aggregation=Aggregation())
+
+
+def test_commplan_schedule_exclusive_with_fixed_codecs():
+    with pytest.raises(ValueError, match="schedule"):
+        CommPlan(uplink=Compression(5),
+                 schedule=BitBudget(total_bits=1000)).validate()
+    with pytest.raises(ValueError, match="staleness"):
+        CommPlan(staleness=-1).validate()
+
+
+def test_worker_rounds_rejects_schedule_in_commplan():
+    """A FaultSchedule inside CommPlan must be materialized by the
+    faces; worker_rounds takes only this machine's FaultPlan row."""
+    xs, ys = _problem(m=1)
+    with pytest.raises(TypeError, match="materialize"):
+        rounds_core.worker_rounds(
+            BinaryHead(), xs[0], ys[0], lam=0.2, lam_prime=0.2,
+            rounds=2, cfg=CFG,
+            comm=CommPlan(faults=FaultSchedule(dropout=0.2, seed=0)))
+
+
+# ---------------------------------------------------------------------------
+# downlink identity: k_top = d f32 downlink == dense broadcast
+# ---------------------------------------------------------------------------
+
+
+def test_downlink_identity_codec_bitexact_vs_dense():
+    """k_top=d f32 downlink moves EVERY delta coordinate exactly: the
+    received aggregate equals the dense (no-downlink) one bit-for-bit,
+    so the downlink close is a pure wire-format change."""
+    xs, ys = _problem(seed=2)
+    d = xs.shape[-1]
+    dense = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, CFG, rounds=3)
+    down = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, CFG, rounds=3,
+        comm=CommPlan(downlink=Compression(d)))
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(down))
+
+
+def test_downlink_identity_mesh_8dev_remainder_bitexact():
+    """The same identity on the (2, 4) d=70 remainder mesh: the
+    master-masked psum broadcast reproduces the master's payload
+    bit-for-bit across real data-axis shards."""
+    out = run_in_subprocess(
+        """
+        import jax, numpy as np
+        from repro.core.compression import Compression
+        from repro.core.dantzig import DantzigConfig
+        from repro.core.distributed import distributed_slda_shardmap
+        from repro.core.transport import CommPlan
+        from repro.stats import synthetic
+
+        cfg = DantzigConfig(max_iters=300)
+        m, d = 2, 70
+        p = synthetic.make_problem(d=d, n_signal=6, rho=0.6)
+        xs, ys = synthetic.sample_machines(jax.random.PRNGKey(3), p, m, 100, 100)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        x, y = xs.reshape(-1, d), ys.reshape(-1, d)
+        dense = distributed_slda_shardmap(
+            mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=3)
+        down = distributed_slda_shardmap(
+            mesh, x, y, 0.2, 0.2, 0.05, cfg, rounds=3,
+            comm=CommPlan(downlink=Compression(d)))
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(down))
+        print("DOWNLINK_MESH8_OK")
+        """
+    )
+    assert "DOWNLINK_MESH8_OK" in out
+
+
+def test_mesh_matches_simulation_two_way_compressed():
+    """Mesh vs vmap parity with BOTH directions compressed and a
+    taper schedule -- the twin drivers share the one round body."""
+    out = run_in_subprocess(
+        """
+        import jax, numpy as np
+        from repro.core.dantzig import DantzigConfig
+        from repro.core.distributed import (
+            distributed_slda_shardmap, simulated_distributed_slda)
+        from repro.core.transport import BitBudget, CommPlan
+        from repro.stats import synthetic
+
+        cfg = DantzigConfig(max_iters=300)
+        m, d = 2, 40
+        p = synthetic.make_problem(d=d, n_signal=5, rho=0.5)
+        xs, ys = synthetic.sample_machines(jax.random.PRNGKey(4), p, m, 80, 80)
+        comm = CommPlan(schedule=BitBudget(total_bits=6000, mode="taper",
+                                           taper=0.5, quantize="int8"))
+        sim = simulated_distributed_slda(
+            xs, ys, 0.2, 0.2, 0.05, cfg, rounds=3, comm=comm)
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        out = distributed_slda_shardmap(
+            mesh, xs.reshape(-1, d), ys.reshape(-1, d), 0.2, 0.2, 0.05,
+            cfg, rounds=3, comm=comm)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(sim), atol=1e-5)
+        print("TWOWAY_PARITY_OK")
+        """,
+        devices=2,
+    )
+    assert "TWOWAY_PARITY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# dual EF resume: both wires' residuals replay deterministically
+# ---------------------------------------------------------------------------
+
+
+def test_transport_state_resume_bitexact():
+    """4 two-way-compressed rounds == 2 + 2 resumed from the returned
+    TransportState: both EF carries (uplink per-machine, downlink
+    aggregator) and the shared reference reconstruct the stream."""
+    xs, ys = _problem(seed=5)
+    ws = _solves(xs, ys)
+    comm = CommPlan(uplink=Compression(8, "int8"), downlink=Compression(6))
+    full = rounds_core.simulate_round_loop(ws, rounds=4, comm=comm)
+    first, state = rounds_core.simulate_round_loop(
+        ws, rounds=2, comm=comm, return_transport_state=True)
+    assert isinstance(state, TransportState)
+    assert state.up_residual is not None and state.down_residual is not None
+    resumed = rounds_core.simulate_round_loop(
+        ws, rounds=2, comm=comm, resume_from=first,
+        ef_residual=state.up_residual, down_residual=state.down_residual)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(resumed))
+
+
+def test_transport_state_none_on_dense_directions():
+    xs, ys = _problem(seed=6)
+    ws = _solves(xs, ys)
+    _, state = rounds_core.simulate_round_loop(
+        ws, rounds=2, comm=CommPlan(uplink=Compression(5)),
+        return_transport_state=True)
+    assert state.up_residual is not None and state.down_residual is None
+    _, state = rounds_core.simulate_round_loop(
+        ws, rounds=2, comm=CommPlan(downlink=Compression(5)),
+        return_transport_state=True)
+    assert state.up_residual is None and state.down_residual is not None
+
+
+# ---------------------------------------------------------------------------
+# downlink fault containment
+# ---------------------------------------------------------------------------
+
+
+def _plan_corrupt_master(m, rounds, bad_round):
+    """All machines live; the AGGREGATOR's wire is NaN at bad_round."""
+    live = jnp.ones((m, rounds), jnp.float32)
+    stale = jnp.zeros((m, rounds), jnp.int32)
+    corrupt = np.full((m, rounds), CORRUPT_NONE, np.int32)
+    corrupt[0, bad_round - 1] = CORRUPT_NAN
+    return FaultPlan(live, stale, jnp.asarray(corrupt))
+
+
+def test_corrupted_downlink_screens_to_last_good():
+    """A NaN downlink payload at round 2 of 3: every receiver falls
+    back to the round-1 aggregate (no NaN escapes), and the stream
+    resumes exactly ONE round delayed -- the rolled-back anchors
+    regenerate the lost step, so round 3 equals the clean stream's
+    round 2 bit-for-bit (identity codec, nothing else differs)."""
+    xs, ys = _problem(seed=7, d=20)
+    m = xs.shape[0]
+    ws = _solves(xs, ys)
+    comm = CommPlan(downlink=Compression(20),
+                    aggregation=Aggregation(envelope=1e6))
+    plan = _plan_corrupt_master(m, 3, bad_round=2)
+    bars = rounds_core.simulate_round_loop(
+        ws, rounds=3, comm=comm, faults=plan, return_all_rounds=True)
+    bars = np.asarray(bars)
+    assert np.isfinite(bars).all(), "downlink corruption leaked a NaN"
+    # the rejected round holds the previous received aggregate
+    np.testing.assert_array_equal(bars[1], bars[0])
+    clean = np.asarray(rounds_core.simulate_round_loop(
+        ws, rounds=3, comm=comm, return_all_rounds=True))
+    np.testing.assert_array_equal(bars[0], clean[0])
+    np.testing.assert_array_equal(bars[2], clean[1])
+
+
+def test_corrupted_downlink_int8_scale_screens():
+    """int8 downlink: corruption hits the f32 scales; the whole-block
+    screen still catches it."""
+    xs, ys = _problem(seed=8, d=16)
+    ws = _solves(xs, ys)
+    plan = _plan_corrupt_master(xs.shape[0], 2, bad_round=2)
+    bars = rounds_core.simulate_round_loop(
+        ws, rounds=2, comm=CommPlan(downlink=Compression(6, "int8")),
+        faults=plan, return_all_rounds=True)
+    bars = np.asarray(bars)
+    assert np.isfinite(bars).all()
+    np.testing.assert_array_equal(bars[1], bars[0])
+
+
+# ---------------------------------------------------------------------------
+# BitBudget planners
+# ---------------------------------------------------------------------------
+
+
+def test_bitbudget_shares_sum_to_one_and_taper_decays():
+    for mode, kw in (("constant", {}), ("taper", {"taper": 0.5}),
+                     ("adaptive", {"weights": (3.0, 2.0, 1.0)})):
+        b = BitBudget(total_bits=10_000, mode=mode, **kw)
+        shares = b.round_shares(3)
+        assert abs(sum(shares) - 1.0) < 1e-12
+        if mode != "constant":
+            assert shares[0] > shares[1] > shares[2]
+
+
+def test_bitbudget_realized_total_within_budget():
+    """The realized schedule fits the nominal budget whenever the
+    budget clears the per-round k=1 floors."""
+    d, K, T = 100, 1, 3
+    for total in (3_000, 10_000, 40_000):
+        b = BitBudget(total_bits=total, mode="taper", taper=0.5)
+        tr = Transport(CommPlan(schedule=b), d, K, T)
+        realized = tr.uplink_total_bits() + tr.downlink_total_bits()
+        floor = 2 * T * uplink_bits(Compression(1, "int8"), d, K)
+        cap = 2 * T * uplink_bits(Compression(d, "int8"), d, K)
+        assert realized <= max(total, floor)
+        assert realized <= cap  # the k <= d clamp holds
+
+
+def test_bitbudget_validation_errors():
+    with pytest.raises(ValueError, match="mode"):
+        BitBudget(total_bits=100, mode="warp").validate(2)
+    with pytest.raises(ValueError, match="weights"):
+        BitBudget(total_bits=100, mode="adaptive",
+                  weights=(1.0,)).validate(2)
+    with pytest.raises(ValueError, match="total_bits"):
+        BitBudget(total_bits=0).validate(2)
+    with pytest.raises(ValueError, match="down_fraction"):
+        BitBudget(total_bits=100, down_fraction=1.5).validate(2)
+
+
+def test_bitbudget_schedule_runs_and_changes_output():
+    xs, ys = _problem(seed=9, d=30)
+    dense = simulated_distributed_slda(xs, ys, 0.2, 0.2, 0.05, CFG,
+                                       rounds=3)
+    sched = simulated_distributed_slda(
+        xs, ys, 0.2, 0.2, 0.05, CFG, rounds=3,
+        comm=CommPlan(schedule=BitBudget(total_bits=2_000)))
+    assert np.isfinite(np.asarray(sched)).all()
+    assert sched.shape == dense.shape
+    # a tight budget genuinely compresses: outputs differ
+    assert float(jnp.max(jnp.abs(sched - dense))) > 0
+
+
+def test_transport_bit_accounting_matches_links():
+    comm = CommPlan(uplink=Compression(8, "int8"), downlink=Compression(4))
+    tr = Transport(comm, 50, 2, 3)
+    assert tr.uplink_total_bits() == 3 * uplink_bits(
+        Compression(8, "int8"), 50, 2)
+    assert tr.downlink_total_bits() == 3 * uplink_bits(
+        Compression(4), 50, 2)
+    dense = Transport(CommPlan(), 50, 2, 3)
+    assert dense.downlink_total_bits() == 0  # never on the wire
